@@ -1,0 +1,33 @@
+"""Table 2 reproduction: federation round time (secs) for the 10M-param model
+across federation sizes, MetisFL-arm vs naive-arm.
+
+Paper Table 2 (10M params): MetisFL 4.58/6.10/14.13/21.28/45.61 s for
+10/25/50/100/200 learners vs e.g. IBM FL 175->1915 s.  Our two arms
+reproduce the *shape* of that comparison on this host; EXPERIMENTS.md
+compares the scaling exponents.
+"""
+
+from __future__ import annotations
+
+from benchmarks.bench_ops import _metis_round, _naive_round
+
+
+def run(learner_counts=(10, 25, 50), size="10m", include_naive=True):
+    rows = []
+    for n in learner_counts:
+        m = _metis_round(size, n)
+        rows.append({"bench": "round", "size": size, "learners": n,
+                     "arm": "metis", "federation_round_s": m["federation_round_s"]})
+        print(f"round,metis,{size},{n},{m['federation_round_s']:.3f}s", flush=True)
+        if include_naive:
+            nv = _naive_round(size, n)
+            rows.append({"bench": "round", "size": size, "learners": n,
+                         "arm": "naive",
+                         "federation_round_s": nv["federation_round_s"]})
+            print(f"round,naive,{size},{n},{nv['federation_round_s']:.3f}s",
+                  flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

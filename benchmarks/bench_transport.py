@@ -1,0 +1,68 @@
+"""Transport / serialization benchmark (the dispatch-time share of
+Figs. 5a/5d...): per-tensor pickle (naive) vs flat-byte packing (paper's
+proto-tensor) vs flat packing + int8 Pallas codec (beyond paper).
+
+Reports bytes-on-wire and serialize+deserialize wall time per model size.
+"""
+
+from __future__ import annotations
+
+import pickle
+
+import jax
+import numpy as np
+
+from benchmarks.timing import bench
+from repro.configs import housing_mlp
+from repro.core import naive, packing
+from repro.kernels.ops import QuantCodec
+from repro.models import mlp as mlp_model
+
+
+def run(sizes=("100k", "1m", "10m")):
+    rows = []
+    for size in sizes:
+        cfg = housing_mlp.config(size)
+        params = mlp_model.init_params(jax.random.key(0), cfg)
+        treedef = jax.tree_util.tree_structure(params)
+
+        def naive_rt():
+            blobs = naive.naive_serialize(params)
+            naive.naive_deserialize(blobs, treedef)
+            return sum(len(b) for b in blobs)
+
+        def packed_rt():
+            buf, m = packing.pack_bytes(params)
+            packing.unpack_bytes(buf, m)
+            return buf.nbytes
+
+        codec = QuantCodec()
+
+        def quant_rt():
+            enc = codec.encode(params)
+            buf, m = packing.pack_bytes(enc)
+            codec.decode(packing.unpack_bytes(buf, m))
+            return buf.nbytes
+
+        t_naive = bench(naive_rt, warmup=1, iters=3, block=False)
+        t_packed = bench(packed_rt, warmup=1, iters=3, block=False)
+        t_quant = bench(quant_rt, warmup=1, iters=2, block=False)
+        b_naive, b_packed, b_quant = naive_rt(), packed_rt(), quant_rt()
+        rows.append({
+            "bench": "transport", "size": size,
+            "naive_s": t_naive, "packed_s": t_packed, "quant_s": t_quant,
+            "naive_bytes": b_naive, "packed_bytes": b_packed,
+            "quant_bytes": b_quant,
+        })
+        print(
+            f"transport,{size},naive={t_naive*1e3:.2f}ms/{b_naive/1e6:.1f}MB,"
+            f"packed={t_packed*1e3:.2f}ms/{b_packed/1e6:.1f}MB,"
+            f"int8={t_quant*1e3:.2f}ms/{b_quant/1e6:.1f}MB,"
+            f"wire_saving={b_naive/b_quant:.1f}x",
+            flush=True,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the
+experiments/dryrun*/*.jsonl records produced by launch/dryrun.py."""
+
+from __future__ import annotations
+
+import json
+import os
+
+HW_NOTE = "197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI, 16 GiB HBM per chip"
+
+_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r  # last write wins
+    return list(recs.values())
+
+
+def fmt_table(recs: list[dict]) -> str:
+    head = (
+        "| arch | shape | kind | peak GiB/chip | compute ms | memory ms | "
+        "collective ms | dominant | useful-FLOPs |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in sorted(recs, key=lambda r: (r["arch"], _ORDER.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                f"skip (full-attn @500k) | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        ratio = r.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.2f}" if ratio is not None else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['peak_bytes_per_chip']/2**30:.2f} | "
+            f"{max(r['compute_s'],0)*1e3:.2f} | "
+            f"{max(r['memory_s'],0)*1e3:.2f} | "
+            f"{max(r['collective_s'],0)*1e3:.2f} | "
+            f"{r['dominant'].replace('_s','')} | {ratio_s} |"
+        )
+    return head + "\n".join(lines) + "\n"
+
+
+def fmt_agg_table(recs: list[dict]) -> str:
+    head = (
+        "| workload | P (params) | memory ms | collective ms | collectives | "
+        "bytes-efficiency |\n|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        ncoll = sum(r.get("collective_counts_full_hlo", {}).values())
+        eff = r.get("model_bytes_per_chip", 0) / max(r.get("bytes_per_chip", 1), 1)
+        lines.append(
+            f"| {r['arch']}{' (hier.)' if r.get('hierarchical') else ''} | "
+            f"{r['n_params']/1e9:.1f}B | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.3f} | {ncoll} | {eff:.2f} |"
+        )
+    return head + "\n".join(lines) + "\n"
+
+
+def summarize(
+    sections=(
+        ("Baseline 16×16 (pre-§Perf substrate; old collective parser)",
+         "experiments/dryrun/16x16.jsonl"),
+        ("Baseline 2×16×16 multi-pod (old collective parser)",
+         "experiments/dryrun/2x16x16.jsonl"),
+        ("Optimized 16×16 (post-§Perf cycles 1-7; fixed parser)",
+         "experiments/dryrun_opt/16x16.jsonl"),
+        ("Optimized 2×16×16 multi-pod (fixed parser)",
+         "experiments/dryrun_opt/2x16x16.jsonl"),
+    ),
+) -> str:
+    out = []
+    for title, path in sections:
+        recs = load(path)
+        if not recs:
+            continue
+        ok = sum(1 for r in recs if r["status"] == "ok")
+        sk = sum(1 for r in recs if r["status"] == "skipped")
+        er = len(recs) - ok - sk
+        out.append(f"### {title}  ({ok} ok / {sk} skipped / {er} error)\n")
+        out.append(fmt_table(recs))
+    for title, path in (
+        ("Controller aggregation, paper-faithful (N=8, 16×16)",
+         "experiments/dryrun/agg_16x16.jsonl"),
+        ("Controller aggregation, hierarchical pod-axis (2×16×16)",
+         "experiments/dryrun/agg_2x16x16.jsonl"),
+    ):
+        recs = load(path)
+        if recs:
+            out.append(f"### {title}\n")
+            out.append(fmt_agg_table(recs))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(f"Hardware: {HW_NOTE}\n")
+    print(summarize())

@@ -1,0 +1,28 @@
+"""Timing helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["bench", "BenchResult"]
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+          block: bool = True) -> float:
+    """Median wall-clock seconds per call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        if block:
+            jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if block:
+            jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,68 @@
+"""Quickstart: a 4-learner federated workflow in ~40 lines.
+
+Reproduces the paper's workflow (Fig. 1) end to end on the host: the driver
+initializes the controller with the model state, learners register, and
+synchronous FedAvg rounds run with per-operation timing — the measurements
+of Figs. 5-7.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Driver, FederationEnv, Learner, TerminationCriteria
+from repro.optim import sgd
+
+# --- a private dataset per learner (linear regression silos) ---------------
+rng = np.random.default_rng(0)
+W_TRUE = rng.normal(size=(8, 1)).astype(np.float32)
+
+
+def make_learner(i: int) -> Learner:
+    X = rng.normal(size=(256, 8)).astype(np.float32)
+    y = X @ W_TRUE + 0.01 * rng.normal(size=(256, 1)).astype(np.float32)
+
+    def loss_fn(params, batch):
+        xb, yb = batch
+        return jnp.mean((xb @ params["w"] + params["b"] - yb) ** 2)
+
+    def data_fn(batch_size):
+        idx = rng.integers(0, 256, size=batch_size)
+        return X[idx], y[idx]
+
+    return Learner(
+        learner_id=f"hospital_{i}",
+        loss_fn=loss_fn,
+        eval_fn=lambda p, b: {"eval_loss": loss_fn(p, b)},
+        data_fn=data_fn,
+        eval_data_fn=lambda: (X, y),
+        optimizer=sgd(0.1),
+        num_examples=256,
+    )
+
+
+def main():
+    env = FederationEnv(
+        protocol="sync", local_steps=10, batch_size=64,
+        server_optimizer="fedavg",
+        termination=TerminationCriteria(max_rounds=5),
+    )
+    driver = Driver(env)
+    driver.initialize(
+        initial_params={"w": jnp.zeros((8, 1)), "b": jnp.zeros((1,))},
+        learners=[make_learner(i) for i in range(4)],
+    )
+    history = driver.run()
+
+    print("round | federation_s | aggregation_s | eval_loss")
+    for h in history:
+        print(f"{h.round_id:>5} | {h.federation_round_s:>11.3f} | "
+              f"{h.aggregation_s:>12.4f} | {h.metrics['eval_loss']:.6f}")
+    assert history[-1].metrics["eval_loss"] < 1e-2
+    print("converged ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Secure aggregation + asynchronous protocol + int8 transport — the three
+controller features the paper's Table 1 highlights as MetisFL differentiators,
+composed in one workflow.
+
+Phase 1: synchronous rounds with MASKED SECURE AGGREGATION — the controller
+only ever sums fixed-point-masked uploads (pairwise pads cancel exactly).
+Phase 2: ASYNCHRONOUS federation — the controller aggregates on every
+arrival with staleness-discounted weights; no round barrier.
+Both phases ship models through the int8 Pallas transport codec.
+
+    PYTHONPATH=src python examples/secure_async_fl.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AsyncProtocol, Controller, Driver, FederationEnv, SyncProtocol,
+    TerminationCriteria,
+)
+from repro.kernels.ops import QuantCodec
+from repro.launch.train import build_housing_learners
+from repro.models import mlp as mlp_model
+
+
+def main():
+    cfg, learners = build_housing_learners("100k", n_learners=4, seed=0)
+    initial = mlp_model.init_params(jax.random.key(0), cfg)
+
+    # ---- phase 1: secure synchronous rounds --------------------------------
+    env = FederationEnv(
+        protocol="sync", local_steps=6, batch_size=50, learning_rate=0.01,
+        secure_aggregation=True,
+        termination=TerminationCriteria(max_rounds=3),
+    )
+    driver = Driver(env)
+    driver.controller.channel.codec = QuantCodec()
+    driver.initialize(initial, learners)
+    hist = driver.run()
+    print("secure sync phase:")
+    for h in hist:
+        print(f"  round {h.round_id}: eval_loss={h.metrics['eval_loss']:.5f} "
+              f"agg={h.aggregation_s:.4f}s")
+    secure_params = driver.controller.global_params
+    stats = driver.controller.channel.stats
+    print(f"  wire: {stats.bytes_moved/1e6:.1f} MB over {stats.messages} msgs "
+          f"(int8 codec)")
+
+    # ---- phase 2: asynchronous continuation (a NEW task: fresh silos with a
+    # different ground truth, warm-started from the secure phase's model) ----
+    cfg2, learners2 = build_housing_learners("100k", n_learners=4, seed=1)
+    ctrl = Controller(
+        protocol=AsyncProtocol(local_steps=8, batch_size=50, learning_rate=0.01,
+                               staleness_alpha=0.5),
+    )
+    ctrl.set_initial_model(secure_params)
+    start = float(mlp_model.mse_loss(secure_params, learners2[0]._eval_data_fn()))
+    for l in learners2:
+        ctrl.register_learner(l)
+    updates = ctrl.run_async(total_updates=20)
+    ctrl.shutdown()
+    print(f"async phase: {len(updates)} community updates, "
+          f"mean agg {np.mean([u.aggregation_s for u in updates])*1e3:.2f} ms")
+
+    final = float(mlp_model.mse_loss(ctrl.global_params,
+                                     learners2[0]._eval_data_fn()))
+    print(f"async adaptation: eval loss {start:.4f} -> {final:.4f}")
+    assert final < start, "async federation must adapt to the new task"
+    print("secure→async federation complete ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serving example: batched decode across three architecture families —
+sliding-window dense (gemma3), attention-free SSM (mamba2), and MLA MoE
+(deepseek) — through the same ``make_serve_step`` the production dry-run
+lowers on the 16x16 mesh.
+
+    PYTHONPATH=src python examples/serve_multiarch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.launch.steps import make_serve_step
+from repro.models import kvcache, transformer
+
+
+def serve(arch: str, batch=4, gen=24):
+    cfg = get_reduced(arch)
+    params = transformer.init_params(jax.random.key(0), cfg)
+    step = jax.jit(make_serve_step(cfg))
+    caches = kvcache.init_cache(cfg, batch, 64)
+    tok = jnp.full((batch, 1), 1, jnp.int32)
+    # warmup/compile
+    _, _ = step(params, caches, tok, jnp.asarray(0, jnp.int32), None)
+
+    caches = kvcache.init_cache(cfg, batch, 64)
+    out = []
+    t0 = time.time()
+    for t in range(gen):
+        tok, caches = step(params, caches, tok, jnp.asarray(t, jnp.int32), None)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out, axis=1)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.padded_vocab_size)))
+    print(f"{arch:16s} {batch * gen / dt:8.1f} tok/s (batch={batch})  "
+          f"sample: {toks[0, :8].tolist()}")
+
+
+def main():
+    for arch in ("gemma3-4b", "mamba2-780m", "deepseek-v3-671b"):
+        serve(arch)
+    print("multi-family serving ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Federation checkpointing: packed model + controller state → .npz.
+
+The checkpoint IS the wire format: the packed numeric buffer plus the
+manifest (names/shapes/dtypes/offsets) — the same representation the
+controller aggregates and ships.  Server-optimizer state and round counters
+ride along so an interrupted federation resumes exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import packing
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_FNAME = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    params: Any,
+    extra_arrays: dict[str, np.ndarray] | None = None,
+    metadata: dict | None = None,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    buf = np.asarray(jax.device_get(packing.pack_numeric(params)))
+    manifest = packing.build_manifest(params)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    payload = {"buffer": buf}
+    for k, v in (extra_arrays or {}).items():
+        payload[f"extra__{k}"] = np.asarray(jax.device_get(v))
+    np.savez(
+        path,
+        manifest=np.frombuffer(pickle.dumps(manifest), dtype=np.uint8),
+        meta=np.frombuffer(
+            json.dumps({"step": step, **(metadata or {})}).encode(), dtype=np.uint8
+        ),
+        **payload,
+    )
+    return path
+
+
+def restore_checkpoint(directory: str, step: int | None = None):
+    """Returns (params, extra_arrays, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as z:
+        manifest = pickle.loads(z["manifest"].tobytes())
+        meta = json.loads(z["meta"].tobytes().decode())
+        params = packing.unpack_numeric(z["buffer"], manifest)
+        extras = {
+            k[len("extra__"):]: z[k] for k in z.files if k.startswith("extra__")
+        }
+    return params, extras, meta
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := _FNAME.match(f))
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,52 @@
+"""Federation controller substrate — the paper's contribution.
+
+Public API re-exports for the common path:
+
+    from repro.core import (
+        pack_numeric, unpack_numeric, build_manifest,
+        fedavg, Controller, Learner, Driver, FederationEnv,
+    )
+"""
+
+from repro.core.packing import (
+    Manifest,
+    TensorSpec,
+    build_manifest,
+    num_params,
+    pack_bytes,
+    pack_numeric,
+    unpack_bytes,
+    unpack_numeric,
+)
+from repro.core.aggregation import (
+    coordinate_median,
+    fedavg,
+    fedavg_sharded,
+    hierarchical_fedavg,
+    staleness_weights,
+    trimmed_mean,
+    weighted_average,
+)
+from repro.core.store import ModelRecord, ModelStore
+from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
+from repro.core.selection import SelectionPolicy, select_learners
+from repro.core.server_opt import ServerOptimizer, make_server_optimizer
+from repro.core.learner import EvalReport, Learner, LocalUpdate
+from repro.core.controller import Controller, RoundTimings
+from repro.core.driver import Driver, FederationEnv, TerminationCriteria
+from repro.core.transport import Channel, ChannelStats, Envelope
+
+__all__ = [
+    "Manifest", "TensorSpec", "build_manifest", "num_params",
+    "pack_bytes", "pack_numeric", "unpack_bytes", "unpack_numeric",
+    "fedavg", "weighted_average", "coordinate_median", "trimmed_mean",
+    "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
+    "ModelRecord", "ModelStore",
+    "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",
+    "SelectionPolicy", "select_learners",
+    "ServerOptimizer", "make_server_optimizer",
+    "Learner", "LocalUpdate", "EvalReport",
+    "Controller", "RoundTimings",
+    "Driver", "FederationEnv", "TerminationCriteria",
+    "Channel", "ChannelStats", "Envelope",
+]

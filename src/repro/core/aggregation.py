@@ -1,0 +1,155 @@
+"""Parallelized model aggregation — the paper's core contribution, TPU-native.
+
+MetisFL aggregates a federated model of ``k`` tensors from ``N`` learners with
+one OpenMP thread per tensor (paper Fig. 4).  The TPU-native restatement packs
+the model into one flat buffer (``core/packing.py``) and performs the whole
+aggregation as a single fused weighted reduction over an ``(N, P)`` stack:
+
+* elementwise over ``P`` → embarrassingly parallel across VPU lanes and, under
+  ``pjit``/``shard_map``, across every chip of the mesh (each chip reduces its
+  1/``mesh_size`` slice of all ``N`` buffers with **zero collectives**);
+* the reduction over ``N`` is tiny (N ≤ a few hundred) and lives in registers.
+
+Three execution paths, benchmarked against each other in
+``benchmarks/bench_agg.py``:
+
+1. :func:`fedavg` — fused XLA reduction (the production path);
+2. ``kernels/fedavg.py`` — the Pallas TPU kernel (explicit VMEM tiling);
+3. ``core/naive.py`` — the per-tensor Python-loop baseline (the paper's
+   "no parallelization" / old-Python-controller comparison point).
+
+Beyond FedAvg the module provides the robust rules a production controller
+ships (coordinate median, trimmed mean) and staleness weighting for the
+asynchronous protocol.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "fedavg",
+    "weighted_average",
+    "coordinate_median",
+    "trimmed_mean",
+    "staleness_weights",
+    "fedavg_sharded",
+    "hierarchical_fedavg",
+]
+
+
+def _normalize(weights: jax.Array) -> jax.Array:
+    weights = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(weights)
+    # Guard the empty/zero-weight federation: fall back to uniform.
+    safe = jnp.where(total > 0, total, 1.0)
+    n = weights.shape[0]
+    return jnp.where(total > 0, weights / safe, jnp.full((n,), 1.0 / max(n, 1)))
+
+
+@jax.jit
+def weighted_average(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """``(N, P) × (N,) -> (P,)`` normalized weighted mean.
+
+    This single einsum is the entire FedAvg aggregation for an arbitrarily
+    deep model: tensor boundaries were erased by packing, so XLA sees one
+    perfectly regular reduction it can tile across all cores/chips.
+    """
+    w = _normalize(weights)
+    return jnp.einsum("n,np->p", w, stack.astype(jnp.float32))
+
+
+# FedAvg is a weighted average with example counts as weights.
+fedavg = weighted_average
+
+
+@jax.jit
+def coordinate_median(stack: jax.Array) -> jax.Array:
+    """Coordinate-wise median — a byzantine-robust aggregation rule."""
+    return jnp.median(stack.astype(jnp.float32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("trim_k",))
+def trimmed_mean(stack: jax.Array, trim_k: int) -> jax.Array:
+    """Coordinate-wise trimmed mean dropping the ``trim_k`` extremes per side."""
+    n = stack.shape[0]
+    if 2 * trim_k >= n:
+        raise ValueError(f"trim_k={trim_k} too large for N={n}")
+    s = jnp.sort(stack.astype(jnp.float32), axis=0)
+    return jnp.mean(s[trim_k : n - trim_k], axis=0)
+
+
+def staleness_weights(
+    num_examples: jax.Array, staleness: jax.Array, alpha: float = 0.5
+) -> jax.Array:
+    """Asynchronous-protocol weights: FedAvg weights damped by staleness.
+
+    ``w_i ∝ n_i * (1 + s_i)^(-alpha)`` — the polynomial staleness discount used
+    by async FL controllers; ``s_i`` is how many global updates happened since
+    learner *i* pulled the model it trained from.
+    """
+    n = jnp.asarray(num_examples, jnp.float32)
+    s = jnp.asarray(staleness, jnp.float32)
+    return n * (1.0 + s) ** (-alpha)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded aggregation
+# ---------------------------------------------------------------------------
+
+
+def fedavg_sharded(mesh: Mesh, stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """Paper-faithful aggregation on a device mesh.
+
+    The ``(N, P)`` stack is sharded over *all* mesh axes along ``P`` (the
+    flattened-parameter dimension) and replicated along ``N``.  Every chip
+    reduces its own parameter slice — one worker per shard, the generalization
+    of MetisFL's one-thread-per-tensor.  The compiled HLO contains **no
+    collectives**; this is verified by ``tests/test_aggregation.py`` and the
+    dry-run roofline.
+    """
+    axes = tuple(mesh.axis_names)
+    in_spec = NamedSharding(mesh, P(None, axes))
+    out_spec = NamedSharding(mesh, P(axes))
+    fn = jax.jit(weighted_average, in_shardings=(in_spec, NamedSharding(mesh, P())),
+                 out_shardings=out_spec)
+    return fn(stack, weights)
+
+
+def hierarchical_fedavg(mesh: Mesh, pod_axis: str = "pod"):
+    """Beyond-paper: in-network aggregation over the ``pod`` mesh axis.
+
+    Each pod *is* a learner silo: the global stack has shape
+    ``(n_pods, P)`` with learner ``i``'s buffer living entirely on pod ``i``,
+    sharded over the in-pod (``data``,``model``) axes.  The federation average
+    is then a single ``psum`` over ``pod`` — in-network aggregation whose
+    bandwidth scales with ICI links instead of a single controller-host NIC.
+
+    Returns a jit-able function ``(stack (n_pods,P), weights (n_pods,)) ->
+    (P,)`` built on ``shard_map`` over the full mesh.
+    """
+
+    other_axes = tuple(a for a in mesh.axis_names if a != pod_axis)
+
+    def agg(local_buffer: jax.Array, local_weight: jax.Array) -> jax.Array:
+        # local_buffer: (1, P / prod(other_axes)) — this pod's slice of its
+        # own learner's buffer.  local_weight: (1,).
+        wsum = jax.lax.psum(jnp.sum(local_weight), pod_axis)
+        contrib = local_buffer[0].astype(jnp.float32) * local_weight[0]
+        agg = jax.lax.psum(contrib, pod_axis) / jnp.maximum(wsum, 1e-12)
+        return agg
+
+    from jax import shard_map
+
+    return shard_map(
+        agg,
+        mesh=mesh,
+        in_specs=(P(pod_axis, other_axes), P(pod_axis)),
+        out_specs=P(other_axes),
+        check_vma=False,
+    )

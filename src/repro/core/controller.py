@@ -1,0 +1,353 @@
+"""The Federation Controller — first-class citizen of the system.
+
+Implements the full controller lifecycle of paper Figs. 1/9/10 with the
+re-engineered operations of §3:
+
+* **async train dispatch** — RunTask is fire-and-forget through a thread-pool
+  executor; the learner's completion callback (MarkTaskCompleted) inserts the
+  local model into the :class:`ModelStore`.  The controller never blocks on a
+  single learner while dispatching.
+* **sync eval dispatch** — EvaluateModel keeps the call open (paper Fig. 10).
+* **packed aggregation** — local models are packed once at upload
+  (``pack_numeric``) and aggregated as a fused ``(N, P)`` reduction
+  (``core/aggregation``), optionally through the Pallas kernel or secure path.
+* **per-op timing** — the controller measures exactly the six operations the
+  paper's stress test reports: train dispatch, train round, aggregation,
+  eval dispatch, eval round, federation round.
+
+Protocols: synchronous, semi-synchronous, asynchronous (``core/scheduler``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, packing
+from repro.core.learner import EvalReport, Learner, LocalUpdate
+from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
+from repro.core.selection import SelectionPolicy, select_learners
+from repro.core.server_opt import ServerOptimizer, make_server_optimizer
+from repro.core.store import ModelRecord, ModelStore
+from repro.core.transport import Channel
+
+__all__ = ["RoundTimings", "Controller"]
+
+
+@dataclasses.dataclass
+class RoundTimings:
+    """The six per-operation wall-clock measurements of the paper's Figs 5-7."""
+
+    round_id: int = -1
+    train_dispatch_s: float = 0.0
+    train_round_s: float = 0.0
+    aggregation_s: float = 0.0
+    eval_dispatch_s: float = 0.0
+    eval_round_s: float = 0.0
+    federation_round_s: float = 0.0
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def as_row(self) -> dict:
+        return {
+            "round": self.round_id,
+            "train_dispatch_s": self.train_dispatch_s,
+            "train_round_s": self.train_round_s,
+            "aggregation_s": self.aggregation_s,
+            "eval_dispatch_s": self.eval_dispatch_s,
+            "eval_round_s": self.eval_round_s,
+            "federation_round_s": self.federation_round_s,
+        }
+
+
+AggregateFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+class Controller:
+    """The federation controller.
+
+    Parameters
+    ----------
+    protocol:
+        Sync/SemiSync/Async protocol object (``core/scheduler``).
+    aggregate_fn:
+        ``(stack (N,P), weights (N,)) -> (P,)``.  Defaults to the fused
+        FedAvg; swap in the Pallas kernel op or a robust rule.
+    secure:
+        If True, uploads are mask-encoded and the controller only sums
+        (``core/secure``) — it never sees an individual model.
+    """
+
+    def __init__(
+        self,
+        protocol: SyncProtocol | SemiSyncProtocol | AsyncProtocol | None = None,
+        selection: SelectionPolicy | None = None,
+        aggregate_fn: AggregateFn | None = None,
+        server_optimizer: ServerOptimizer | None = None,
+        store: ModelStore | None = None,
+        channel: Channel | None = None,
+        secure: bool = False,
+        max_dispatch_workers: int = 32,
+        secure_seed: int = 0,
+    ):
+        self.protocol = protocol or SyncProtocol()
+        self.selection = selection or SelectionPolicy()
+        self.aggregate_fn = aggregate_fn or aggregation.fedavg
+        self.server_opt = server_optimizer or make_server_optimizer("fedavg")
+        self.store = store or ModelStore()
+        self.channel = channel or Channel()
+        self.secure = secure
+        self.secure_seed = secure_seed
+
+        self._learners: dict[str, Learner] = {}
+        self._learner_profiles: dict[str, dict] = {}
+        self._executor = ThreadPoolExecutor(max_workers=max_dispatch_workers)
+        self._store_lock = threading.Lock()
+
+        self.global_params: Any = None
+        self.global_buffer: jax.Array | None = None
+        self.manifest: packing.Manifest | None = None
+        self._server_state = None
+        self.round_id = 0
+        self.history: list[RoundTimings] = []
+        # async protocol state
+        self._model_version = 0
+        self._learner_versions: dict[str, int] = {}
+
+    # ------------------------------------------------------------------ init
+    def set_initial_model(self, params: Any) -> None:
+        """Driver ships initial model tensors to the controller (Fig. 8)."""
+        self.global_params = params
+        self.manifest = packing.build_manifest(params)
+        self.global_buffer = packing.pack_numeric(params)
+        self._server_state = self.server_opt.init(self.global_buffer)
+
+    def register_learner(self, learner: Learner) -> None:
+        self._learners[learner.learner_id] = learner
+        self._learner_profiles[learner.learner_id] = {}
+        self._learner_versions[learner.learner_id] = 0
+
+    @property
+    def learner_ids(self) -> list[str]:
+        return list(self._learners)
+
+    # -------------------------------------------------------------- dispatch
+    def _dispatch_train(self, selected: Sequence[str]) -> tuple[list[Future], float]:
+        """Asynchronous RunTask dispatch: serialize model once per learner,
+        submit, collect Acks.  Returns completion futures + dispatch time."""
+        t0 = time.perf_counter()
+        futures = []
+        for lid in selected:
+            task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
+            envelope = self.channel.send(self.global_params, {"task": task})
+
+            def run(lid=lid, task=task, envelope=envelope) -> LocalUpdate:
+                learner = self._learners[lid]
+                params = self.channel.recv(envelope)
+                update = learner.fit(params, task)
+                self._mark_task_completed(update)
+                return update
+
+            futures.append(self._executor.submit(run))
+        dispatch_s = time.perf_counter() - t0
+        return futures, dispatch_s
+
+    def _mark_task_completed(self, update: LocalUpdate) -> None:
+        """MarkTaskCompleted: pack + (secure-encode) + insert into the store."""
+        buffer = packing.pack_numeric(update.params)
+        with self._store_lock:
+            self.store.insert(
+                ModelRecord(
+                    learner_id=update.learner_id,
+                    round_id=update.round_id,
+                    buffer=buffer,
+                    num_examples=update.num_examples,
+                    metadata={
+                        **update.metrics,
+                        "seconds_per_step": update.seconds_per_step,
+                        "model_version": self._learner_versions.get(update.learner_id, 0),
+                    },
+                )
+            )
+            prof = self._learner_profiles[update.learner_id]
+            prof["seconds_per_step"] = update.seconds_per_step
+
+    # ------------------------------------------------------------- aggregate
+    def _aggregate(self, selected: Sequence[str]) -> tuple[jax.Array, float]:
+        """Select + aggregate stored local models (paper T4-T7)."""
+        t0 = time.perf_counter()
+        with self._store_lock:
+            records = self.store.select_latest(list(selected))
+        if not records:
+            raise RuntimeError("no local models available to aggregate")
+
+        if self.secure:
+            from repro.core import secure as secure_mod
+
+            buffers = [r.buffer for r in records]
+            weights = [float(r.num_examples) for r in records]
+            new_buffer = secure_mod.secure_fedavg(
+                buffers, weights, base_seed=self.secure_seed + self.round_id
+            )
+        else:
+            stack = jnp.stack([r.buffer for r in records], axis=0)
+            weights = jnp.asarray([float(r.num_examples) for r in records], jnp.float32)
+            new_buffer = self.aggregate_fn(stack, weights)
+
+        # server-side optimization on the packed buffer
+        self._server_state, new_buffer = self.server_opt.apply(
+            self._server_state, self.global_buffer, new_buffer
+        )
+        new_buffer = jax.block_until_ready(new_buffer)
+        agg_s = time.perf_counter() - t0
+
+        self.global_buffer = new_buffer
+        self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
+        self._model_version += 1
+        return new_buffer, agg_s
+
+    # ------------------------------------------------------------ eval round
+    def _evaluate(self, selected: Sequence[str]) -> tuple[list[EvalReport], float, float]:
+        """Synchronous EvaluateModel fan-out (paper Fig. 10, T7-T9)."""
+        t0 = time.perf_counter()
+        futures = []
+        for lid in selected:
+            envelope = self.channel.send(self.global_params, {"eval": True})
+
+            def run(lid=lid, envelope=envelope) -> EvalReport:
+                params = self.channel.recv(envelope)
+                return self._learners[lid].evaluate(params, self.round_id)
+
+            futures.append(self._executor.submit(run))
+        dispatch_s = time.perf_counter() - t0
+        reports = [f.result() for f in futures]
+        round_s = time.perf_counter() - t0
+        return reports, dispatch_s, round_s
+
+    # -------------------------------------------------------- round drivers
+    def run_round(self) -> RoundTimings:
+        """One synchronous/semi-synchronous federation round (paper T1-T9)."""
+        if self.global_params is None:
+            raise RuntimeError("set_initial_model() before running rounds")
+        timings = RoundTimings(round_id=self.round_id)
+        t_round = time.perf_counter()
+
+        selected = select_learners(
+            self.selection,
+            self.learner_ids,
+            self.round_id,
+            {lid: l.num_examples for lid, l in self._learners.items()},
+        )
+        for lid in selected:
+            self._learner_versions[lid] = self._model_version
+
+        # training round: async dispatch, barrier on completion callbacks
+        t_train = time.perf_counter()
+        futures, timings.train_dispatch_s = self._dispatch_train(selected)
+        wait(futures)
+        for f in futures:
+            f.result()  # surface learner exceptions
+        timings.train_round_s = time.perf_counter() - t_train
+
+        # aggregation
+        _, timings.aggregation_s = self._aggregate(selected)
+
+        # evaluation round
+        reports, timings.eval_dispatch_s, timings.eval_round_s = self._evaluate(selected)
+        timings.metrics = self._reduce_eval(reports)
+
+        timings.federation_round_s = time.perf_counter() - t_round
+        self.history.append(timings)
+        self.round_id += 1
+        return timings
+
+    def run_async(self, total_updates: int) -> list[RoundTimings]:
+        """Asynchronous protocol: aggregate on every arrival, staleness-weighted.
+
+        Every completed local task immediately triggers a community update
+        (the paper's asynchronous 'community update request'); dispatch of the
+        next task to that learner follows at once.
+        """
+        if not isinstance(self.protocol, AsyncProtocol):
+            raise TypeError("run_async requires AsyncProtocol")
+        if self.global_params is None:
+            raise RuntimeError("set_initial_model() before running rounds")
+
+        alpha = self.protocol.staleness_alpha
+        done = threading.Event()
+        completed = 0
+        completed_lock = threading.Lock()
+        out: list[RoundTimings] = []
+
+        def community_update(update: LocalUpdate) -> None:
+            nonlocal completed
+            timings = RoundTimings(round_id=self.round_id)
+            t0 = time.perf_counter()
+            with self._store_lock:
+                records = self.store.select_latest(None)  # all known models
+                stal = jnp.asarray(
+                    [self._model_version - r.metadata.get("model_version", 0) for r in records],
+                    jnp.float32,
+                )
+                n_ex = jnp.asarray([float(r.num_examples) for r in records], jnp.float32)
+                stack = jnp.stack([r.buffer for r in records], axis=0)
+            w = aggregation.staleness_weights(n_ex, stal, alpha)
+            new_buffer = self.aggregate_fn(stack, w)
+            self._server_state, new_buffer = self.server_opt.apply(
+                self._server_state, self.global_buffer, new_buffer
+            )
+            self.global_buffer = jax.block_until_ready(new_buffer)
+            self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
+            self._model_version += 1
+            timings.aggregation_s = time.perf_counter() - t0
+            timings.federation_round_s = timings.aggregation_s
+            out.append(timings)
+            self.history.append(timings)
+            self.round_id += 1
+            with completed_lock:
+                completed += 1
+                if completed >= total_updates:
+                    done.set()
+
+        def dispatch_to(lid: str) -> None:
+            task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
+            self._learner_versions[lid] = self._model_version
+            envelope = self.channel.send(self.global_params, {"task": task})
+
+            def run() -> None:
+                params = self.channel.recv(envelope)
+                update = self._learners[lid].fit(params, task)
+                self._mark_task_completed(update)
+                community_update(update)
+                with completed_lock:
+                    more = completed < total_updates
+                if more and not done.is_set():
+                    dispatch_to(lid)
+
+            self._executor.submit(run)
+
+        for lid in self.learner_ids:
+            dispatch_to(lid)
+        done.wait()
+        return out
+
+    # -------------------------------------------------------------- helpers
+    @staticmethod
+    def _reduce_eval(reports: list[EvalReport]) -> dict:
+        if not reports:
+            return {}
+        keys = reports[0].metrics.keys()
+        total = sum(r.num_examples for r in reports)
+        return {
+            k: sum(r.metrics[k] * r.num_examples for r in reports) / max(total, 1)
+            for k in keys
+        }
+
+    def shutdown(self) -> None:
+        self._executor.shutdown(wait=True)

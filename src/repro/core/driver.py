@@ -1,0 +1,155 @@
+"""The Federation Driver: initialization → monitoring → shutdown (Fig. 8).
+
+The driver parses the federated environment, creates the MetisFL Context
+(controller + learners + channels + keys), ships the initial model state,
+monitors the federation with heartbeats, and tears everything down in the
+paper's order (learners first, then controller).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Sequence
+
+from repro.core.controller import Controller, RoundTimings
+from repro.core.learner import Learner
+from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol
+from repro.core.selection import SelectionPolicy
+from repro.core.server_opt import make_server_optimizer
+from repro.core.store import ModelStore
+from repro.core.transport import Channel
+
+log = logging.getLogger("repro.driver")
+
+__all__ = ["FederationEnv", "TerminationCriteria", "Driver"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TerminationCriteria:
+    """Federated-training termination signals (paper Fig. 8)."""
+
+    max_rounds: int = 10
+    max_wallclock_s: float | None = None
+    target_metric: str | None = None  # e.g. "eval_loss"
+    target_value: float | None = None
+    target_mode: str = "min"  # min | max
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationEnv:
+    """The YAML-equivalent federated-environment description."""
+
+    protocol: str = "sync"  # sync | semi_sync | async
+    local_steps: int = 1
+    batch_size: int = 100
+    learning_rate: float = 0.01
+    hyperperiod_s: float = 1.0
+    staleness_alpha: float = 0.5
+    prox_mu: float = 0.0
+    selection: SelectionPolicy = SelectionPolicy()
+    server_optimizer: str = "fedavg"
+    server_lr: float = 1.0
+    secure_aggregation: bool = False
+    lineage_length: int = 1
+    store_capacity_bytes: int | None = None
+    bandwidth_gbps: float = 10.0
+    latency_ms: float = 0.5
+    heartbeat_every_s: float = 5.0
+    termination: TerminationCriteria = TerminationCriteria()
+
+    def make_protocol(self):
+        if self.protocol == "sync":
+            return SyncProtocol(self.local_steps, self.batch_size, self.learning_rate)
+        if self.protocol == "semi_sync":
+            return SemiSyncProtocol(
+                self.hyperperiod_s, self.batch_size, self.learning_rate,
+                default_steps=self.local_steps,
+            )
+        if self.protocol == "async":
+            return AsyncProtocol(
+                self.local_steps, self.batch_size, self.learning_rate,
+                self.staleness_alpha,
+            )
+        raise ValueError(f"unknown protocol {self.protocol}")
+
+
+class Driver:
+    """Owns the federation lifecycle."""
+
+    def __init__(self, env: FederationEnv, aggregate_fn=None):
+        self.env = env
+        self.controller = Controller(
+            protocol=env.make_protocol(),
+            selection=env.selection,
+            aggregate_fn=aggregate_fn,
+            server_optimizer=make_server_optimizer(env.server_optimizer, lr=env.server_lr),
+            store=ModelStore(env.lineage_length, env.store_capacity_bytes),
+            channel=Channel(env.bandwidth_gbps, env.latency_ms),
+            secure=env.secure_aggregation,
+        )
+        self._learners: list[Learner] = []
+        self._last_heartbeat = 0.0
+
+    # -- initialization (Fig. 8 top) ----------------------------------------
+    def initialize(self, initial_params: Any, learners: Sequence[Learner]) -> None:
+        log.info("driver: initializing controller with model state")
+        self.controller.set_initial_model(initial_params)
+        for learner in learners:
+            if not learner.ping():
+                raise RuntimeError(f"learner {learner.learner_id} not alive at init")
+            self.controller.register_learner(learner)
+            self._learners.append(learner)
+        log.info("driver: %d learners registered", len(learners))
+
+    # -- monitoring ----------------------------------------------------------
+    def _heartbeat(self) -> None:
+        now = time.monotonic()
+        if now - self._last_heartbeat < self.env.heartbeat_every_s:
+            return
+        self._last_heartbeat = now
+        dead = [l.learner_id for l in self._learners if not l.ping()]
+        if dead:
+            raise RuntimeError(f"dead learners detected: {dead}")
+
+    def _terminated(self, t_start: float, history: list[RoundTimings]) -> bool:
+        crit = self.env.termination
+        if len(history) >= crit.max_rounds:
+            return True
+        if crit.max_wallclock_s is not None and time.monotonic() - t_start > crit.max_wallclock_s:
+            return True
+        if crit.target_metric and history and crit.target_value is not None:
+            val = history[-1].metrics.get(crit.target_metric)
+            if val is not None:
+                if crit.target_mode == "min" and val <= crit.target_value:
+                    return True
+                if crit.target_mode == "max" and val >= crit.target_value:
+                    return True
+        return False
+
+    # -- run ------------------------------------------------------------------
+    def run(self) -> list[RoundTimings]:
+        t_start = time.monotonic()
+        history: list[RoundTimings] = []
+        if self.env.protocol == "async":
+            history = self.controller.run_async(self.env.termination.max_rounds)
+        else:
+            while not self._terminated(t_start, history):
+                self._heartbeat()
+                timings = self.controller.run_round()
+                history.append(timings)
+                log.info(
+                    "round %d: fed=%.3fs agg=%.4fs metrics=%s",
+                    timings.round_id, timings.federation_round_s,
+                    timings.aggregation_s, timings.metrics,
+                )
+        self.shutdown()
+        return history
+
+    # -- shutdown (learners first, then controller) ---------------------------
+    def shutdown(self) -> None:
+        for learner in self._learners:
+            learner.shutdown()
+        self.controller.shutdown()
+        log.info("driver: federation shut down")

@@ -1,0 +1,132 @@
+"""The Federation Learner: local training/evaluation over a private shard.
+
+Mirrors MetisFL's learner servicer (paper Fig. 9/10): it receives a
+``TrainTask`` (RunTask), immediately acknowledges, trains in the background
+(the controller's executor provides the background thread), and reports
+completion with the locally trained model plus execution metadata
+(MarkTaskCompleted).  Evaluation (EvaluateModel) is a synchronous call.
+
+The learner owns: its private data iterator, a jit-compiled local step, and a
+local optimizer.  It never sees other learners' data or models — only packed
+global-model envelopes from the controller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import TrainTask
+from repro.optim import Optimizer, apply_fedprox
+
+__all__ = ["LocalUpdate", "EvalReport", "Learner"]
+
+
+@dataclasses.dataclass
+class LocalUpdate:
+    """Payload of MarkTaskCompleted."""
+
+    learner_id: str
+    round_id: int
+    params: Any
+    num_examples: int
+    metrics: dict
+    seconds_per_step: float
+
+
+@dataclasses.dataclass
+class EvalReport:
+    learner_id: str
+    round_id: int
+    metrics: dict
+    num_examples: int
+
+
+class Learner:
+    """A federation learner bound to a loss function and a private dataset.
+
+    ``loss_fn(params, batch) -> scalar`` defines local training;
+    ``eval_fn(params, batch) -> dict`` defines evaluation.  ``data_fn(batch
+    _size) -> batch`` and ``eval_data_fn()`` supply private data.  All model
+    structure lives in the loss function — the learner is model-agnostic,
+    like MetisFL's learner wrapper around user fit/evaluate functions.
+    """
+
+    def __init__(
+        self,
+        learner_id: str,
+        loss_fn: Callable[[Any, Any], jax.Array],
+        eval_fn: Callable[[Any, Any], dict],
+        data_fn: Callable[[int], Any],
+        eval_data_fn: Callable[[], Any],
+        optimizer: Optimizer,
+        num_examples: int,
+    ):
+        self.learner_id = learner_id
+        self._loss_fn = loss_fn
+        self._eval_fn = eval_fn
+        self._data_fn = data_fn
+        self._eval_data_fn = eval_data_fn
+        self._optimizer = optimizer
+        self.num_examples = num_examples
+        self._step_cache: dict[float, Callable] = {}
+        self.alive = True
+
+    # -- heartbeat ----------------------------------------------------------
+    def ping(self) -> bool:
+        return self.alive
+
+    def shutdown(self) -> None:
+        self.alive = False
+
+    # -- training -----------------------------------------------------------
+    def _make_step(self, prox_mu: float, global_params: Any) -> Callable:
+        loss_fn = self._loss_fn
+        if prox_mu > 0.0:
+            loss_fn = apply_fedprox(loss_fn, prox_mu, global_params)
+
+        opt = self._optimizer
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = opt.apply(params, grads, opt_state)
+            return params, opt_state, loss
+
+        return step
+
+    def fit(self, params: Any, task: TrainTask) -> LocalUpdate:
+        """Run ``task.local_steps`` local optimization steps (paper T2-T3)."""
+        step = self._make_step(task.prox_mu, params)
+        opt_state = self._optimizer.init(params)
+        losses = []
+        t0 = time.perf_counter()
+        for _ in range(task.local_steps):
+            batch = self._data_fn(task.batch_size)
+            params, opt_state, loss = step(params, opt_state, batch)
+        jax.block_until_ready(loss)
+        elapsed = time.perf_counter() - t0
+        losses.append(float(loss))
+        return LocalUpdate(
+            learner_id=self.learner_id,
+            round_id=task.round_id,
+            params=params,
+            num_examples=self.num_examples,
+            metrics={"train_loss": losses[-1], "local_steps": task.local_steps},
+            seconds_per_step=elapsed / max(task.local_steps, 1),
+        )
+
+    # -- evaluation ---------------------------------------------------------
+    def evaluate(self, params: Any, round_id: int) -> EvalReport:
+        batch = self._eval_data_fn()
+        metrics = {k: float(v) for k, v in self._eval_fn(params, batch).items()}
+        return EvalReport(
+            learner_id=self.learner_id,
+            round_id=round_id,
+            metrics=metrics,
+            num_examples=self.num_examples,
+        )

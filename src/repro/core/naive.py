@@ -1,0 +1,78 @@
+"""The 'old Python controller' baseline MetisFL was re-engineered against.
+
+The paper (§3) describes the original Python controller: per-tensor handling,
+GIL-serialized aggregation, blocking dispatch.  To reproduce the paper's 10×
+claim we need that comparison point, so this module implements controller
+operations the slow way — deliberately:
+
+* :func:`naive_aggregate` — iterate tensors in Python, and within each tensor
+  iterate learners in Python, accumulating on host numpy one learner at a
+  time (no packing, no fusion, no vectorized (N,P) reduce).
+* :func:`naive_serialize` / :func:`naive_deserialize` — per-tensor pickling
+  (framework-native object transport instead of flat bytes).
+* :class:`NaiveDispatcher` — strictly sequential, blocking task dispatch.
+
+Everything here is used only by benchmarks/tests as the baseline arm.
+"""
+
+from __future__ import annotations
+
+import pickle
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["naive_aggregate", "naive_serialize", "naive_deserialize", "NaiveDispatcher"]
+
+
+def naive_aggregate(models: Sequence[Any], weights: Sequence[float]) -> Any:
+    """Per-tensor, per-learner Python-loop FedAvg (the GIL-era controller).
+
+    models: list of parameter pytrees (one per learner).
+    """
+    wsum = float(sum(weights))
+    norm = [float(w) / wsum for w in weights]
+    flat_models = [jax.tree_util.tree_leaves(m) for m in models]
+    treedef = jax.tree_util.tree_structure(models[0])
+    n_tensors = len(flat_models[0])
+    out_leaves = []
+    for t in range(n_tensors):  # one "thread" per tensor... except sequential
+        acc = None
+        for i, fm in enumerate(flat_models):  # learner loop, host-side
+            contrib = np.asarray(fm[t], dtype=np.float64) * norm[i]
+            acc = contrib if acc is None else acc + contrib
+        out_leaves.append(np.asarray(acc, dtype=np.asarray(flat_models[0][t]).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
+def naive_serialize(params: Any) -> list[bytes]:
+    """Per-tensor pickle — the framework-native-object wire format."""
+    return [
+        pickle.dumps(np.asarray(leaf))
+        for leaf in jax.tree_util.tree_leaves(params)
+    ]
+
+
+def naive_deserialize(blobs: list[bytes], treedef) -> Any:
+    leaves = [pickle.loads(b) for b in blobs]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class NaiveDispatcher:
+    """Blocking, sequential task dispatch: serialize + run + wait per learner."""
+
+    def __init__(self):
+        self.dispatch_s = 0.0
+
+    def dispatch(self, params: Any, learners: Sequence[Callable[[Any], Any]]) -> list[Any]:
+        results = []
+        treedef = jax.tree_util.tree_structure(params)
+        for learner_fn in learners:
+            t0 = time.perf_counter()
+            blobs = naive_serialize(params)
+            received = naive_deserialize(blobs, treedef)
+            self.dispatch_s += time.perf_counter() - t0
+            results.append(learner_fn(received))  # blocks until done
+        return results

@@ -1,0 +1,187 @@
+"""Flat tensor transport: the MetisFL wire format, JAX-native.
+
+MetisFL ships a model over the network as a sequence of *flattened byte
+tensors* plus a small structural proto (shape, dtype, byte order) that lets the
+receiver reconstruct the original tensors.  This module is the JAX analogue:
+
+* :func:`pack_bytes` / :func:`unpack_bytes` — the wire format.  A pytree of
+  arrays becomes one contiguous ``uint8`` buffer plus a :class:`Manifest`.
+  This is what the (simulated) transport layer moves and measures.
+
+* :func:`pack_numeric` / :func:`unpack_numeric` — the aggregation format.  All
+  leaves are flattened, cast to a common accumulation dtype and concatenated
+  into a single 1-D buffer.  The federation controller aggregates *these*
+  buffers: a weighted reduction over ``(n_learners, n_params)`` that is
+  embarrassingly parallel across params — the TPU-native statement of the
+  paper's one-OpenMP-thread-per-tensor design (Fig. 4).
+
+The manifest is a plain, picklable Python object (no closures), so it can be
+generated once by the driver and shipped to every participant, exactly like
+MetisFL's proto descriptors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TensorSpec",
+    "Manifest",
+    "build_manifest",
+    "pack_numeric",
+    "unpack_numeric",
+    "pack_bytes",
+    "unpack_bytes",
+    "num_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Structural descriptor of one tensor on the wire (a proto-tensor)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str  # numpy dtype string, e.g. "float32", "bfloat16"
+    offset: int  # element offset into the numeric buffer
+    size: int  # number of elements
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(jnp.dtype(self.dtype)).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    """Full structural description of a packed model.
+
+    ``specs`` are ordered by traversal order of the original pytree;
+    ``treedef`` reconstructs the container structure.  ``byteorder`` is
+    recorded the way MetisFL's proto does, so a receiver on different
+    endianness could byteswap (JAX is little-endian everywhere; we record it
+    for wire fidelity).
+    """
+
+    specs: tuple[TensorSpec, ...]
+    treedef: Any
+    byteorder: str = "little"
+
+    @property
+    def total_elements(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.nbytes for s in self.specs)
+
+    def spec_by_name(self, name: str) -> TensorSpec:
+        for s in self.specs:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def build_manifest(params: Any) -> Manifest:
+    """Build the structural manifest for a parameter pytree.
+
+    The numeric offsets index into the *accumulation-dtype* buffer produced by
+    :func:`pack_numeric` (one element per original element, regardless of the
+    original dtype).
+    """
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    offset = 0
+    for path, leaf in leaves_with_path:
+        leaf = jnp.asarray(leaf)
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        specs.append(
+            TensorSpec(
+                name=_leaf_name(path),
+                shape=tuple(int(d) for d in leaf.shape),
+                dtype=str(leaf.dtype),
+                offset=offset,
+                size=size,
+            )
+        )
+        offset += size
+    return Manifest(specs=tuple(specs), treedef=treedef)
+
+
+def num_params(params: Any) -> int:
+    return sum(int(np.prod(jnp.shape(l)) or 1) for l in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Numeric packing (aggregation format)
+# ---------------------------------------------------------------------------
+
+
+def pack_numeric(params: Any, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Flatten a pytree into one 1-D buffer in the accumulation dtype.
+
+    jit-compatible; under ``pjit`` the output buffer inherits a sharding over
+    the flattened dimension, so the downstream aggregation reduce is local to
+    every device (no collectives) — see ``core/aggregation.py``.
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        return jnp.zeros((0,), dtype=dtype)
+    flat = [jnp.ravel(jnp.asarray(l)).astype(dtype) for l in leaves]
+    return jnp.concatenate(flat, axis=0)
+
+
+def unpack_numeric(buffer: jax.Array, manifest: Manifest) -> Any:
+    """Inverse of :func:`pack_numeric`: restore shapes, dtypes and structure."""
+    leaves = []
+    for spec in manifest.specs:
+        seg = jax.lax.slice(buffer, (spec.offset,), (spec.offset + spec.size,))
+        leaves.append(seg.reshape(spec.shape).astype(jnp.dtype(spec.dtype)))
+    return jax.tree_util.tree_unflatten(manifest.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Byte packing (wire format)
+# ---------------------------------------------------------------------------
+
+
+def pack_bytes(params: Any) -> tuple[np.ndarray, Manifest]:
+    """Serialize a pytree to one contiguous byte buffer (host-side).
+
+    This is the transport representation: it preserves the original dtypes
+    bit-exactly (bf16 stays 2 bytes on the wire).  Single-copy: each tensor's
+    bytes are written directly into a preallocated wire buffer — the fast
+    (de)serialization MetisFL attributes its dispatch-time win to.  Not
+    jit-compatible by design; serialization is a controller-edge operation.
+    """
+    manifest = build_manifest(params)
+    out = np.empty((manifest.total_bytes,), np.uint8)
+    cursor = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        n = arr.nbytes
+        out[cursor : cursor + n] = arr.reshape(-1).view(np.uint8)
+        cursor += n
+    return out, manifest
+
+
+def unpack_bytes(buffer: np.ndarray, manifest: Manifest) -> Any:
+    """Inverse of :func:`pack_bytes` (zero-copy views into the wire buffer,
+    one device_put per tensor)."""
+    leaves = []
+    cursor = 0
+    for spec in manifest.specs:
+        nbytes = spec.nbytes
+        seg = buffer[cursor : cursor + nbytes]
+        arr = seg.view(jnp.dtype(spec.dtype)).reshape(spec.shape)
+        leaves.append(jnp.asarray(arr))
+        cursor += nbytes
+    return jax.tree_util.tree_unflatten(manifest.treedef, leaves)

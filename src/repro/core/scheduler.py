@@ -1,0 +1,97 @@
+"""Federation round protocols: synchronous, semi-synchronous, asynchronous.
+
+MetisFL is the only system in the paper's Table 1 supporting all three
+communication protocols.  The protocol decides (a) how many local steps each
+selected learner runs before uploading, and (b) when the controller
+aggregates:
+
+* **synchronous** — every selected learner runs the same number of local
+  epochs/steps; the controller aggregates when *all* uploads arrive
+  (paper's stress-test setting, FedAvg).
+* **semi-synchronous** (Stripelis et al. 2022b) — learners train for a fixed
+  wall-clock hyper-period; fast learners do more steps.  The controller still
+  aggregates a full cohort, but stragglers never stall the round because the
+  *time* budget, not the step budget, is fixed.
+* **asynchronous** — the controller aggregates on *every* arrival, weighting
+  by staleness (``core/aggregation.staleness_weights``); there is no round
+  barrier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainTask:
+    """The unit the controller dispatches to a learner (paper's RunTask)."""
+
+    round_id: int
+    local_steps: int
+    batch_size: int
+    learning_rate: float
+    # FedProx proximal coefficient; 0 disables the proximal term.
+    prox_mu: float = 0.0
+    metadata: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncProtocol:
+    local_steps: int = 1
+    batch_size: int = 100
+    learning_rate: float = 0.01
+
+    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        return TrainTask(
+            round_id=round_id,
+            local_steps=self.local_steps,
+            batch_size=self.batch_size,
+            learning_rate=self.learning_rate,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SemiSyncProtocol:
+    """Fixed hyper-period: per-learner step count derived from measured speed.
+
+    ``hyperperiod_s`` is the wall-clock training budget per round.  The
+    controller keeps a moving estimate of each learner's seconds-per-step
+    (from MarkTaskCompleted metadata) and assigns
+    ``steps_i = max(1, floor(hyperperiod / spstep_i))``.
+    """
+
+    hyperperiod_s: float = 1.0
+    batch_size: int = 100
+    learning_rate: float = 0.01
+    default_steps: int = 1
+
+    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        steps = self.default_steps
+        if learner_profile and learner_profile.get("seconds_per_step", 0) > 0:
+            steps = max(1, int(self.hyperperiod_s / learner_profile["seconds_per_step"]))
+        return TrainTask(
+            round_id=round_id,
+            local_steps=steps,
+            batch_size=self.batch_size,
+            learning_rate=self.learning_rate,
+            metadata={"semi_sync": True},
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncProtocol:
+    local_steps: int = 1
+    batch_size: int = 100
+    learning_rate: float = 0.01
+    staleness_alpha: float = 0.5
+
+    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        return TrainTask(
+            round_id=round_id,
+            local_steps=self.local_steps,
+            batch_size=self.batch_size,
+            learning_rate=self.learning_rate,
+            metadata={"async": True},
+        )

@@ -1,0 +1,117 @@
+"""Masked secure aggregation with exact cancellation.
+
+MetisFL performs secure aggregation with CKKS homomorphic encryption
+(PALISADE).  FHE has no JAX analogue, so — per DESIGN.md §2 — we implement the
+*masking* family the paper's Table 1 attributes to Flower/FedML
+(LightSecAgg-style pairwise masking):
+
+Every ordered pair of learners ``(i, j)`` derives a shared one-time pad from a
+pairwise seed; learner ``i`` adds ``+m_ij`` and learner ``j`` adds ``-m_ij``
+to its upload.  The controller's sum of all masked uploads equals the sum of
+the true uploads **exactly**, while any individual upload is masked by a
+uniform pad over ``Z_2^32``.
+
+Exactness requires working over the integers: learners encode their (already
+FedAvg-weighted) buffers in int32 **fixed point** (the plaintext analogue of
+the CKKS encode step), mask with wrapping int32 addition, and the controller
+sums and decodes.  Cancellation is bit-exact; the only error is the fixed-
+point quantization, bounded by ``N / (2 * scale)`` per coordinate.  Both
+properties are verified by hypothesis tests.
+
+Dropout recovery (SecAgg+ secret-sharing of seeds) is out of scope: all
+selected participants must survive to unmasking, as in the paper's synchronous
+stress tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PairwiseMasker",
+    "encode_fixed",
+    "decode_fixed",
+    "secure_fedavg",
+    "FIXED_SCALE",
+]
+
+FIXED_SCALE = float(1 << 16)
+
+
+def _pair_seed(base_seed: int, i: int, j: int) -> int:
+    """Order-independent pairwise seed (canonicalized to i < j)."""
+    a, b = (i, j) if i < j else (j, i)
+    mod = 1 << 32
+    return ((base_seed * 2654435761) % mod) ^ ((a * 40503) % mod) ^ ((b * 9973) % mod)
+
+
+def _mask(seed: int, size: int) -> jax.Array:
+    key = jax.random.key(seed)
+    return jax.random.bits(key, (size,), dtype=jnp.uint32).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairwiseMasker:
+    """Mask generator for one secure-aggregation session."""
+
+    base_seed: int
+    participants: tuple[int, ...]
+
+    def net_mask(self, idx: int, size: int) -> jax.Array:
+        """Sum of signed pairwise pads learner ``idx`` applies to its upload."""
+        total = jnp.zeros((size,), jnp.int32)
+        for other in self.participants:
+            if other == idx:
+                continue
+            m = _mask(_pair_seed(self.base_seed, idx, other), size)
+            sign = 1 if idx < other else -1
+            total = total + jnp.int32(sign) * m  # wrapping adds on Z_2^32
+        return total
+
+
+def encode_fixed(buffer: jax.Array, scale: float = FIXED_SCALE) -> jax.Array:
+    """float32 -> int32 fixed point (plaintext analogue of CKKS encode)."""
+    return jnp.round(buffer.astype(jnp.float32) * scale).astype(jnp.int32)
+
+
+def decode_fixed(ints: jax.Array, scale: float = FIXED_SCALE) -> jax.Array:
+    return ints.astype(jnp.float32) / scale
+
+
+def mask_upload(
+    masker: PairwiseMasker, idx: int, weighted_buffer: jax.Array,
+    scale: float = FIXED_SCALE,
+) -> jax.Array:
+    """Learner-side: fixed-point encode + apply net pad.  Upload is uniform-
+    masked int32; the controller learns nothing about an individual model."""
+    enc = encode_fixed(weighted_buffer, scale)
+    return enc + masker.net_mask(idx, weighted_buffer.shape[0])
+
+
+def secure_fedavg(
+    buffers: Sequence[jax.Array],
+    weights: Sequence[float],
+    base_seed: int = 0,
+    scale: float = FIXED_SCALE,
+) -> jax.Array:
+    """End-to-end secure FedAvg: weight→encode→mask→sum→decode.
+
+    FedAvg weights are folded in learner-side (each learner uploads
+    ``(w_i / Σw) * x_i`` in fixed point), so the controller only ever sums
+    masked integers.  Returns the weighted average as float32, exact up to
+    fixed-point quantization.
+    """
+    n = len(buffers)
+    masker = PairwiseMasker(base_seed=base_seed, participants=tuple(range(n)))
+    wsum = float(sum(weights))
+    if wsum <= 0:
+        raise ValueError("weights must sum to a positive value")
+    total = jnp.zeros((buffers[0].shape[0],), jnp.int32)
+    for i, (buf, w) in enumerate(zip(buffers, weights)):
+        total = total + mask_upload(masker, i, buf * jnp.float32(w / wsum), scale)
+    return decode_fixed(total, scale)

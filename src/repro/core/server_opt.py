@@ -1,0 +1,91 @@
+"""Global (server-side) optimizers over packed buffers.
+
+MetisFL's Table 1 'GlobalOpt' row: the controller may apply a server-side
+optimization rule to the aggregated model instead of plain replacement.  We
+implement the standard adaptive-server family (Reddi et al., *Adaptive
+Federated Optimization*): the aggregated learner average defines a
+*pseudo-gradient* ``Δ = x_global - x_agg`` which a server optimizer consumes.
+
+All states/updates are flat ``(P,)`` buffers, so server optimization inherits
+the same embarrassing parallelism as aggregation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ServerOptState", "ServerOptimizer", "make_server_optimizer"]
+
+
+class ServerOptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    m: jax.Array  # first moment, (P,)
+    v: jax.Array  # second moment, (P,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptimizer:
+    """A (init, apply) pair over packed buffers."""
+
+    name: str
+    init: Callable[[jax.Array], ServerOptState]
+    # (state, x_global, x_agg) -> (new_state, new_x_global)
+    apply: Callable[[ServerOptState, jax.Array, jax.Array], tuple[ServerOptState, jax.Array]]
+
+
+def make_server_optimizer(
+    name: str = "fedavg",
+    lr: float = 1.0,
+    beta1: float = 0.9,
+    beta2: float = 0.99,
+    eps: float = 1e-3,
+    momentum: float = 0.9,
+) -> ServerOptimizer:
+    """Build a server optimizer: fedavg | sgdm | fedadagrad | fedyogi | fedadam."""
+
+    def init(x: jax.Array) -> ServerOptState:
+        z = jnp.zeros_like(x, dtype=jnp.float32)
+        return ServerOptState(step=jnp.zeros((), jnp.int32), m=z, v=z)
+
+    def _delta(x_global, x_agg):
+        # server pseudo-gradient: direction from global towards the average
+        return x_global.astype(jnp.float32) - x_agg.astype(jnp.float32)
+
+    if name == "fedavg":
+
+        def apply(state, x_global, x_agg):
+            # plain replacement (lr=1) or a server learning rate interpolation
+            new = x_global.astype(jnp.float32) - lr * _delta(x_global, x_agg)
+            return state._replace(step=state.step + 1), new
+
+    elif name == "sgdm":
+
+        def apply(state, x_global, x_agg):
+            g = _delta(x_global, x_agg)
+            m = momentum * state.m + g
+            new = x_global.astype(jnp.float32) - lr * m
+            return ServerOptState(state.step + 1, m, state.v), new
+
+    elif name in ("fedadagrad", "fedyogi", "fedadam"):
+
+        def apply(state, x_global, x_agg):
+            g = _delta(x_global, x_agg)
+            m = beta1 * state.m + (1.0 - beta1) * g
+            g2 = g * g
+            if name == "fedadagrad":
+                v = state.v + g2
+            elif name == "fedyogi":
+                v = state.v - (1.0 - beta2) * g2 * jnp.sign(state.v - g2)
+            else:  # fedadam
+                v = beta2 * state.v + (1.0 - beta2) * g2
+            new = x_global.astype(jnp.float32) - lr * m / (jnp.sqrt(v) + eps)
+            return ServerOptState(state.step + 1, m, v), new
+
+    else:
+        raise ValueError(f"unknown server optimizer: {name}")
+
+    return ServerOptimizer(name=name, init=init, apply=jax.jit(apply))

@@ -1,0 +1,107 @@
+"""In-memory model store for the federation controller.
+
+MetisFL's controller keeps every learner's latest local model in an in-memory
+hash map (the paper assumes all local models fit in memory and treats
+insert/select as O(1); §5 sketches future on-disk/distributed stores).  This
+module implements that store with the extra bookkeeping a production
+controller needs: per-learner lineage, capacity-bounded eviction, and
+aggregate byte accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Iterator
+
+import numpy as np
+
+__all__ = ["ModelRecord", "ModelStore"]
+
+
+@dataclasses.dataclass
+class ModelRecord:
+    learner_id: str
+    round_id: int
+    buffer: Any  # packed numeric buffer (jax.Array) or byte buffer
+    num_examples: int  # aggregation weight source (FedAvg)
+    metadata: dict = dataclasses.field(default_factory=dict)
+    timestamp: float = dataclasses.field(default_factory=time.monotonic)
+
+    @property
+    def nbytes(self) -> int:
+        b = self.buffer
+        if hasattr(b, "nbytes"):
+            return int(b.nbytes)
+        return int(np.asarray(b).nbytes)
+
+
+class ModelStore:
+    """Hash-map model store with per-learner lineage and eviction.
+
+    ``lineage_length`` bounds how many historical models per learner are kept
+    (1 = paper's behaviour: latest only).  ``capacity_bytes`` optionally bounds
+    total resident bytes; the oldest records across learners are evicted first
+    (never the latest record of a learner — the controller must always be able
+    to aggregate every registered learner).
+    """
+
+    def __init__(self, lineage_length: int = 1, capacity_bytes: int | None = None):
+        if lineage_length < 1:
+            raise ValueError("lineage_length must be >= 1")
+        self._lineage_length = lineage_length
+        self._capacity_bytes = capacity_bytes
+        self._records: OrderedDict[str, list[ModelRecord]] = OrderedDict()
+        self.total_inserts = 0
+
+    # -- insertion ---------------------------------------------------------
+    def insert(self, record: ModelRecord) -> None:
+        lineage = self._records.setdefault(record.learner_id, [])
+        lineage.append(record)
+        self.total_inserts += 1
+        if len(lineage) > self._lineage_length:
+            del lineage[: len(lineage) - self._lineage_length]
+        self._maybe_evict()
+
+    def _maybe_evict(self) -> None:
+        if self._capacity_bytes is None:
+            return
+        while self.resident_bytes() > self._capacity_bytes:
+            victim: ModelRecord | None = None
+            for lineage in self._records.values():
+                # candidates: everything but the newest record per learner
+                for rec in lineage[:-1]:
+                    if victim is None or rec.timestamp < victim.timestamp:
+                        victim = rec
+            if victim is None:
+                break  # only latest-per-learner remain; never evict those
+            self._records[victim.learner_id].remove(victim)
+
+    # -- selection ---------------------------------------------------------
+    def latest(self, learner_id: str) -> ModelRecord:
+        return self._records[learner_id][-1]
+
+    def lineage(self, learner_id: str) -> list[ModelRecord]:
+        return list(self._records.get(learner_id, []))
+
+    def select_latest(self, learner_ids: list[str] | None = None) -> list[ModelRecord]:
+        """The controller's 'model selection' step before aggregation."""
+        ids = learner_ids if learner_ids is not None else list(self._records)
+        return [self.latest(i) for i in ids if i in self._records]
+
+    def __contains__(self, learner_id: str) -> bool:
+        return learner_id in self._records
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._records)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    # -- accounting ---------------------------------------------------------
+    def resident_bytes(self) -> int:
+        return sum(rec.nbytes for lin in self._records.values() for rec in lin)
+
+    def num_records(self) -> int:
+        return sum(len(lin) for lin in self._records.values())

@@ -1,0 +1,83 @@
+"""Simulated transport layer with measured (de)serialization and byte counts.
+
+MetisFL moves models between controller and learners over gRPC as flat byte
+buffers.  This repo has no RPC runtime (DESIGN.md §2), so the transport is an
+in-process channel that performs the *real* serialization work
+(``core/packing.pack_bytes``), counts bytes, and optionally accounts virtual
+wire time from a bandwidth/latency model — so benchmarks can separate compute
+cost from modeled network cost without sleeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import packing
+
+__all__ = ["ChannelStats", "Channel", "Envelope"]
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    messages: int = 0
+    bytes_moved: int = 0
+    serialize_s: float = 0.0
+    deserialize_s: float = 0.0
+    virtual_wire_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """One message on the wire: byte buffer + manifest + metadata."""
+
+    buffer: np.ndarray
+    manifest: packing.Manifest
+    metadata: dict
+
+
+class Channel:
+    """A measured point-to-point channel (controller <-> learner).
+
+    ``bandwidth_gbps``/``latency_ms`` feed the *virtual* wire-time account;
+    they never block real execution.  ``quantize_codec`` optionally compresses
+    the payload (beyond-paper int8 transport, ``kernels/quantize``).
+    """
+
+    def __init__(
+        self,
+        bandwidth_gbps: float = 10.0,
+        latency_ms: float = 0.5,
+        quantize_codec: Any | None = None,
+    ):
+        self.bandwidth_gbps = bandwidth_gbps
+        self.latency_ms = latency_ms
+        self.codec = quantize_codec
+        self.stats = ChannelStats()
+
+    def send(self, params: Any, metadata: dict | None = None) -> Envelope:
+        """Serialize a pytree for the wire (the sender half)."""
+        t0 = time.perf_counter()
+        if self.codec is not None:
+            params = self.codec.encode(params)
+        buf, manifest = packing.pack_bytes(params)
+        dt = time.perf_counter() - t0
+        self.stats.messages += 1
+        self.stats.bytes_moved += int(buf.nbytes)
+        self.stats.serialize_s += dt
+        self.stats.virtual_wire_s += (
+            self.latency_ms / 1e3 + buf.nbytes * 8 / (self.bandwidth_gbps * 1e9)
+        )
+        return Envelope(buffer=buf, manifest=manifest, metadata=dict(metadata or {}))
+
+    def recv(self, envelope: Envelope) -> Any:
+        """Deserialize at the receiver half."""
+        t0 = time.perf_counter()
+        params = packing.unpack_bytes(envelope.buffer, envelope.manifest)
+        if self.codec is not None:
+            params = self.codec.decode(params)
+        self.stats.deserialize_s += time.perf_counter() - t0
+        return params

@@ -1,0 +1,16 @@
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import (
+    HousingData,
+    make_housing_data,
+    make_lm_data,
+    LMDataIterator,
+)
+
+__all__ = [
+    "dirichlet_partition",
+    "iid_partition",
+    "HousingData",
+    "make_housing_data",
+    "make_lm_data",
+    "LMDataIterator",
+]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused weighted model aggregation.
+
+The paper's hot operation (Fig. 4) restated for the TPU memory hierarchy:
+instead of one OpenMP thread per model tensor, the packed ``(N, P)`` learner
+stack is tiled along ``P`` into MXU/VPU-aligned VMEM blocks; each grid step
+streams one ``(N, block_p)`` tile HBM→VMEM, reduces it against the
+``(N,)`` weight vector held in VMEM, and writes the ``(block_p,)`` slice of
+the aggregate.
+
+Arithmetic intensity is ~1 FLOP per 2 bytes for f32 inputs (2·N·P FLOPs over
+N·P·4 bytes), so the kernel is HBM-bandwidth-bound; the tiling's only job is
+to keep the block resident and the lanes full (block_p a multiple of
+8·128 = 1024 f32 lanes).  Validated in interpret mode against
+``ref.fedavg_ref`` (CPU has no real TPU here); the jit wrapper lives in
+``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fedavg_pallas", "DEFAULT_BLOCK_P"]
+
+# 8 sublanes x 128 lanes x 16 vregs worth of f32 per tile step
+DEFAULT_BLOCK_P = 16384
+
+# v5e VMEM is ~128 MiB/core; leave headroom for double-buffering (the Mosaic
+# pipeliner keeps 2 in-flight copies of every input tile) and the output tile.
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+
+
+def choose_block_p(n_learners: int, dtype_bytes: int = 4,
+                   budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest lane-aligned block_p whose working set fits VMEM.
+
+    Working set per grid step ≈ 2·(N·block_p·dtype_bytes)  (double-buffered
+    stack tile) + block_p·4 (f32 out) + N·4 (weights).  Solving for block_p
+    and rounding down to a multiple of 1024 (8 sublanes × 128 lanes) keeps the
+    VPU lanes full while never spilling:  N=8 → 1.0M elements; N=200 → 40k.
+    The sweep in EXPERIMENTS.md §Perf confirms HBM-bound behaviour is flat
+    across valid block sizes — the only failure mode is exceeding VMEM.
+    """
+    per_elem = 2 * n_learners * dtype_bytes + 4
+    raw = (budget - 4 * n_learners) // per_elem
+    aligned = max(1024, (raw // 1024) * 1024)
+    return int(min(aligned, 1 << 20))
+
+
+def _fedavg_kernel(w_ref, stack_ref, out_ref):
+    """One grid step: out[bp] = sum_n w[n] * stack[n, bp].
+
+    w_ref: (N, 1) f32 in VMEM; stack_ref: (N, BP); out_ref: (1, BP).
+    The reduce is expressed as a (1,N)x(N,BP) matmul so the MXU can take it
+    when N is large; for small N the VPU handles it as a broadcast-multiply.
+    """
+    w = w_ref[:, 0]  # (N,)
+    block = stack_ref[...].astype(jnp.float32)  # (N, BP)
+    acc = jax.lax.dot_general(
+        w[None, :], block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, BP)
+    out_ref[...] = acc
+
+
+def fedavg_pallas(
+    stack: jax.Array,
+    weights: jax.Array,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = False,
+) -> jax.Array:
+    """(N, P) x (N,) -> (P,) weighted mean.  P must be a multiple of block_p
+    (ops.py pads).  Weights are normalized inside (f32)."""
+    n, p = stack.shape
+    assert p % block_p == 0, (p, block_p)
+    w = weights.astype(jnp.float32)
+    w = (w / jnp.sum(w))[:, None]  # (N, 1)
+
+    grid = (p // block_p,)
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # weights: same block each step
+            pl.BlockSpec((n, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=interpret,
+    )(w, stack)
+    return out[0]

@@ -1,0 +1,110 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+``INTERPRET`` flips the kernels into interpret mode — required on CPU, where
+the kernel body executes in Python for correctness validation; on a real TPU
+it is False and the kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg as _fedavg
+from repro.kernels import quantize as _quant
+
+# CPU backend -> interpret mode.
+INTERPRET = jax.default_backend() == "cpu"
+
+__all__ = ["fedavg", "quantize", "dequantize", "QuantCodec"]
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int = -1) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, size
+    pad = multiple - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def fedavg(stack: jax.Array, weights: jax.Array,
+           block_p: int | None = None) -> jax.Array:
+    """Kernel-backed FedAvg over a packed (N, P) stack.
+
+    block_p defaults to the largest VMEM-fitting tile for this N
+    (``fedavg.choose_block_p``)."""
+    if block_p is None:
+        block_p = _fedavg.choose_block_p(stack.shape[0])
+    padded, p = _pad_to(stack, block_p, axis=1)
+    out = _fedavg.fedavg_pallas(padded, weights, block_p=block_p, interpret=INTERPRET)
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_rows"))
+def quantize(x: jax.Array, group: int = _quant.DEFAULT_GROUP,
+             block_rows: int = _quant.DEFAULT_BLOCK_ROWS):
+    """Returns (q, scales); the caller keeps x.shape[0] for dequantize."""
+    padded, _ = _pad_to(x, group * block_rows)
+    return _quant.quantize_pallas(padded, group, block_rows, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_rows", "orig_size"))
+def dequantize(q: jax.Array, scales: jax.Array, orig_size: int,
+               group: int = _quant.DEFAULT_GROUP,
+               block_rows: int = _quant.DEFAULT_BLOCK_ROWS) -> jax.Array:
+    x = _quant.dequantize_pallas(q, scales, group, block_rows, interpret=INTERPRET)
+    return x[:orig_size]
+
+
+_DTYPE_CODES = {"float32": 0, "bfloat16": 1, "float16": 2, "float64": 3}
+_DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+class QuantCodec:
+    """Transport codec for ``core/transport.Channel``: pytree -> int8 + scales.
+
+    Encodes every float leaf; integer leaves pass through.  Stateless: shape
+    and dtype ride along in the encoded leaf, so any receiver can decode
+    (lossy to the int8 step, ~0.4% relative error — measured in
+    EXPERIMENTS.md and acceptable for FL model shipping).
+    """
+
+    @staticmethod
+    def encode(params):
+        def enc(leaf):
+            leaf = jnp.asarray(leaf)
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            flat = leaf.astype(jnp.float32).reshape(-1)
+            q, s = quantize(flat)
+            return {
+                "__quant__": jnp.asarray(
+                    [flat.shape[0], _DTYPE_CODES[str(leaf.dtype)]] + list(leaf.shape),
+                    jnp.int64,
+                ),
+                "q": q,
+                "s": s,
+            }
+
+        return jax.tree_util.tree_map(enc, params)
+
+    @staticmethod
+    def decode(encoded):
+        def is_q(x):
+            return isinstance(x, dict) and "__quant__" in x
+
+        def dec(leaf):
+            if not is_q(leaf):
+                return leaf
+            meta = [int(v) for v in leaf["__quant__"]]
+            size, dtc, shape = meta[0], meta[1], tuple(meta[2:])
+            x = dequantize(leaf["q"], leaf["s"], size)
+            return x.reshape(shape).astype(_DTYPE_NAMES[dtc])
+
+        return jax.tree_util.tree_map(dec, encoded, is_leaf=is_q)

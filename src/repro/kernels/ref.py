@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fedavg_ref", "quantize_ref", "dequantize_ref"]
+
+
+def fedavg_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """(N, P) x (N,) -> (P,) normalized weighted mean in f32."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    return jnp.einsum("n,np->p", w, stack.astype(jnp.float32))
+
+
+def quantize_ref(x: jax.Array, group: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization.
+
+    x: (P,) with P % group == 0.  Returns (q int8 (P,), scales f32 (P//group,)).
+    """
+    xg = x.astype(jnp.float32).reshape(-1, group)
+    amax = jnp.max(jnp.abs(xg), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xg / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, group: int = 256) -> jax.Array:
+    qg = q.astype(jnp.float32).reshape(-1, group)
+    return (qg * scales[:, None]).reshape(-1)

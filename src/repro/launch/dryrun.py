@@ -1,0 +1,430 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis for §Roofline.
+
+MUST be run as a fresh process (the XLA_FLAGS above execute before any jax
+import).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 2x16x16
+
+Results append to experiments/dryrun/<mesh>.jsonl; benchmarks/roofline.py
+renders the table in EXPERIMENTS.md from them.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCHITECTURES, INPUT_SHAPES, get_config, shape_applicable,
+)
+from repro.launch import roofline as rl
+from repro.launch.mesh import HARDWARE, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.config import ModelConfig
+from repro.models.sharding import make_policy
+
+# per-arch training-policy overrides (DESIGN.md §4: memory-driven)
+ARCH_OVERRIDES: dict[str, dict] = {
+    "deepseek-v3-671b": {"param_dtype": jnp.bfloat16},
+}
+ARCH_OPTIMIZER: dict[str, str] = {
+    # adafactor for the configs whose full Adam state cannot fit 16 GB/chip
+    "deepseek-v3-671b": "adafactor",
+    "qwen2-72b": "adafactor",
+    "llava-next-34b": "adafactor",
+}
+
+
+def _arch_config(arch: str, kind: str = "train") -> ModelConfig:
+    cfg = get_config(arch)
+    if arch in ARCH_OVERRIDES:
+        cfg = dataclasses.replace(cfg, **ARCH_OVERRIDES[arch])
+    if kind in ("decode", "prefill"):
+        # serving layout (§Perf cycle 7): bf16 weights, stationary on-chip —
+        # no optimizer state exists, so FSDP gathering is pure overhead.
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    return cfg
+
+
+def _serving_fsdp(arch: str, kind: str) -> bool | None:
+    """FSDP only where even bf16 weights exceed the model-axis share.
+
+    None -> make_policy heuristic (training).  Serving: False (replicate
+    over data, shard over model) except deepseek-v3, whose 1.34 TB of bf16
+    experts must stay sharded over both axes.
+    """
+    if kind != "decode":
+        # train AND prefill use the heuristic: weight gathers amortize over
+        # the whole sequence of compute (prefill is throughput-bound, and
+        # replicating non-head-divisible attention weights costs tens of GiB
+        # — measured as a 54.7 GiB llava prefill peak before this fix).
+        return None
+    # decode: weights-stationary unless even bf16 weights exceed the
+    # model-axis share when replicated over data.
+    return arch in ("deepseek-v3-671b", "qwen2-72b")
+
+
+def _lower_compile(cfg, pol, shape, opt_name, mesh):
+    """Lower + compile one step; return (compiled, lower_s, compile_s)."""
+    kind = INPUT_SHAPES[shape]["kind"]
+    ins = input_specs(cfg, pol, shape, optimizer_name=opt_name)
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            step = make_train_step(cfg, ins["optimizer"], pol)
+            lowered = jax.jit(step).lower(ins["params"], ins["opt_state"], ins["batch"])
+        elif kind == "prefill":
+            step = make_prefill_step(cfg, pol)
+            lowered = jax.jit(step).lower(ins["params"], ins["batch"])
+        else:
+            step = make_serve_step(cfg, pol)
+            args = [ins["params"], ins["caches"], ins["tokens"], ins["pos"]]
+            if cfg.is_encoder_decoder:
+                args.append(ins["memory"])
+            lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _costs_of(compiled, n_devices):
+    cost = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text(), n_devices)
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def corrected_costs(cfg: ModelConfig, pol, shape: str, opt_name: str, mesh) -> dict:
+    """Depth-differencing correction for scan-once cost analysis.
+
+    XLA's HloCostAnalysis counts each while-loop (scan) body ONCE, so the
+    full-depth lowering under-reports flops/bytes/collectives by ~the trip
+    count.  We lower UNROLLED 1-cycle and 2-cycle variants of the same
+    config; their difference is the exact per-cycle cost (embed/head/MTP
+    cancel), and the full-depth estimate is
+
+        X_full ≈ X_1cycle + (n_cycles - 1) · ΔX    (+ encoder analog)
+
+    with fractional n_cycles handling pattern remainders (gemma3's trailing
+    4 local layers).
+    """
+    pat = len(cfg.layer_pattern)
+    fk = cfg.first_k_dense
+    cycles_full = (cfg.n_layers - fk) / pat
+
+    def variant(n_cycles: int, enc_layers: int | None = None):
+        changes = dict(
+            n_layers=fk + n_cycles * pat,
+            scan_layers=False,
+        )
+        if cfg.is_encoder_decoder:
+            changes["n_encoder_layers"] = enc_layers or 1
+        c = dataclasses.replace(cfg, **changes)
+        compiled, _, _ = _lower_compile(c, pol, shape, opt_name, mesh)
+        return _costs_of(compiled, mesh.size)
+
+    f1, b1, c1 = variant(1, enc_layers=1)
+    f2, b2, c2 = variant(2, enc_layers=1)
+    out = {
+        "flops": f1 + (cycles_full - 1) * (f2 - f1),
+        "bytes": b1 + (cycles_full - 1) * (b2 - b1),
+        "collective_bytes": c1.total_bytes
+        + (cycles_full - 1) * (c2.total_bytes - c1.total_bytes),
+        "collective_counts_cycle": {
+            k: c2.counts[k] - c1.counts[k] for k in c2.counts
+        },
+        "collective_bytes_by_op": {
+            k: c1.bytes_per_chip[k]
+            + (cycles_full - 1) * (c2.bytes_per_chip[k] - c1.bytes_per_chip[k])
+            for k in c1.bytes_per_chip
+        },
+    }
+    if cfg.is_encoder_decoder:
+        f1e, b1e, c1e = variant(1, enc_layers=2)
+        enc_cycles = cfg.n_encoder_layers
+        out["flops"] += (enc_cycles - 1) * (f1e - f1)
+        out["bytes"] += (enc_cycles - 1) * (b1e - b1)
+        out["collective_bytes"] += (enc_cycles - 1) * (
+            c1e.total_bytes - c1.total_bytes
+        )
+    return out
+
+
+def dryrun_one(arch: str, shape: str, multi_pod: bool, hlo_dir: str | None = None) -> dict:
+    """Lower + compile one (arch, shape, mesh) combo; return the record."""
+    kind = INPUT_SHAPES[shape]["kind"]
+    cfg = _arch_config(arch, kind)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    pol = make_policy(cfg, mesh, multi_pod=multi_pod,
+                      fsdp=_serving_fsdp(arch, kind), serving=(kind == "decode"))
+    opt_name = ARCH_OPTIMIZER.get(arch, "adamw")
+
+    record = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_devices,
+        "fsdp": pol.fsdp_params,
+        "optimizer": opt_name if kind == "train" else None,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+
+    ok, reason = shape_applicable(arch, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return record
+
+    # 1) full-depth scan lowering: the compile proof + peak-memory analysis
+    compiled, t_lower, t_compile = _lower_compile(cfg, pol, shape, opt_name, mesh)
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    flops_once, bytes_once, coll_once = _costs_of(compiled, n_devices)
+
+    # 2) depth-differenced per-chip costs (scan bodies counted correctly).
+    # Tiny decode steps can difference to noise-level negatives when XLA
+    # folds the shallow variants differently — fall back to the scan-once
+    # value ONLY then (a blanket max() would double-count collectives that
+    # the full lowering hoists out of the loop as one whole-stack op).
+    corr = corrected_costs(cfg, pol, shape, opt_name, mesh)
+    flops_pc = corr["flops"] if corr["flops"] > 0 else max(flops_once, 0.0)
+    bytes_pc = corr["bytes"] if corr["bytes"] > 0 else max(bytes_once, 0.0)
+    coll_pc = (corr["collective_bytes"] if corr["collective_bytes"] > 0
+               else max(coll_once.total_bytes, 0.0))
+    corr["collective_bytes"] = coll_pc
+    terms = rl.roofline_terms(flops_pc, bytes_pc, coll_pc)
+
+    # MODEL_FLOPS: useful-math floor, global then per-chip
+    n_params = cfg.param_count_estimate()
+    n_active = active_params(cfg)
+    B, S = INPUT_SHAPES[shape]["global_batch"], INPUT_SHAPES[shape]["seq_len"]
+    tokens = B * S if kind in ("train", "prefill") else B  # decode: 1 tok/seq
+    mf_global = rl.model_flops(n_active, tokens, kind)
+    mf_pc = mf_global / n_devices
+
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        n_params=n_params,
+        n_params_active=n_active,
+        argument_size_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        output_size_bytes=getattr(mem, "output_size_in_bytes", 0),
+        temp_size_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        peak_bytes_per_chip=(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        hbm_per_chip=HARDWARE["hbm_bytes"],
+        flops_per_chip=flops_pc,
+        bytes_per_chip=bytes_pc,
+        collective_bytes_per_chip=corr["collective_bytes"],
+        collective_counts_full_hlo=coll_once.counts,
+        collective_counts_per_cycle=corr["collective_counts_cycle"],
+        collective_bytes_by_op=corr["collective_bytes_by_op"],
+        flops_per_chip_scan_once=flops_once,
+        bytes_per_chip_scan_once=bytes_once,
+        model_flops_global=mf_global,
+        model_flops_per_chip=mf_pc,
+        useful_flops_ratio=(mf_pc / flops_pc) if flops_pc else None,
+        **terms,
+    )
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        fn = os.path.join(hlo_dir, f"{arch}_{shape}_{record['mesh']}.hlo.txt")
+        with open(fn, "w") as f:
+            f.write(hlo)
+        record["hlo_path"] = fn
+    return record
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: top-k + shared experts only)."""
+    if not cfg.n_experts:
+        return cfg.param_count_estimate()
+    total = cfg.param_count_estimate()
+    E = cfg.padded_n_experts
+    D, F = cfg.d_model, cfg.moe_d_ff
+    moe_layers = sum(1 for s in cfg.layer_specs() if s.moe)
+    all_expert = moe_layers * E * 3 * D * F
+    active_expert = moe_layers * cfg.top_k * 3 * D * F
+    return int(total - all_expert + active_expert)
+
+
+def dryrun_aggregation(arch: str, n_learners: int, multi_pod: bool,
+                       hierarchical: bool = False) -> dict:
+    """Lower + compile the controller's aggregation step for one arch's
+    packed parameter buffer on the production mesh (the paper's Fig. 4
+    workload at pod scale).  Paper-faithful mode: (N, P) stack sharded over
+    all axes along P — zero collectives expected.  Hierarchical mode
+    (beyond paper): one learner per pod, psum over the pod axis.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import aggregation
+
+    cfg = _arch_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    P_total = cfg.param_count_estimate()
+    # pad P to divisibility over all mesh axes
+    P_pad = ((P_total + n_devices - 1) // n_devices) * n_devices
+
+    record = {
+        "arch": f"fedavg-{arch}", "shape": f"N{n_learners}",
+        "kind": "aggregate", "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_devices, "n_params": P_total,
+        "hierarchical": hierarchical, "status": "ok",
+    }
+    axes = tuple(mesh.axis_names)
+    with mesh:
+        if hierarchical:
+            assert multi_pod, "hierarchical aggregation needs the pod axis"
+            stack = jax.ShapeDtypeStruct(
+                (mesh.shape["pod"], P_pad), jnp.float32,
+                sharding=NamedSharding(mesh, P("pod", ("data", "model"))),
+            )
+            w = jax.ShapeDtypeStruct(
+                (mesh.shape["pod"],), jnp.float32,
+                sharding=NamedSharding(mesh, P("pod")),
+            )
+            fn = jax.jit(aggregation.hierarchical_fedavg(mesh))
+            lowered = fn.lower(stack, w)
+        else:
+            stack = jax.ShapeDtypeStruct(
+                (n_learners, P_pad), jnp.float32,
+                sharding=NamedSharding(mesh, P(None, axes)),
+            )
+            w = jax.ShapeDtypeStruct(
+                (n_learners,), jnp.float32, sharding=NamedSharding(mesh, P())
+            )
+            fn = jax.jit(
+                aggregation.weighted_average,
+                out_shardings=NamedSharding(mesh, P(axes)),
+            )
+            lowered = fn.lower(stack, w)
+        compiled = lowered.compile()
+
+    from repro.launch import roofline as _rl
+
+    flops, bytes_, coll = _costs_of(compiled, n_devices)
+    mem = compiled.memory_analysis()
+    terms = _rl.roofline_terms(flops, bytes_, coll.total_bytes)
+    record.update(
+        peak_bytes_per_chip=mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        flops_per_chip=flops, bytes_per_chip=bytes_,
+        collective_bytes_per_chip=coll.total_bytes,
+        collective_counts_full_hlo=coll.counts,
+        # analytic floor: read N·P + write P floats per chip-share
+        model_bytes_per_chip=(n_learners + 1) * P_pad * 4 / n_devices
+        if not hierarchical else 2 * P_pad * 4 / n_devices,
+        **terms,
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHITECTURES)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--agg", action="store_true",
+                    help="dry-run the controller aggregation step instead")
+    ap.add_argument("--agg-learners", type=int, default=8)
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        "dryrun must see 512 host-platform devices; run as a fresh process"
+    )
+
+    if args.agg:
+        os.makedirs(args.out_dir, exist_ok=True)
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        out_path = os.path.join(args.out_dir, f"agg_{mesh_tag}.jsonl")
+        archs = [args.arch] if args.arch else list(ARCHITECTURES)
+        for arch in archs:
+            try:
+                rec = dryrun_aggregation(
+                    arch, args.agg_learners, args.multi_pod, args.hierarchical
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": f"fedavg-{arch}", "status": "error", "error": repr(e)}
+            with open(out_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            if rec["status"] == "ok":
+                print(
+                    f"agg {arch}: P={rec['n_params']/1e9:.1f}B "
+                    f"mem={rec['memory_s']*1e3:.2f}ms coll={rec['collective_s']*1e3:.3f}ms "
+                    f"colls={sum(rec['collective_counts_full_hlo'].values())} "
+                    f"bytes-eff={rec['model_bytes_per_chip']/max(rec['bytes_per_chip'],1):.2f}",
+                    flush=True,
+                )
+            else:
+                print(f"agg {arch}: {rec.get('error')}", flush=True)
+        return
+
+    combos = []
+    if args.all:
+        for a in ARCHITECTURES:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    out_path = os.path.join(args.out_dir, f"{mesh_tag}.jsonl")
+    hlo_dir = os.path.join(args.out_dir, "hlo") if args.save_hlo else None
+
+    for arch, shape in combos:
+        print(f"=== {arch} × {shape} × {mesh_tag} ===", flush=True)
+        try:
+            rec = dryrun_one(arch, shape, args.multi_pod, hlo_dir)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh_tag,
+                "status": "error", "error": repr(e),
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        if rec["status"] == "ok":
+            print(
+                f"  ok: compile={rec['compile_s']}s "
+                f"peak={rec['peak_bytes_per_chip']/2**30:.2f}GiB/chip "
+                f"compute={rec['compute_s']*1e3:.2f}ms "
+                f"memory={rec['memory_s']*1e3:.2f}ms "
+                f"collective={rec['collective_s']*1e3:.2f}ms "
+                f"dominant={rec['dominant']}",
+                flush=True,
+            )
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model").
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (dryrun.py sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_debug_mesh", "HARDWARE"]
+
+# TPU v5e-class constants used by the roofline analysis (launch/roofline.py).
+HARDWARE = {
+    "peak_flops_bf16": 197e12,  # per chip, FLOP/s
+    "hbm_bandwidth": 819e9,  # per chip, B/s
+    "ici_link_bandwidth": 50e9,  # per link, B/s
+    "hbm_bytes": 16 * 1024**3,  # per chip
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (shard_map paths exercise on 1 device)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,132 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the *per-device* program (the SPMD
+module is already partitioned), so terms divide by per-chip peaks directly —
+this matches the spec's ``global / (chips × peak)`` formulation.
+
+Collective bytes are not in cost_analysis: we parse the compiled HLO and sum
+per-op traffic estimates (output-shape bytes × a ring-algorithm multiplier ×
+(g-1)/g for group size g).  This is an estimate of link traffic, good to the
+multiplier's fidelity; the relative ordering across configs — which is what
+the §Perf loop optimizes — is robust to it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.launch.mesh import HARDWARE
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms", "model_flops"]
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+# traffic multiplier per output byte for ring algorithms
+_COLLECTIVES = {
+    "all-reduce": 2.0,  # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,  # per-device sends ~input/g ... counted on output
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    bytes_per_chip: dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_per_chip.values())
+
+
+def _line_out_bytes(line: str, op: str) -> float:
+    """Bytes of the op's output type; handles tuple outputs like
+    ``%x = (f32[2000]{0}, f32[]) all-reduce(...)``."""
+    rhs = line.split("=", 1)[1]
+    # shapes before the op invocation are the output type; after it, operands
+    m = re.search(rf"\b{op}(-start|-done)?\(", rhs)
+    head = rhs[: m.start()] if m else (rhs.split("(", 1)[0] if "(" in rhs else rhs)
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    bytes_pc: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        for op, mult in _COLLECTIVES.items():
+            # match op invocation, not metadata mentions
+            if re.search(rf"= .*\b{op}(-start)?\(", ls) or re.search(
+                rf"= {op}(-start)?\(", ls
+            ):
+                g = _group_size(ls, n_devices)
+                if g <= 1:
+                    continue
+                out_b = _line_out_bytes(ls, op)
+                counts[op] += 1
+                bytes_pc[op] += out_b * mult * (g - 1) / g
+                break
+    return CollectiveStats(counts=counts, bytes_per_chip=bytes_pc)
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+    hw: dict | None = None,
+) -> dict:
+    hw = hw or HARDWARE
+    compute_s = flops_per_chip / hw["peak_flops_bf16"]
+    memory_s = bytes_per_chip / hw["hbm_bandwidth"]
+    collective_s = collective_bytes_per_chip / hw["ici_link_bandwidth"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * n_tokens

@@ -1,0 +1,80 @@
+"""Serving launcher: prefill a batch of requests, then decode tokens.
+
+Runs reduced configs on the host (the full-scale serve steps are lowered by
+``launch/dryrun.py``).  Exercises the exact same ``make_serve_step`` that the
+dry-run proves on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
+        --batch 4 --prompt-len 32 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, get_reduced
+from repro.launch.steps import make_serve_step
+from repro.models import kvcache, transformer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", choices=ARCHITECTURES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = transformer.init_params(jax.random.key(args.seed), cfg)
+    B = args.batch
+    max_len = args.prompt_len + args.gen_len
+
+    prompts = jax.random.randint(
+        jax.random.key(args.seed + 1), (B, args.prompt_len), 0, cfg.vocab_size
+    )
+    memory = None
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq_len, cfg.frontend_dim), jnp.float32
+        )
+        memory = transformer.encode(params, frames, cfg)
+
+    serve_step = jax.jit(make_serve_step(cfg), static_argnames=())
+
+    # prefill by stepping the decoder over the prompt (cache-building path);
+    # production prefill uses the fused forward (see dryrun prefill shapes).
+    caches = kvcache.init_cache(cfg, B, max_len)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for t in range(args.prompt_len):
+        nxt, caches = serve_step(params, caches, prompts[:, t : t + 1],
+                                 jnp.asarray(t, jnp.int32), memory)
+    prefill_s = time.time() - t0
+
+    generated = []
+    t0 = time.time()
+    for t in range(args.prompt_len, max_len):
+        nxt, caches = serve_step(params, caches, nxt, jnp.asarray(t, jnp.int32), memory)
+        generated.append(nxt)
+    jax.block_until_ready(nxt)
+    decode_s = time.time() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} batch={B}")
+    print(f"prefill: {args.prompt_len} steps in {prefill_s:.2f}s")
+    print(
+        f"decode:  {args.gen_len} tokens in {decode_s:.2f}s "
+        f"({B * args.gen_len / decode_s:.1f} tok/s batch-aggregate)"
+    )
+    print("sample token ids:", out[0, :12].tolist())
+    assert not bool(jnp.any(out < 0)) and not bool(jnp.any(out >= cfg.padded_vocab_size))
+
+
+if __name__ == "__main__":
+    main()

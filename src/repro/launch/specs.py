@@ -1,0 +1,303 @@
+"""Sharding specs and abstract inputs for every (arch × shape × mesh) combo.
+
+``param_specs`` walks the abstract parameter pytree and assigns a
+PartitionSpec per leaf from path-based rules (DESIGN.md §5):
+
+* Megatron TP over ``model``: attention head projections (iff head counts
+  divide the axis), MLP d_ff, MoE experts, vocab;
+* FSDP over the data axes for large configs (``policy.fsdp_params``):
+  the ``d_model`` sides of weight matrices additionally shard over
+  ``("pod","data")`` so no chip holds a full replica;
+* Mamba in_proj keeps its fused output dim replicated (the z/x/B/C/dt concat
+  boundary does not align with a 16-way tiling — splitting the projection is
+  a recorded §Perf hillclimb candidate).
+
+``input_specs`` produces ShapeDtypeStructs *with shardings attached* for
+train / prefill / decode steps — the dry-run lowers against these, so no
+host memory is ever allocated for the full-scale shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.models import kvcache, transformer
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPolicy, make_policy
+
+__all__ = ["param_specs", "opt_state_specs", "input_specs", "batch_specs", "cache_specs"]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(path: str, leaf, cfg: ModelConfig, pol: ShardingPolicy) -> P:
+    ndim = len(leaf.shape)
+    m = pol.model_axis
+    f = pol.data_axes if pol.fsdp_params else None
+    stacked = "segments" in path or "'layer'" in path  # leading scan dim
+
+    def pad(spec: tuple) -> P:
+        """Left-pad with None for the stacked scan dimension."""
+        if stacked:
+            return P(None, *spec)
+        return P(*spec)
+
+    def dims(spec: tuple, want: int) -> P:
+        assert len(spec) == want, (path, leaf.shape, spec)
+        return pad(spec)
+
+    name = path.rsplit("'", 2)[-2] if "'" in path else path
+
+    base = ndim - (1 if stacked else 0)
+
+    if name in ("embed",):
+        return P(m, f)
+    if name == "lm_head":
+        return P(f, m)
+    if name == "frontend_proj":
+        return P(None, f)
+    if name == "proj":  # mtp 2D->D projection
+        return P(f, None)
+    if name in ("wq",):
+        if pol.serving and not pol.fsdp_params and not pol.shard_q_heads:
+            return dims((m, None), 2)  # contraction-dim TP (psum'd matmul)
+        return dims((f, m if pol.shard_q_heads else None), 2)
+    if name in ("wk", "wv"):
+        if pol.serving and not pol.fsdp_params and not pol.shard_kv_heads:
+            return dims((m, None), 2)
+        return dims((f, m if pol.shard_kv_heads else None), 2)
+    if name == "wo":
+        if pol.serving and not pol.fsdp_params and not pol.shard_q_heads:
+            return dims((None, m), 2)
+        return dims((m if pol.shard_q_heads else None, f), 2)
+    if name in ("bq",):
+        return dims((m if pol.shard_q_heads else None,), 1)
+    if name in ("bk", "bv"):
+        return dims((m if pol.shard_kv_heads else None,), 1)
+    # MLA
+    if name in ("wq_a", "wkv_a"):
+        return dims((f, None), 2)
+    if name in ("wq_b", "wk_b", "wv_b"):
+        return dims((None, m), 2)  # head-major output dim; 128 heads % 16 == 0
+    # MLP
+    if name in ("w_gate", "w_up"):
+        return dims((f, m), 2)
+    if name == "w_down":
+        return dims((m, f), 2)
+    if name == "b_up":
+        return dims((m,), 1)
+    if name == "b_down":
+        return dims((None,), 1)
+    # MoE
+    if name == "router":
+        return dims((None, None), 2)
+    if name in ("we_gate", "we_up", "we_down"):
+        if pol.serving and pol.fsdp_params:
+            # weights-stationary 2D EP decode layout (§Perf cycle 7)
+            return dims(((m, *pol.data_axes), None, None), 3)
+        if name == "we_down":
+            return dims((m, None, f), 3)
+        return dims((m, f, None), 3)
+    # Mamba
+    if name == "in_proj":
+        return dims((f, None), 2)
+    if name == "out_proj":
+        return dims((None, f), 2)
+    if name in ("conv_w", "conv_b", "A_log", "D_skip", "dt_bias"):
+        return pad(tuple([None] * base))
+    # norms / scales / everything small: replicated (keep scan dim unsharded)
+    return pad(tuple([None] * base))
+
+
+def param_specs(cfg: ModelConfig, pol: ShardingPolicy, abstract=None):
+    """PartitionSpec pytree matching ``transformer.abstract_params(cfg)``."""
+    if abstract is None:
+        abstract = transformer.abstract_params(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    specs = [
+        _leaf_spec(jax.tree_util.keystr(path), leaf, cfg, pol) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(optimizer_name: str, p_specs, abstract_params):
+    """Optimizer-state specs derived from the param specs."""
+    import jax.numpy as jnp
+
+    if optimizer_name == "sgd":
+        return ()
+    if optimizer_name in ("adam", "adamw"):
+        from repro.optim.optimizers import AdamState
+
+        return AdamState(step=P(), m=p_specs, v=p_specs)
+    if optimizer_name == "momentum":
+        return p_specs
+    if optimizer_name == "adafactor":
+        from repro.optim.optimizers import AdafactorState
+
+        def drop_last(spec, leaf):
+            t = tuple(spec) if spec is not None else (None,) * len(leaf.shape)
+            t = t + (None,) * (len(leaf.shape) - len(t))
+            return P(*t[:-1]) if len(leaf.shape) >= 2 else P()
+
+        def drop_second_last(spec, leaf):
+            t = tuple(spec) if spec is not None else (None,) * len(leaf.shape)
+            t = t + (None,) * (len(leaf.shape) - len(t))
+            return P(*t[:-2], t[-1]) if len(leaf.shape) >= 2 else P()
+
+        def full(spec, leaf):
+            return P() if len(leaf.shape) >= 2 else (spec or P())
+
+        tm = jax.tree_util.tree_map
+        return AdafactorState(
+            step=P(),
+            vr=tm(drop_last, p_specs, abstract_params,
+                  is_leaf=lambda x: isinstance(x, P)),
+            vc=tm(drop_second_last, p_specs, abstract_params,
+                  is_leaf=lambda x: isinstance(x, P)),
+            v=tm(full, p_specs, abstract_params, is_leaf=lambda x: isinstance(x, P)),
+        )
+    raise ValueError(optimizer_name)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, pol: ShardingPolicy, shape_name: str) -> dict:
+    """Abstract train/prefill batch with shardings."""
+    info = INPUT_SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    da = pol.data_axes
+    out: dict[str, Any] = {}
+    n_text = S
+    if cfg.frontend == "vision_stub":
+        n_text = S - cfg.num_prefix_tokens
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_tokens, cfg.frontend_dim), jnp.bfloat16,
+            sharding=_ns(pol, P(da, None, None)),
+        )
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.frontend_dim), jnp.bfloat16,
+            sharding=_ns(pol, P(da, None, None)),
+        )
+    out["tokens"] = jax.ShapeDtypeStruct(
+        (B, n_text), jnp.int32, sharding=_ns(pol, P(da, None))
+    )
+    out["labels"] = jax.ShapeDtypeStruct(
+        (B, n_text), jnp.int32, sharding=_ns(pol, P(da, None))
+    )
+    return out
+
+
+def _ns(pol: ShardingPolicy, spec: P) -> NamedSharding:
+    return NamedSharding(pol.mesh, spec)
+
+
+def _cache_leaf_spec(path: str, leaf, cfg: ModelConfig, pol: ShardingPolicy,
+                     batch: int) -> P:
+    """Cache leaves: (repeats, B, ...) — B over data when divisible, then
+    heads over model when divisible else sequence over model."""
+    m, da = pol.model_axis, pol.data_axes
+    dsize = 1
+    for a in da:
+        dsize *= pol.mesh.shape[a]
+    bspec = da if batch % dsize == 0 and batch >= dsize else None
+
+    name = path.rsplit("'", 2)[-2]
+    if name in ("k", "v"):  # (rep, B, L, KVH, hd)
+        if pol.shard_kv_heads:
+            return P(None, bspec, None, m, None)
+        return P(None, bspec, m, None, None)  # sequence-sharded cache
+    if name in ("ckv", "kpe"):  # (rep, B, L, r)
+        return P(None, bspec, m, None)
+    if name == "conv":  # (rep, B, W-1, ch)
+        return P(None, bspec, None, None)
+    if name == "ssm":  # (rep, B, H, P, N)
+        if pol.shard_ssm_heads:
+            return P(None, bspec, m, None, None)
+        return P(None, bspec, None, None, None)
+    return P(*([None] * len(leaf.shape)))
+
+
+def cache_specs(cfg: ModelConfig, pol: ShardingPolicy, batch: int, max_len: int):
+    """(abstract_cache_with_shardings, spec_pytree)."""
+    abstract = kvcache.abstract_cache(cfg, batch, max_len)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    specs, structs = [], []
+    for path, leaf in flat:
+        spec = _cache_leaf_spec(jax.tree_util.keystr(path), leaf, cfg, pol, batch)
+        specs.append(spec)
+        structs.append(
+            jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=_ns(pol, spec))
+        )
+    return (
+        jax.tree_util.tree_unflatten(treedef, structs),
+        jax.tree_util.tree_unflatten(treedef, specs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# full dry-run input assembly
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, pol: ShardingPolicy, shape_name: str,
+                optimizer_name: str = "adamw") -> dict:
+    """Everything a step function needs, as sharded ShapeDtypeStructs."""
+    info = INPUT_SHAPES[shape_name]
+    kind = info["kind"]
+    abstract = transformer.abstract_params(cfg)
+    p_specs = param_specs(cfg, pol, abstract)
+    params = jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=_ns(pol, s)),
+        abstract, p_specs, is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    out = {"params": params, "param_specs": p_specs}
+
+    if kind == "train":
+        from repro import optim as optim_mod
+
+        opt = getattr(optim_mod, optimizer_name)(1e-4)
+        o_abstract = jax.eval_shape(opt.init, abstract)
+        o_specs = opt_state_specs(optimizer_name, p_specs, abstract)
+        out["opt_state"] = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=_ns(pol, s)),
+            o_abstract, o_specs, is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+        )
+        out["opt_specs"] = o_specs
+        out["batch"] = batch_specs(cfg, pol, shape_name)
+        out["optimizer"] = opt
+    elif kind == "prefill":
+        out["batch"] = batch_specs(cfg, pol, shape_name)
+    else:  # decode
+        B, L = info["global_batch"], info["seq_len"]
+        caches, c_specs = cache_specs(cfg, pol, B, L)
+        out["caches"] = caches
+        out["cache_specs"] = c_specs
+        da = pol.data_axes
+        dsize = 1
+        for a in da:
+            dsize *= pol.mesh.shape[a]
+        bspec = da if B % dsize == 0 and B >= dsize else None
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (B, 1), jnp.int32, sharding=_ns(pol, P(bspec, None))
+        )
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32, sharding=_ns(pol, P()))
+        if cfg.is_encoder_decoder:
+            out["memory"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16,
+                sharding=_ns(pol, P(bspec, None, None)),
+            )
+    return out

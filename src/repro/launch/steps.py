@@ -1,0 +1,69 @@
+"""Step-function builders: train_step / prefill_step / serve_step per config.
+
+These are the functions the dry-run lowers and the examples execute.  All of
+them are pure (params, state, batch) -> outputs so they jit/pjit directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, transformer
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPolicy
+from repro.optim import Optimizer
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    policy: ShardingPolicy | None = None):
+    """(params, opt_state, batch) -> (params, opt_state, loss)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: transformer.lm_loss(p, batch, cfg, policy=policy)
+        )(params)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: ShardingPolicy | None = None):
+    """(params, batch) -> (next_tokens, last_logit_stats).
+
+    Serving-shaped prefill: runs the full forward and emits the next token
+    for every sequence (greedy).  Cache materialization for the subsequent
+    decode is exercised by the decode shapes; returning full 32k logits would
+    be a multi-hundred-GB artifact, so the step reduces to next-token output
+    exactly like a production prefill server.
+    """
+
+    def prefill_step(params, batch):
+        logits, _, _ = transformer.forward(
+            params, batch["tokens"], cfg, policy=policy,
+            prefix_embeds=batch.get("prefix_embeds"),
+            frames=batch.get("frames"),
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok.astype(jnp.int32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, policy: ShardingPolicy | None = None):
+    """(params, caches, tokens (B,1), pos, [memory]) -> (next (B,1), caches)."""
+
+    def serve_step(params, caches, tokens, pos, memory=None):
+        logits, new_caches = transformer.decode_step(
+            params, tokens, caches, pos, cfg, policy=policy, memory=memory
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True)
+        return next_tok.astype(jnp.int32), new_caches
+
+    return serve_step

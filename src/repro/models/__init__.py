@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, plan_segments
+from repro.models import layers, transformer, kvcache, mlp, sharding
+
+__all__ = ["ModelConfig", "plan_segments", "layers", "transformer", "kvcache", "mlp", "sharding"]

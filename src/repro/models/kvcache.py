@@ -1,0 +1,94 @@
+"""Decode cache construction, aligned with the scan segments.
+
+The cache pytree mirrors ``plan_segments(cfg)``: a list over segments, each a
+tuple over unit positions, each a dict holding that layer kind's state stacked
+over the segment's ``repeats``:
+
+* attention (``attn``/``shared_attn``/``xattn``): ``{"attn": {"k","v"}}`` of
+  shape ``(repeats, B, L, KVH, hd)`` — ``L = sliding_window`` for ``swa``
+  layers (ring buffer), ``max_len`` otherwise;
+* MLA: ``{"attn": {"ckv","kpe"}}`` — the compressed latent cache,
+  ``(repeats, B, L, kv_lora_rank)`` / ``(repeats, B, L, rope_dim)``;
+* Mamba2: ``{"mamba": {"conv","ssm"}}`` — constant-size state, independent of
+  ``max_len`` (the whole point of running ``long_500k`` on SSM/hybrid archs).
+
+``abstract_cache`` returns ShapeDtypeStructs for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import (
+    ATTN, MAMBA, SHARED_ATTN, SWA, XATTN, LayerSpec, ModelConfig, plan_segments,
+)
+
+__all__ = ["init_cache", "abstract_cache", "cache_bytes"]
+
+
+def _entry_struct(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                  dtype) -> dict:
+    if spec.kind == MAMBA:
+        di, N = cfg.d_inner, cfg.ssm_state
+        H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+        return {
+            "mamba": {
+                "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, di + 2 * N), dtype),
+                "ssm": jax.ShapeDtypeStruct((batch, H, Pd, N), jnp.float32),
+            }
+        }
+    L = min(cfg.sliding_window, max_len) if spec.kind == SWA else max_len
+    if cfg.attn_impl == "mla":
+        return {
+            "attn": {
+                "ckv": jax.ShapeDtypeStruct((batch, L, cfg.kv_lora_rank), dtype),
+                "kpe": jax.ShapeDtypeStruct((batch, L, cfg.qk_rope_head_dim), dtype),
+            }
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "attn": {
+            "k": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads, hd), dtype),
+        }
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> list:
+    """ShapeDtypeStruct cache pytree (dry-run input)."""
+    caches = []
+    for seg in plan_segments(cfg):
+        unit = tuple(
+            jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((seg.repeats, *s.shape), s.dtype),
+                _entry_struct(cfg, spec, batch, max_len, dtype),
+            )
+            for spec in seg.unit
+        )
+        caches.append(unit)
+    return caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> list:
+    """Zero-initialized cache."""
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), abstract_cache(cfg, batch, max_len, dtype),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> int:
+    import numpy as np
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        abstract_cache(cfg, batch, max_len, dtype),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    ):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total

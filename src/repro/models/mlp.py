@@ -1,0 +1,45 @@
+"""The paper's HousingMLP: a 100-hidden-layer regression MLP.
+
+Used by the benchmark harness to reproduce Figs. 5-7 / Table 2 at the exact
+model sizes the paper stress-tests (100k / 1M / 10M parameters).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.housing_mlp import MLPConfig
+
+__all__ = ["init_params", "apply", "mse_loss"]
+
+
+def init_params(key, cfg: MLPConfig):
+    ks = jax.random.split(key, cfg.n_hidden_layers + 1)
+    params = {"layers": []}
+    d_in = cfg.n_features
+    for i in range(cfg.n_hidden_layers):
+        params["layers"].append(
+            {
+                "w": jax.random.normal(ks[i], (d_in, cfg.width)) * (1.0 / jnp.sqrt(d_in)),
+                "b": jnp.zeros((cfg.width,)),
+            }
+        )
+        d_in = cfg.width
+    params["out"] = {
+        "w": jax.random.normal(ks[-1], (d_in, cfg.n_outputs)) * (1.0 / jnp.sqrt(d_in)),
+        "b": jnp.zeros((cfg.n_outputs,)),
+    }
+    return params
+
+
+def apply(params, x: jax.Array) -> jax.Array:
+    for layer in params["layers"]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def mse_loss(params, batch) -> jax.Array:
+    x, y = batch
+    pred = apply(params, x)
+    return jnp.mean((pred - y) ** 2)

@@ -1,0 +1,107 @@
+"""Sharding policy: how each architecture maps onto the production mesh.
+
+The mesh is fixed — ``("data","model")`` single-pod, ``("pod","data","model")``
+multi-pod — but the *rules* adapt per architecture (DESIGN.md §4):
+
+* attention heads shard over ``model`` iff divisible by the axis size,
+  otherwise the sequence dimension is sharded (context parallelism) for
+  prefill/train and the KV cache sequence for decode;
+* MoE experts shard over ``model`` (padded to divisibility);
+* FSDP: parameter ``d_model``/``d_ff`` dims additionally shard over ``data``
+  for the very large configs (weight-gathered training), controlled by
+  ``fsdp_params``.
+
+``constrain`` is a no-op when no policy is active, so model code runs
+unchanged in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShardingPolicy", "make_policy", "constrain"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh | None
+    data_axes: tuple[str, ...] = ("data",)  # ("pod","data") in multi-pod
+    model_axis: str = "model"
+    shard_q_heads: bool = True
+    shard_kv_heads: bool = True
+    shard_ssm_heads: bool = True
+    fsdp_params: bool = False  # shard param d_model dim over data axes too
+    # Megatron-style sequence parallelism: residual stream (and therefore the
+    # layer-scan remat stash) sharded over `model` along S between blocks.
+    seq_parallel: bool = True
+    # serving layout: weights-stationary decode — MoE experts shard over
+    # model x data (2D EP) instead of the training FSDP layout.
+    serving: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.mesh else 1
+
+    # -- frequently used specs ------------------------------------------------
+    def batch_spec(self, ndim: int) -> P:
+        """Activations: batch over data axes, rest replicated."""
+        return P(self.data_axes, *([None] * (ndim - 1)))
+
+    def fsdp_axes(self):
+        return self.data_axes if self.fsdp_params else None
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh | None, multi_pod: bool = False,
+                fsdp: bool | None = None, seq_parallel: bool = True,
+                serving: bool = False) -> ShardingPolicy:
+    if mesh is None:
+        return ShardingPolicy(mesh=None)
+    msize = mesh.shape["model"]
+    if fsdp is None:
+        # FSDP for configs whose replicated params would not fit one chip's
+        # HBM share: heuristic at >= 8B params.
+        fsdp = cfg.param_count_estimate() >= 8e9
+    return ShardingPolicy(
+        mesh=mesh,
+        data_axes=("pod", "data") if multi_pod else ("data",),
+        model_axis="model",
+        shard_q_heads=cfg.n_heads % msize == 0,
+        shard_kv_heads=cfg.n_kv_heads % msize == 0 and cfg.n_kv_heads >= msize,
+        shard_ssm_heads=(cfg.ssm_heads % msize == 0) if cfg.ssm_state else False,
+        fsdp_params=bool(fsdp),
+        seq_parallel=seq_parallel,
+        serving=serving,
+    )
+
+
+def constrain(x: jax.Array, policy: ShardingPolicy | None, *spec) -> jax.Array:
+    """``with_sharding_constraint`` that degrades to identity without a mesh."""
+    if policy is None or not policy.active:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, P(*spec))
+    )
+
+
+def seq_constrain(x: jax.Array, policy: ShardingPolicy | None) -> jax.Array:
+    """Residual-stream constraint: (B, S, D) -> batch over data, S over model.
+
+    Applied at layer boundaries so the scan carry (= the remat stash, one
+    (B,S,D) per layer) is model_size x smaller.  Skipped when S does not
+    divide the axis (whisper's 1500-frame encoder) or S == 1 (decode).
+    """
+    if policy is None or not policy.active or not policy.seq_parallel:
+        return x
+    if x.ndim != 3 or x.shape[1] == 1 or x.shape[1] % policy.model_size:
+        return x
+    return constrain(x, policy, policy.data_axes, policy.model_axis, None)

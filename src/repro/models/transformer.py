@@ -1,0 +1,496 @@
+"""Model composition: segments → scan, decoder-only / enc-dec / hybrid.
+
+The layer stack from ``plan_segments(cfg)`` lowers as ``lax.scan`` over
+stacked parameters (one scan per homogeneous segment), which keeps the HLO
+small for 80-layer configs while preserving faithful layer ordering for
+heterogeneous patterns (gemma3 5:1 sliding:global, zamba2 mamba+shared-attn).
+
+Public entry points:
+
+* ``init_params(key, cfg)`` / ``abstract_params(cfg)``
+* ``forward(params, tokens, cfg, ...)``     — train/prefill logits
+* ``decode_step(params, tokens, cache, ...)`` — one-token serve step
+* ``lm_loss(params, batch, cfg, ...)``      — causal LM objective (+MoE aux,
+  +MTP when configured)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import (
+    ATTN, MAMBA, SHARED_ATTN, SWA, XATTN,
+    LayerSpec, ModelConfig, Segment, plan_segments,
+)
+from repro.models.sharding import ShardingPolicy, constrain, seq_constrain
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
+    """One transformer layer's params for the given spec."""
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    if spec.kind == MAMBA:
+        p["norm1"] = layers.init_norm(cfg)
+        p["mamba"] = layers.init_mamba(ks[0], cfg)
+        return p
+    if spec.kind == SHARED_ATTN:
+        # placeholder: weights live in params["shared_block"]; per-instance
+        # linear adapter keeps layers distinguishable (zamba2 uses LoRA here).
+        p["adapter_scale"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        return p
+    # attention family
+    p["norm1"] = layers.init_norm(cfg)
+    if cfg.attn_impl == "mla":
+        p["attn"] = layers.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = layers.init_attention(ks[0], cfg)
+    if spec.kind == XATTN:
+        p["norm_x"] = layers.init_norm(cfg)
+        p["xattn"] = layers.init_attention(ks[1], cfg, cross=True)
+    p["norm2"] = layers.init_norm(cfg)
+    if spec.moe:
+        p["moe"] = layers.init_moe(ks[2], cfg)
+    elif cfg.d_ff > 0:
+        p["mlp"] = layers.init_mlp(ks[2], cfg)
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig):
+    """Zamba2's tied full-attention transformer block."""
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layers.init_norm(cfg),
+        "attn": layers.init_attention(ks[0], cfg),
+        "norm2": layers.init_norm(cfg),
+        "mlp": layers.init_mlp(ks[1], cfg),
+    }
+
+
+def _stack_init(key, cfg: ModelConfig, seg: Segment):
+    """Stacked (repeats-leading) params for one scan segment."""
+
+    def one(k):
+        ks = jax.random.split(k, len(seg.unit))
+        return tuple(_init_layer(ks[i], cfg, s) for i, s in enumerate(seg.unit))
+
+    if seg.repeats == 1:
+        return jax.tree_util.tree_map(lambda x: x[None], one(key))
+    keys = jax.random.split(key, seg.repeats)
+    return jax.vmap(one)(keys)
+
+
+def init_params(key, cfg: ModelConfig):
+    segs = plan_segments(cfg)
+    n = 8 + len(segs)
+    ks = jax.random.split(key, n)
+    Vp, D = cfg.padded_vocab_size, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": layers._dense_init(ks[0], (Vp, D), cfg.param_dtype, scale=0.02),
+        "final_norm": layers.init_norm(cfg),
+        "segments": [_stack_init(ks[8 + i], cfg, seg) for i, seg in enumerate(segs)],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers._dense_init(ks[1], (D, Vp), cfg.param_dtype)
+    if any(s.kind == SHARED_ATTN for s in cfg.layer_specs()):
+        params["shared_block"] = _init_shared_block(ks[2], cfg)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = layers._dense_init(
+            ks[3], (cfg.frontend_dim, D), cfg.param_dtype
+        )
+    if cfg.is_encoder_decoder:
+        enc_seg = Segment(unit=(LayerSpec(kind=ATTN),), repeats=cfg.n_encoder_layers)
+        params["encoder"] = {
+            "segments": [_stack_init(ks[4], cfg, enc_seg)],
+            "final_norm": layers.init_norm(cfg),
+        }
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": layers._dense_init(ks[5], (2 * D, D), cfg.param_dtype),
+            "norm_h": layers.init_norm(cfg),
+            "norm_e": layers.init_norm(cfg),
+            "layer": jax.tree_util.tree_map(
+                lambda x: x[None], _init_layer(ks[6], cfg, LayerSpec(kind=ATTN))
+            ),
+            "final_norm": layers.init_norm(cfg),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run input)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    *,
+    positions,
+    policy,
+    shared_block=None,
+    memory=None,  # encoder output for cross-attention
+    cache=None,
+    decode_pos=None,
+):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if spec.kind == SHARED_ATTN:
+        sb = shared_block
+        h = layers.apply_norm(sb["norm1"], x, cfg)
+        a, c_attn = layers.apply_attention(
+            sb["attn"], h, cfg, positions=positions, mode="causal", policy=policy,
+            kv_cache=None if cache is None else cache.get("attn"),
+            decode_pos=decode_pos,
+        )
+        x = x + a * p["adapter_scale"].astype(x.dtype)
+        h = layers.apply_norm(sb["norm2"], x, cfg)
+        x = x + layers.apply_mlp(sb["mlp"], h, cfg, policy)
+        if cache is not None:
+            new_cache = {"attn": c_attn}
+        return x, new_cache, aux
+
+    if spec.kind == MAMBA:
+        h = layers.apply_norm(p["norm1"], x, cfg)
+        y, c_m = layers.apply_mamba(
+            p["mamba"], h, cfg, policy=policy,
+            cache=None if cache is None else cache.get("mamba"),
+            decode_pos=decode_pos,
+        )
+        x = x + y
+        if cache is not None:
+            new_cache = {"mamba": c_m}
+        return x, new_cache, aux
+
+    # attention family (attn / swa / xattn)
+    mode = "sliding" if spec.kind == SWA else "causal"
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    if cfg.attn_impl == "mla":
+        a, c_attn = layers.apply_mla(
+            p["attn"], h, cfg, positions=positions, mode=mode, policy=policy,
+            kv_cache=None if cache is None else cache.get("attn"),
+            decode_pos=decode_pos,
+        )
+    else:
+        a, c_attn = layers.apply_attention(
+            p["attn"], h, cfg, positions=positions, mode=mode, policy=policy,
+            kv_cache=None if cache is None else cache.get("attn"),
+            decode_pos=decode_pos,
+        )
+    x = x + a
+
+    if spec.kind == XATTN:
+        h = layers.apply_norm(p["norm_x"], x, cfg)
+        a, _ = layers.apply_attention(
+            p["xattn"], h, cfg, positions=positions, mode="full", policy=policy,
+            x_cross=memory,
+            kv_cache=None if cache is None else cache.get("attn"),
+            decode_pos=decode_pos,
+        )
+        x = x + a
+
+    h = layers.apply_norm(p["norm2"], x, cfg)
+    if "moe" in p:
+        y, aux = layers.apply_moe(p["moe"], h, cfg, policy)
+        x = x + y
+    elif "mlp" in p:
+        x = x + layers.apply_mlp(p["mlp"], h, cfg, policy)
+
+    if cache is not None:
+        new_cache = {"attn": c_attn} if c_attn is not None else {}
+    return x, new_cache, aux
+
+
+def _encoder_mode(spec_kind: str) -> str:
+    return "full"
+
+
+def _run_segments(
+    params_segments,
+    x: jax.Array,
+    cfg: ModelConfig,
+    segs: list[Segment],
+    *,
+    positions,
+    policy,
+    shared_block=None,
+    memory=None,
+    caches=None,  # list aligned with segs; each: tuple per unit pos of stacked dicts
+    decode_pos=None,
+    encoder: bool = False,
+):
+    """Apply all segments; returns (x, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = [] if caches is not None else None
+
+    for si, seg in enumerate(segs):
+        seg_params = params_segments[si]
+        seg_cache = caches[si] if caches is not None else None
+
+        def unit_body(x, p_unit, c_unit):
+            x = seq_constrain(x, policy)
+            new_c = []
+            aux = jnp.zeros((), jnp.float32)
+            for li, spec in enumerate(seg.unit):
+                eff_spec = spec if not encoder else dataclasses.replace(spec, kind=ATTN)
+                mode_spec = eff_spec
+                x, nc, a = _apply_layer(
+                    p_unit[li], x, cfg, mode_spec,
+                    positions=positions, policy=policy,
+                    shared_block=shared_block, memory=memory,
+                    cache=None if c_unit is None else c_unit[li],
+                    decode_pos=decode_pos,
+                )
+                if encoder:
+                    pass
+                aux = aux + a
+                new_c.append(nc)
+            return x, tuple(new_c), aux
+
+        body = unit_body
+        if cfg.remat:
+            body = jax.checkpoint(unit_body)
+
+        if seg.repeats == 1 or not cfg.scan_layers:
+            # unrolled path: repeats==1 remainders, and the dry-run's
+            # cost-differencing lowerings (cfg.scan_layers=False)
+            step_caches = []
+            aux = jnp.zeros((), jnp.float32)
+            for r in range(seg.repeats):
+                p_unit = jax.tree_util.tree_map(lambda a: a[r], seg_params)
+                c_unit = (
+                    None if seg_cache is None
+                    else jax.tree_util.tree_map(lambda a: a[r], seg_cache)
+                )
+                x, nc, a = body(x, p_unit, c_unit)
+                aux = aux + a
+                step_caches.append(nc)
+            if new_caches is not None:
+                new_caches.append(
+                    jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *step_caches)
+                )
+            aux_total = aux_total + aux
+        else:
+
+            def scan_step(carry, xs):
+                x = carry
+                if seg_cache is None:
+                    p_unit = xs
+                    c_unit = None
+                else:
+                    p_unit, c_unit = xs
+                x, nc, aux = body(x, p_unit, c_unit)
+                return x, (nc, aux) if seg_cache is not None else aux
+
+            xs = seg_params if seg_cache is None else (seg_params, seg_cache)
+            x, ys = jax.lax.scan(scan_step, x, xs)
+            if seg_cache is not None:
+                nc, auxs = ys
+                new_caches.append(nc)
+            else:
+                auxs = ys
+            aux_total = aux_total + jnp.sum(auxs)
+
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens: jax.Array, cfg: ModelConfig, positions) -> jax.Array:
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + layers.sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _logits(params, x: jax.Array, cfg: ModelConfig, policy) -> jax.Array:
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings or "lm_head" not in params:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = x @ w
+    if policy is not None and policy.active:
+        logits = constrain(logits, policy, policy.data_axes, None, policy.model_axis)
+    # mask padded vocabulary
+    Vp, V = cfg.padded_vocab_size, cfg.vocab_size
+    if Vp != V:
+        mask = (jnp.arange(Vp) >= V) * jnp.asarray(-1e30, jnp.float32)
+        logits = logits + mask.astype(logits.dtype)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, policy=None) -> jax.Array:
+    """Audio encoder over stubbed (precomputed) frame embeddings."""
+    enc = params["encoder"]
+    B, S, _ = frames.shape
+    positions = jnp.arange(S)[None, :]
+    x = frames.astype(cfg.dtype) @ params["frontend_proj"].astype(cfg.dtype)
+    x = x + layers.sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+    segs = [Segment(unit=(LayerSpec(kind=ATTN),), repeats=cfg.n_encoder_layers)]
+    x, _, _ = _run_segments(
+        enc["segments"], x, cfg, segs,
+        positions=positions, policy=policy, encoder=True,
+    )
+    return layers.apply_norm(enc["final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# forward / decode / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    policy: ShardingPolicy | None = None,
+    prefix_embeds: jax.Array | None = None,  # VLM patches (B, n_pre, frontend_dim)
+    memory: jax.Array | None = None,  # whisper encoder output
+    frames: jax.Array | None = None,  # whisper raw frame embeddings
+    caches=None,
+    decode_pos=None,
+    return_hidden: bool = False,
+):
+    """Token logits for train/prefill (caches=None) or decode (caches set).
+
+    Returns (logits, new_caches, aux_loss) — plus hidden states if
+    ``return_hidden`` (used by the MTP head to avoid a second forward).
+    """
+    B, S = tokens.shape
+    if decode_pos is None:
+        positions = jnp.arange(S)[None, :]
+        n_pre = 0
+        if prefix_embeds is not None:
+            n_pre = prefix_embeds.shape[1]
+            positions = jnp.arange(n_pre + S)[None, :]
+    else:
+        positions = decode_pos[None, None] + jnp.arange(S)[None, :]
+
+    x = _embed(params, tokens, cfg, positions if prefix_embeds is None else positions[:, -S:])
+    if prefix_embeds is not None:
+        pre = prefix_embeds.astype(cfg.dtype) @ params["frontend_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([pre, x.astype(pre.dtype)], axis=1)
+
+    if policy is not None and policy.active:
+        x = constrain(x, policy, policy.data_axes, None, None)
+        x = seq_constrain(x, policy)
+
+    if cfg.is_encoder_decoder and memory is None:
+        assert frames is not None, "enc-dec model needs frames or memory"
+        memory = encode(params, frames, cfg, policy)
+
+    shared_block = params.get("shared_block")
+    segs = plan_segments(cfg)
+    x, new_caches, aux = _run_segments(
+        params["segments"], x, cfg, segs,
+        positions=positions, policy=policy,
+        shared_block=shared_block, memory=memory,
+        caches=caches, decode_pos=decode_pos,
+    )
+
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1] :]
+    logits = _logits(params, x, cfg, policy)
+    if return_hidden:
+        return logits, new_caches, aux, x
+    return logits, new_caches, aux
+
+
+def decode_step(
+    params,
+    tokens: jax.Array,  # (B, 1) current token
+    caches,
+    decode_pos: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+    *,
+    policy=None,
+    memory=None,
+):
+    """One serve step: next-token logits + updated caches."""
+    logits, new_caches, _ = forward(
+        params, tokens, cfg, policy=policy, memory=memory,
+        caches=caches, decode_pos=decode_pos,
+    )
+    return logits, new_caches
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def lm_loss(
+    params,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    policy: ShardingPolicy | None = None,
+) -> jax.Array:
+    """Causal LM loss (+ MoE aux + MTP when configured).
+
+    batch: {"tokens": (B,S), "labels": (B,S)} plus optional
+    {"prefix_embeds"} (vlm) / {"frames"} (audio enc-dec).
+    """
+    logits, _, aux, h = forward(
+        params, batch["tokens"], cfg, policy=policy,
+        prefix_embeds=batch.get("prefix_embeds"),
+        frames=batch.get("frames"),
+        return_hidden=True,
+    )
+    loss = _xent(logits, batch["labels"])
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * aux
+
+    if cfg.mtp_depth > 0:
+        # deepseek MTP: predict t+2 from [h_t ; emb(label_t)] through one
+        # extra layer; labels shifted once more.
+        mtp = params["mtp"]
+        emb_next = params["embed"].astype(cfg.dtype)[batch["labels"]]
+        hcat = jnp.concatenate(
+            [layers.apply_norm(mtp["norm_h"], h, cfg),
+             layers.apply_norm(mtp["norm_e"], emb_next, cfg)], axis=-1
+        )
+        h2 = hcat @ mtp["proj"].astype(hcat.dtype)
+        B, S = batch["tokens"].shape
+        positions = jnp.arange(S)[None, :]
+        p_unit = jax.tree_util.tree_map(lambda a: a[0], mtp["layer"])
+        h2, _, _ = _apply_layer(
+            p_unit, h2, cfg, LayerSpec(kind=ATTN),
+            positions=positions, policy=policy,
+        )
+        h2 = layers.apply_norm(mtp["final_norm"], h2, cfg)
+        logits2 = _logits(params, h2, cfg, policy)
+        # shift: position t predicts label_{t+1}
+        loss = loss + 0.3 * _xent(logits2[:, :-1], batch["labels"][:, 1:])
+    return loss

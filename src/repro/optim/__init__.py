@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    adafactor,
+    apply_fedprox,
+)
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "adafactor",
+    "apply_fedprox",
+]

@@ -1,0 +1,202 @@
+"""Local (learner-side) optimizers as pure pytree transforms.
+
+The paper's stress tests use Vanilla SGD; a production learner also needs
+momentum/Adam/AdamW, and FedProx's proximal term for heterogeneous silos.
+Implemented optax-style — ``init(params) -> state``, ``update(grads, state,
+params) -> (updates, state)`` — but self-contained (no external deps) and
+fully jit/pjit compatible: states are pytrees mirroring the params, so they
+shard with the same PartitionSpecs as the model under the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "OptState", "sgd", "momentum", "adam", "adamw", "apply_fedprox"]
+
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], OptState]
+    # (grads, state, params) -> (updates, new_state); apply: p + u
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+    def apply(self, params: Any, grads: Any, state: OptState) -> tuple[Any, OptState]:
+        updates, state = self.update(grads, state, params)
+        return jax.tree_util.tree_map(lambda p, u: p + u, params, updates), state
+
+
+def _zeros_like_tree(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _zeros_like_tree(params)
+
+    def update(grads, state, params):
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer("momentum", init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32), _zeros_like_tree(params), _zeros_like_tree(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(mh, vh, p):
+            upd = -lr * (mh / c1) / (jnp.sqrt(vh / c2) + eps)
+            if weight_decay:
+                upd = upd - lr * weight_decay * p
+            return upd
+
+        return jax.tree_util.tree_map(u, m, v, params), AdamState(step, m, v)
+
+    return init, update
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    init, update = _adam_core(lr, b1, b2, eps, 0.0)
+    return Optimizer("adam", init, update)
+
+
+def adamw(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    init, update = _adam_core(lr, b1, b2, eps, weight_decay)
+    return Optimizer("adamw", init, update)
+
+
+def apply_fedprox(loss_fn: Callable, mu: float, global_params: Any) -> Callable:
+    """Wrap a local loss with the FedProx proximal term μ/2‖w − w_global‖²."""
+
+    def prox_loss(params, *args, **kwargs):
+        base = loss_fn(params, *args, **kwargs)
+        sq = sum(
+            jnp.sum((p - g.astype(p.dtype)) ** 2)
+            for p, g in zip(
+                jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(global_params),
+            )
+        )
+        return base + 0.5 * mu * sq
+
+    return prox_loss
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moments, for the very large
+# configs whose full Adam state would not fit the per-chip HBM share
+# (deepseek-v3-671b; see DESIGN.md §4 and the roofline memory notes).
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row second-moment (last dim reduced) for >=2D leaves
+    vc: Any  # col second-moment (second-to-last dim reduced)
+    v: Any  # full second moment for <2D leaves
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay_base: float = 0.8,
+    eps1: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((), jnp.float32)
+
+        def vc(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((), jnp.float32)
+            )
+
+        def v(p):
+            return jnp.zeros((), jnp.float32) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+        t = jax.tree_util.tree_map
+        return AdafactorState(jnp.zeros((), jnp.int32), t(vr, params), t(vc, params), t(v, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay_base)
+
+        def upd(g, vr, vc, v):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if g.ndim >= 2:
+                nvr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                nvc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (
+                    nvr[..., None]
+                    * nvc[..., None, :]
+                    / jnp.maximum(jnp.mean(nvr, axis=-1, keepdims=True)[..., None], eps1)
+                )
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps1))
+                nv = v
+            else:
+                nv = beta2 * v + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(nv, eps1))
+                nvr, nvc = vr, vc
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return -lr * u, nvr, nvc, nv
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        flat_v = treedef.flatten_up_to(state.v)
+        outs = [upd(g, vr, vc, v) for g, vr, vc, v in zip(flat_g, flat_vr, flat_vc, flat_v)]
+        updates = treedef.unflatten([o[0].astype(p.dtype) for o, p in
+                                     zip(outs, treedef.flatten_up_to(params))])
+        new_state = AdafactorState(
+            step,
+            treedef.unflatten([o[1] for o in outs]),
+            treedef.unflatten([o[2] for o in outs]),
+            treedef.unflatten([o[3] for o in outs]),
+        )
+        return updates, new_state
+
+    return Optimizer("adafactor", init, update)

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses
+(test_multidevice.py)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

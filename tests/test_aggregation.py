@@ -1,0 +1,104 @@
+"""Aggregation-rule tests: FedAvg correctness + invariants, robust rules,
+staleness weighting, naive-baseline equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, naive
+
+
+def _rand_stack(n, p, seed=0):
+    return jax.random.normal(jax.random.key(seed), (n, p), jnp.float32)
+
+
+def test_fedavg_uniform_is_mean():
+    stack = _rand_stack(5, 100)
+    out = aggregation.fedavg(stack, jnp.ones((5,)))
+    np.testing.assert_allclose(out, jnp.mean(stack, 0), rtol=1e-5, atol=1e-7)
+
+
+def test_fedavg_weighted():
+    stack = jnp.stack([jnp.zeros((10,)), jnp.ones((10,))])
+    out = aggregation.fedavg(stack, jnp.asarray([1.0, 3.0]))
+    np.testing.assert_allclose(out, 0.75 * jnp.ones((10,)), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    p=st.integers(1, 64),
+    seed=st.integers(0, 100),
+)
+def test_fedavg_invariants(n, p, seed):
+    """Convexity: the average lies inside the per-coordinate envelope, and
+    aggregation is permutation-invariant."""
+    stack = _rand_stack(n, p, seed)
+    w = jax.random.uniform(jax.random.key(seed + 1), (n,)) + 0.01
+    out = aggregation.fedavg(stack, w)
+    assert bool(jnp.all(out <= jnp.max(stack, 0) + 1e-5))
+    assert bool(jnp.all(out >= jnp.min(stack, 0) - 1e-5))
+    perm = jax.random.permutation(jax.random.key(seed + 2), n)
+    out_p = aggregation.fedavg(stack[perm], w[perm])
+    np.testing.assert_allclose(out, out_p, rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_zero_weights_falls_back_uniform():
+    stack = _rand_stack(4, 16)
+    out = aggregation.fedavg(stack, jnp.zeros((4,)))
+    np.testing.assert_allclose(out, jnp.mean(stack, 0), rtol=1e-5)
+
+
+def test_median_resists_outlier():
+    base = jnp.ones((5, 32))
+    stack = base.at[0].set(1e6)  # byzantine learner
+    out = aggregation.coordinate_median(stack)
+    np.testing.assert_allclose(out, jnp.ones((32,)), rtol=1e-6)
+
+
+def test_trimmed_mean_resists_outliers():
+    stack = jnp.concatenate([jnp.ones((4, 8)), jnp.full((1, 8), 1e9)], 0)
+    out = aggregation.trimmed_mean(stack, trim_k=1)
+    np.testing.assert_allclose(out, jnp.ones((8,)), rtol=1e-6)
+    with pytest.raises(ValueError):
+        aggregation.trimmed_mean(stack, trim_k=3)
+
+
+def test_staleness_weights_monotone():
+    n = jnp.ones((4,)) * 100
+    s = jnp.asarray([0.0, 1.0, 5.0, 50.0])
+    w = aggregation.staleness_weights(n, s, alpha=0.5)
+    assert bool(jnp.all(jnp.diff(w) < 0))  # staler -> strictly less weight
+    np.testing.assert_allclose(w[0], 100.0)
+
+
+def test_naive_aggregate_matches_fused():
+    """The paper's old-controller baseline must be numerically equivalent —
+    it is only *slower*, which benchmarks/bench_agg.py quantifies."""
+    models = []
+    for i in range(4):
+        k = jax.random.key(i)
+        models.append({
+            "w1": jax.random.normal(k, (16, 8)),
+            "b1": jax.random.normal(jax.random.fold_in(k, 1), (8,)),
+        })
+    weights = [1.0, 2.0, 3.0, 4.0]
+    out_naive = naive.naive_aggregate(models, weights)
+
+    from repro.core import packing
+    stack = jnp.stack([packing.pack_numeric(m) for m in models])
+    out_fused = aggregation.fedavg(stack, jnp.asarray(weights))
+    m = packing.build_manifest(models[0])
+    out_fused_tree = packing.unpack_numeric(out_fused, m)
+    for a, b in zip(jax.tree_util.tree_leaves(out_naive),
+                    jax.tree_util.tree_leaves(out_fused_tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_naive_serialize_roundtrip():
+    params = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    blobs = naive.naive_serialize(params)
+    back = naive.naive_deserialize(blobs, jax.tree_util.tree_structure(params))
+    np.testing.assert_array_equal(back["w"], params["w"])

@@ -1,0 +1,120 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels execute in interpret mode on CPU (the TPU lowering is proven
+structurally by pl.pallas_call + BlockSpec; numerics validated here).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.fedavg import fedavg_pallas
+from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+
+
+# ---------------------------------------------------------------------------
+# fedavg kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64])
+@pytest.mark.parametrize("p", [1024, 16384, 50_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_kernel_sweep(n, p, dtype):
+    stack = (jax.random.normal(jax.random.key(n * p), (n, p)) * 3).astype(dtype)
+    w = jax.random.uniform(jax.random.key(p), (n,)) + 0.05
+    got = ops.fedavg(stack, w)
+    want = ref.fedavg_ref(stack, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_fedavg_kernel_block_shapes():
+    stack = jax.random.normal(jax.random.key(0), (4, 8192), jnp.float32)
+    w = jnp.ones((4,))
+    want = ref.fedavg_ref(stack, w)
+    for block_p in (1024, 2048, 8192):
+        got = fedavg_pallas(stack, w, block_p=block_p, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 12), seed=st.integers(0, 99))
+def test_fedavg_kernel_property_matches_oracle(n, seed):
+    p = 2048
+    stack = jax.random.normal(jax.random.key(seed), (n, p), jnp.float32)
+    w = jax.random.uniform(jax.random.key(seed + 1), (n,)) + 0.01
+    np.testing.assert_allclose(
+        np.asarray(ops.fedavg(stack, w)), np.asarray(ref.fedavg_ref(stack, w)),
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantize kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("size", [16384, 65536, 100_000])
+def test_quantize_kernel_matches_ref(size):
+    x = jax.random.normal(jax.random.key(size), (size,), jnp.float32) * 5
+    q, s = ops.quantize(x)
+    pad = q.shape[0]
+    qr, sr = ref.quantize_ref(jnp.pad(x, (0, pad - size)))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.key(1), (32768,), jnp.float32) * 10
+    q, s = ops.quantize(x)
+    back = ops.dequantize(q, s, 32768)
+    # per-group bound: |err| <= scale/2 = max|x|_group / 254
+    xg = np.asarray(x).reshape(-1, 256)
+    bound = np.abs(xg).max(1, keepdims=True) / 254.0 + 1e-7
+    err = np.abs(np.asarray(back).reshape(-1, 256) - xg)
+    assert (err <= bound).all()
+
+
+def test_quantize_zero_block_safe():
+    x = jnp.zeros((16384,), jnp.float32)
+    q, s = ops.quantize(x)
+    assert bool(jnp.all(q == 0))
+    back = ops.dequantize(q, s, 16384)
+    assert bool(jnp.all(back == 0))
+
+
+def test_quant_codec_roundtrip_mixed_tree():
+    tree = {
+        "w": jax.random.normal(jax.random.key(0), (33, 57), jnp.bfloat16),
+        "b": jax.random.normal(jax.random.key(1), (129,), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    dec = ops.QuantCodec.decode(ops.QuantCodec.encode(tree))
+    assert dec["w"].shape == (33, 57) and dec["w"].dtype == jnp.bfloat16
+    assert dec["b"].dtype == jnp.float32
+    assert int(dec["step"]) == 7
+    rel = np.abs(np.asarray(dec["b"]) - np.asarray(tree["b"]))
+    assert rel.max() < np.abs(np.asarray(tree["b"])).max() / 100
+
+
+def test_choose_block_p_fits_vmem():
+    from repro.kernels.fedavg import VMEM_BUDGET_BYTES, choose_block_p
+
+    for n in (2, 8, 50, 200, 1000):
+        bp = choose_block_p(n)
+        working = 2 * n * bp * 4 + bp * 4 + n * 4
+        assert working <= VMEM_BUDGET_BYTES, (n, bp, working)
+        assert bp % 1024 == 0 or bp == 1024
+        got = ops.fedavg(
+            jax.random.normal(jax.random.key(n), (n, 4096), jnp.float32),
+            jnp.ones((n,)),
+        )
+        want = ref.fedavg_ref(
+            jax.random.normal(jax.random.key(n), (n, 4096), jnp.float32),
+            jnp.ones((n,)),
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

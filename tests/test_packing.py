@@ -1,0 +1,89 @@
+"""Packing / wire-format tests: roundtrip properties, manifest integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+# -- strategies --------------------------------------------------------------
+
+_dtypes = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16, jnp.int32])
+_shapes = st.lists(st.integers(1, 5), min_size=0, max_size=3).map(tuple)
+
+
+@st.composite
+def pytrees(draw):
+    n = draw(st.integers(1, 5))
+    tree = {}
+    for i in range(n):
+        shape = draw(_shapes)
+        dtype = draw(_dtypes)
+        size = int(np.prod(shape)) if shape else 1
+        vals = draw(
+            st.lists(
+                st.floats(-100, 100, allow_nan=False, width=16),
+                min_size=size, max_size=size,
+            )
+        )
+        arr = jnp.asarray(np.array(vals, np.float32).reshape(shape)).astype(dtype)
+        tree[f"leaf_{i}"] = arr
+    return tree
+
+
+# -- properties --------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(pytrees())
+def test_numeric_roundtrip(tree):
+    m = packing.build_manifest(tree)
+    buf = packing.pack_numeric(tree)
+    assert buf.shape == (m.total_elements,)
+    back = packing.unpack_numeric(buf, m)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-2, atol=1e-2
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(pytrees())
+def test_bytes_roundtrip_bitexact(tree):
+    buf, m = packing.pack_bytes(tree)
+    assert buf.dtype == np.uint8 and buf.shape == (m.total_bytes,)
+    back = packing.unpack_bytes(buf, m)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_manifest_offsets_contiguous():
+    tree = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((5,), jnp.bfloat16), "c": jnp.zeros(())}
+    m = packing.build_manifest(tree)
+    offset = 0
+    for spec in m.specs:
+        assert spec.offset == offset
+        offset += spec.size
+    assert m.total_elements == offset == 3 * 4 + 5 + 1
+
+
+def test_pack_numeric_jit_compatible():
+    tree = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    out = jax.jit(packing.pack_numeric)(tree)
+    assert out.shape == (20,)
+
+
+def test_num_params():
+    tree = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,)), "s": jnp.zeros(())}
+    assert packing.num_params(tree) == 21
+
+
+def test_unpack_restores_structure():
+    tree = {"outer": {"inner": [jnp.ones((2,)), jnp.zeros((3,))]}}
+    m = packing.build_manifest(tree)
+    back = packing.unpack_numeric(packing.pack_numeric(tree), m)
+    assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(tree)

@@ -1,0 +1,62 @@
+"""Secure-aggregation properties: exact mask cancellation, quantization bound,
+and upload indistinguishability from the per-learner view."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import secure
+from repro.core.aggregation import fedavg
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    p=st.integers(1, 128),
+    seed=st.integers(0, 1000),
+)
+def test_secure_fedavg_matches_plain(n, p, seed):
+    """Masks cancel exactly; the only error is fixed-point quantization,
+    bounded by n/(2*scale) per coordinate."""
+    buffers = [
+        jax.random.normal(jax.random.key(seed + i), (p,), jnp.float32)
+        for i in range(n)
+    ]
+    weights = [float(i + 1) for i in range(n)]
+    got = secure.secure_fedavg(buffers, weights, base_seed=seed)
+    want = fedavg(jnp.stack(buffers), jnp.asarray(weights))
+    bound = n / (2.0 * secure.FIXED_SCALE) + 1e-6
+    assert float(jnp.max(jnp.abs(got - want))) <= bound
+
+
+def test_net_masks_sum_to_zero():
+    masker = secure.PairwiseMasker(base_seed=42, participants=(0, 1, 2, 3))
+    total = sum(masker.net_mask(i, 64) for i in range(4))
+    assert bool(jnp.all(total == 0))
+
+
+def test_upload_is_masked():
+    """A single upload must differ wildly from its plaintext encoding (one-
+    time-pad over Z_2^32): check it's not simply the fixed-point encoding."""
+    masker = secure.PairwiseMasker(base_seed=7, participants=(0, 1))
+    x = jnp.ones((256,), jnp.float32)
+    upload = secure.mask_upload(masker, 0, x)
+    plain = secure.encode_fixed(x)
+    # all-but-vanishing coordinates must be perturbed
+    frac_equal = float(jnp.mean((upload == plain).astype(jnp.float32)))
+    assert frac_equal < 0.01
+
+
+def test_masks_change_with_seed_and_pair():
+    m1 = secure.PairwiseMasker(1, (0, 1)).net_mask(0, 32)
+    m2 = secure.PairwiseMasker(2, (0, 1)).net_mask(0, 32)
+    assert not bool(jnp.all(m1 == m2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_fixed_point_codec_bound(seed):
+    x = jax.random.normal(jax.random.key(seed), (512,), jnp.float32) * 10
+    back = secure.decode_fixed(secure.encode_fixed(x))
+    assert float(jnp.max(jnp.abs(back - x))) <= 0.5 / secure.FIXED_SCALE + 1e-7
