@@ -2,7 +2,7 @@
 sequential per-tensor controller (Figs. 5c/6c/7c, 'MetisFL gRPC + OpenMP' vs
 'MetisFL gRPC').
 
-Arms:
+Arms (``run``):
   naive   — per-tensor, per-learner Python-loop FedAvg (the old controller)
   fused   — packed (N,P) single-reduction XLA FedAvg (this repo's controller)
   kernel  — the Pallas fedavg kernel (interpret mode on CPU: correctness-
@@ -11,18 +11,29 @@ Arms:
 
 Model sizes follow the paper: 100k / 1M / 10M params as 100-layer MLPs, so
 the naive arm pays the per-tensor Python overhead ~200x per aggregation.
+
+Arena-vs-stack comparison (``run_compare``, ``--compare``): the controller's
+per-round aggregation latency with the legacy path (rebuild the ``(N, P)``
+stack with ``jnp.stack``, then reduce) against the device-resident arena
+(rows were written in place at arrival — off the critical path — so the
+round's aggregation is just one masked reduction).  Also reports the arena's
+per-upload row-write cost, which the stack path pays *again* as part of every
+aggregation.  JSON output via ``--json`` for the CI nightly artifact.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.timing import bench
 from repro.configs import housing_mlp
 from repro.core import aggregation, naive, packing
 from repro.core.secure import secure_fedavg
+from repro.core.store import ArenaStore
 from repro.models import mlp as mlp_model
 
 
@@ -73,5 +84,105 @@ def run(sizes=("100k", "1m", "10m"), learner_counts=(10, 25, 50), iters=3):
     return rows
 
 
+def run_compare(learner_counts=(8, 32, 64), param_counts=(1 << 20, 1 << 22),
+                iters=10):
+    """Arena-vs-stack per-round aggregation latency.
+
+    Both arms aggregate the same N fresh learner uploads:
+
+    * **stack** — what ``Controller._aggregate(store_mode="stack")`` runs per
+      round: ``jnp.stack`` over the N stored buffers (the O(N·P) rebuild)
+      followed by the fused reduction.
+    * **arena** — what ``store_mode="arena"`` runs per round: one masked
+      reduction straight over the persistent device buffer.  Uploads were
+      written in place at arrival (overlapped with the training round);
+      ``arena_write_s`` reports that per-upload cost for honesty — the stack
+      path pays the equivalent copy *inside* the timed aggregation instead.
+    """
+    rows = []
+    for p in param_counts:
+        for n in learner_counts:
+            buffers = [
+                jax.random.normal(jax.random.key(i), (p,), jnp.float32)
+                for i in range(n)
+            ]
+            jax.block_until_ready(buffers)
+            weights = [float(10 * (i + 1)) for i in range(n)]
+            w = jnp.asarray(weights, jnp.float32)
+
+            def stack_round():
+                stack = jnp.stack(buffers, axis=0)
+                return aggregation.fedavg(stack, w)
+
+            t_stack = bench(stack_round, warmup=2, iters=iters)
+
+            arena = ArenaStore(num_params=p, n_max=n, row_align=1024)
+            for i, buf in enumerate(buffers):
+                arena.write(f"l{i}", buf, weight=weights[i])
+
+            def arena_round():
+                with arena.lock:
+                    return aggregation.masked_weighted_average(
+                        arena.buffer, arena.weights, arena.mask
+                    )[: arena.num_params]
+
+            t_arena = bench(arena_round, warmup=2, iters=iters)
+
+            # per-upload in-place row write (amortized at arrival, off the
+            # aggregation critical path) — blocked on the device copy so the
+            # reported cost is the real O(P) write, not dispatch overhead
+            def arena_write():
+                arena.write("l0", buffers[0], weight=weights[0])
+                jax.block_until_ready(arena.buffer)
+
+            t_write = bench(arena_write, warmup=2, iters=iters, block=False)
+
+            speedup = t_stack / t_arena
+            row = {
+                "bench": "arena_vs_stack", "params": p, "learners": n,
+                "stack_round_s": t_stack, "arena_round_s": t_arena,
+                "arena_write_s": t_write,
+                "speedup_arena_vs_stack": speedup,
+            }
+            rows.append(row)
+            print(
+                f"compare,P={p},N={n},stack={t_stack*1e3:.2f}ms,"
+                f"arena={t_arena*1e3:.2f}ms,write={t_write*1e3:.3f}ms,"
+                f"speedup={speedup:.2f}x",
+                flush=True,
+            )
+            del arena, buffers
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", action="store_true",
+                    help="arena-vs-stack per-round aggregation latency")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (seconds, not minutes)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump result rows as JSON")
+    args = ap.parse_args(argv)
+
+    if args.compare:
+        if args.smoke:
+            rows = run_compare(learner_counts=(4, 8), param_counts=(1 << 16,),
+                               iters=3)
+        else:
+            rows = run_compare()
+    else:
+        if args.smoke:
+            rows = run(sizes=("100k",), learner_counts=(4,), iters=2)
+        else:
+            rows = run()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.json}", flush=True)
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    main()

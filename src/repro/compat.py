@@ -1,0 +1,35 @@
+"""Version-compat shims for the pinned JAX toolchain.
+
+``jax.shard_map`` became a top-level export (with the ``check_vma`` kwarg)
+only in newer JAX; on the 0.4.x toolchain this container bakes in it lives in
+``jax.experimental.shard_map`` and the kwarg is called ``check_rep``.
+Likewise ``jax.sharding.AxisType`` (explicit-sharding axis modes) does not
+exist on 0.4.x, where every mesh axis is implicitly Auto.  Import
+:func:`shard_map` / :func:`make_auto_mesh` from here so every call site works
+on both.
+"""
+
+from __future__ import annotations
+
+__all__ = ["shard_map", "make_auto_mesh"]
+
+try:
+    from jax import shard_map  # noqa: F401  (JAX >= 0.6: check_vma spelling)
+except ImportError:  # pragma: no cover - depends on installed JAX
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, /, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_experimental(f, *args, **kwargs)
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with every axis in Auto mode, on any JAX version."""
+    import jax
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:  # pragma: no cover - depends on installed JAX
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

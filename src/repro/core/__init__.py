@@ -15,6 +15,7 @@ from repro.core.packing import (
     num_params,
     pack_bytes,
     pack_numeric,
+    round_up,
     unpack_bytes,
     unpack_numeric,
 )
@@ -23,11 +24,14 @@ from repro.core.aggregation import (
     fedavg,
     fedavg_sharded,
     hierarchical_fedavg,
+    masked_fedavg,
+    masked_staleness_average,
+    masked_weighted_average,
     staleness_weights,
     trimmed_mean,
     weighted_average,
 )
-from repro.core.store import ModelRecord, ModelStore
+from repro.core.store import ArenaStore, ModelRecord, ModelStore
 from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
 from repro.core.selection import SelectionPolicy, select_learners
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
@@ -38,10 +42,11 @@ from repro.core.transport import Channel, ChannelStats, Envelope
 
 __all__ = [
     "Manifest", "TensorSpec", "build_manifest", "num_params",
-    "pack_bytes", "pack_numeric", "unpack_bytes", "unpack_numeric",
+    "pack_bytes", "pack_numeric", "round_up", "unpack_bytes", "unpack_numeric",
     "fedavg", "weighted_average", "coordinate_median", "trimmed_mean",
+    "masked_fedavg", "masked_staleness_average", "masked_weighted_average",
     "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
-    "ModelRecord", "ModelStore",
+    "ModelRecord", "ModelStore", "ArenaStore",
     "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",
     "SelectionPolicy", "select_learners",
     "ServerOptimizer", "make_server_optimizer",

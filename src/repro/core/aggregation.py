@@ -35,6 +35,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "fedavg",
     "weighted_average",
+    "masked_normalize",
+    "masked_weighted_average",
+    "masked_fedavg",
+    "masked_staleness_average",
     "coordinate_median",
     "trimmed_mean",
     "staleness_weights",
@@ -66,6 +70,64 @@ def weighted_average(stack: jax.Array, weights: jax.Array) -> jax.Array:
 
 # FedAvg is a weighted average with example counts as weights.
 fedavg = weighted_average
+
+
+def masked_normalize(weights: jax.Array, mask: jax.Array) -> jax.Array:
+    """Normalize ``weights * mask``; uniform over valid rows if all zero."""
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(mask, jnp.float32)
+    total = jnp.sum(w)
+    n_valid = jnp.sum(jnp.asarray(mask, jnp.float32))
+    uniform = jnp.asarray(mask, jnp.float32) / jnp.maximum(n_valid, 1.0)
+    return jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0), uniform)
+
+
+@jax.jit
+def masked_weighted_average(
+    arena: jax.Array, weights: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """``(N, P) × (N,) × (N,) -> (P,)`` weighted mean over valid rows only.
+
+    The arena-store statement of FedAvg: ``arena`` is the persistent
+    device-resident buffer (``core/store.ArenaStore``) whose rows may include
+    stale or never-written learners; ``mask`` (1.0 valid / 0.0 invalid) folds
+    row selection into the weight vector so the reduction stays one fused
+    einsum — no gather, no re-stack, no host round-trip.  Invalid rows are
+    zeroed before the reduce so even garbage (e.g. NaN) in a dead row cannot
+    poison the aggregate.
+    """
+    m = jnp.asarray(mask, jnp.float32)
+    w = masked_normalize(weights, m)
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
+    return jnp.einsum("n,np->p", w, rows)
+
+
+# Masked FedAvg is a masked weighted average with example counts as weights.
+masked_fedavg = masked_weighted_average
+
+
+@jax.jit
+def masked_staleness_average(
+    arena: jax.Array,
+    num_examples: jax.Array,
+    versions: jax.Array,
+    current_version: jax.Array,
+    mask: jax.Array,
+    alpha: float = 0.5,
+) -> jax.Array:
+    """Asynchronous-protocol aggregation straight off the arena.
+
+    Staleness is derived on device from the per-row ``versions`` vector the
+    arena maintains (``s_i = current_version - v_i``), damped by the
+    polynomial discount of :func:`staleness_weights`, masked, normalized and
+    reduced — one fused kernel per community update instead of a host-side
+    stack rebuild per arrival.
+    """
+    m = jnp.asarray(mask, jnp.float32)
+    stal = jnp.maximum(jnp.float32(current_version) - versions, 0.0)
+    w = staleness_weights(num_examples, stal, alpha)
+    w = masked_normalize(w, m)
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
+    return jnp.einsum("n,np->p", w, rows)
 
 
 @jax.jit
@@ -144,7 +206,7 @@ def hierarchical_fedavg(mesh: Mesh, pod_axis: str = "pod"):
         agg = jax.lax.psum(contrib, pod_axis) / jnp.maximum(wsum, 1e-12)
         return agg
 
-    from jax import shard_map
+    from repro.compat import shard_map
 
     return shard_map(
         agg,

@@ -11,6 +11,13 @@ re-engineered operations of §3:
 * **packed aggregation** — local models are packed once at upload
   (``pack_numeric``) and aggregated as a fused ``(N, P)`` reduction
   (``core/aggregation``), optionally through the Pallas kernel or secure path.
+* **device-resident arena** (``store_mode="arena"``, the default) — uploads
+  are donated in-place row writes into a persistent ``(n_max, P)`` device
+  buffer (``core/store.ArenaStore``) and every aggregation is a single masked
+  reduction straight over that buffer: the hot path never re-stacks the
+  ``(N, P)`` array or round-trips through the host.  ``store_mode="stack"``
+  keeps the legacy per-upload-buffer + ``jnp.stack`` path for parity testing
+  (``benchmarks/bench_agg.py --compare`` measures the difference).
 * **per-op timing** — the controller measures exactly the six operations the
   paper's stress test reports: train dispatch, train round, aggregation,
   eval dispatch, eval round, federation round.
@@ -35,7 +42,7 @@ from repro.core.learner import EvalReport, Learner, LocalUpdate
 from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
 from repro.core.selection import SelectionPolicy, select_learners
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
-from repro.core.store import ModelRecord, ModelStore
+from repro.core.store import ArenaStore, ModelRecord, ModelStore
 from repro.core.transport import Channel
 
 __all__ = ["RoundTimings", "Controller"]
@@ -79,6 +86,16 @@ class Controller:
     aggregate_fn:
         ``(stack (N,P), weights (N,)) -> (P,)``.  Defaults to the fused
         FedAvg; swap in the Pallas kernel op or a robust rule.
+    store_mode:
+        ``"arena"`` (default) aggregates straight off the device-resident
+        :class:`ArenaStore`; ``"stack"`` is the legacy re-stack path.
+    masked_aggregate_fn:
+        ``(arena (N_max,P), weights (N_max,), mask (N_max,)) -> (P,)`` — the
+        arena-path rule.  Defaults to the fused masked FedAvg (or, if a
+        custom ``aggregate_fn`` was given, to ``aggregate_fn`` with the mask
+        folded into the weights — correct for the weighted-average family,
+        not for order statistics like the median; pass an explicit masked
+        rule for those).
     secure:
         If True, uploads are mask-encoded and the controller only sums
         (``core/secure``) — it never sees an individual model.
@@ -95,12 +112,37 @@ class Controller:
         secure: bool = False,
         max_dispatch_workers: int = 32,
         secure_seed: int = 0,
+        store_mode: str = "arena",
+        masked_aggregate_fn: Callable | None = None,
+        arena_n_max: int = 8,
+        arena_row_align: int = 1024,
     ):
+        if store_mode not in ("arena", "stack"):
+            raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
+        if store is not None and store_mode == "arena":
+            # An explicit hash-map store would be silently bypassed by the
+            # arena hot path — refuse the contradiction instead.
+            raise ValueError(
+                "store= is only honoured with store_mode='stack'; the arena "
+                "mode keeps uploads in its device-resident ArenaStore"
+            )
         self.protocol = protocol or SyncProtocol()
         self.selection = selection or SelectionPolicy()
         self.aggregate_fn = aggregate_fn or aggregation.fedavg
+        if masked_aggregate_fn is not None:
+            self.masked_aggregate_fn = masked_aggregate_fn
+        elif aggregate_fn is not None:
+            self.masked_aggregate_fn = (
+                lambda arena, w, m: aggregate_fn(arena, w * m)
+            )
+        else:
+            self.masked_aggregate_fn = aggregation.masked_weighted_average
         self.server_opt = server_optimizer or make_server_optimizer("fedavg")
         self.store = store or ModelStore()
+        self.store_mode = store_mode
+        self.arena: ArenaStore | None = None
+        self._arena_n_max = arena_n_max
+        self._arena_row_align = arena_row_align
         self.channel = channel or Channel()
         self.secure = secure
         self.secure_seed = secure_seed
@@ -127,6 +169,12 @@ class Controller:
         self.manifest = packing.build_manifest(params)
         self.global_buffer = packing.pack_numeric(params)
         self._server_state = self.server_opt.init(self.global_buffer)
+        if self.store_mode == "arena":
+            self.arena = ArenaStore(
+                num_params=max(1, int(self.global_buffer.shape[0])),
+                n_max=max(self._arena_n_max, len(self._learners)),
+                row_align=self._arena_row_align,
+            )
 
     def register_learner(self, learner: Learner) -> None:
         self._learners[learner.learner_id] = learner
@@ -159,7 +207,27 @@ class Controller:
         return futures, dispatch_s
 
     def _mark_task_completed(self, update: LocalUpdate) -> None:
-        """MarkTaskCompleted: pack + (secure-encode) + insert into the store."""
+        """MarkTaskCompleted: pack + insert into the store.
+
+        Arena mode packs straight into the learner's assigned arena row (a
+        donated in-place device write — the upload never becomes a standalone
+        buffer the aggregation would later have to re-stack).  Stack mode
+        inserts a standalone packed buffer into the hash-map store.
+        """
+        if self.store_mode == "arena":
+            buffer = packing.pack_numeric(
+                update.params, pad_to=self.arena.padded_params
+            )
+            self.arena.write(
+                update.learner_id,
+                buffer,
+                weight=float(update.num_examples),
+                version=float(self._learner_versions.get(update.learner_id, 0)),
+            )
+            with self._store_lock:
+                prof = self._learner_profiles[update.learner_id]
+                prof["seconds_per_step"] = update.seconds_per_step
+            return
         buffer = packing.pack_numeric(update.params)
         with self._store_lock:
             self.store.insert(
@@ -180,25 +248,36 @@ class Controller:
 
     # ------------------------------------------------------------- aggregate
     def _aggregate(self, selected: Sequence[str]) -> tuple[jax.Array, float]:
-        """Select + aggregate stored local models (paper T4-T7)."""
+        """Select + aggregate stored local models (paper T4-T7).
+
+        Arena mode: one masked reduction straight over the persistent device
+        buffer — row writes already happened at arrival, so the round's
+        critical path is just the reduce.  Stack mode: re-stack the stored
+        buffers into an ``(N, P)`` array first (the legacy O(N·P) host copy).
+        """
         t0 = time.perf_counter()
-        with self._store_lock:
-            records = self.store.select_latest(list(selected))
-        if not records:
-            raise RuntimeError("no local models available to aggregate")
-
-        if self.secure:
-            from repro.core import secure as secure_mod
-
-            buffers = [r.buffer for r in records]
-            weights = [float(r.num_examples) for r in records]
-            new_buffer = secure_mod.secure_fedavg(
-                buffers, weights, base_seed=self.secure_seed + self.round_id
-            )
+        if self.store_mode == "arena":
+            new_buffer = self._aggregate_arena(selected)
         else:
-            stack = jnp.stack([r.buffer for r in records], axis=0)
-            weights = jnp.asarray([float(r.num_examples) for r in records], jnp.float32)
-            new_buffer = self.aggregate_fn(stack, weights)
+            with self._store_lock:
+                records = self.store.select_latest(list(selected))
+            if not records:
+                raise RuntimeError("no local models available to aggregate")
+
+            if self.secure:
+                from repro.core import secure as secure_mod
+
+                buffers = [r.buffer for r in records]
+                weights = [float(r.num_examples) for r in records]
+                new_buffer = secure_mod.secure_fedavg(
+                    buffers, weights, base_seed=self.secure_seed + self.round_id
+                )
+            else:
+                stack = jnp.stack([r.buffer for r in records], axis=0)
+                weights = jnp.asarray(
+                    [float(r.num_examples) for r in records], jnp.float32
+                )
+                new_buffer = self.aggregate_fn(stack, weights)
 
         # server-side optimization on the packed buffer
         self._server_state, new_buffer = self.server_opt.apply(
@@ -211,6 +290,31 @@ class Controller:
         self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
         self._model_version += 1
         return new_buffer, agg_s
+
+    def _aggregate_arena(self, selected: Sequence[str]) -> jax.Array:
+        """Masked reduction over the arena restricted to the round's cohort."""
+        arena = self.arena
+        with arena.lock:
+            if self.secure:
+                from repro.core import secure as secure_mod
+
+                rows, weights = [], []
+                for lid in selected:
+                    if lid in arena:
+                        rows.append(arena.row_of(lid))
+                        weights.append(arena.weight_of(lid))
+                if not rows:
+                    raise RuntimeError("no local models available to aggregate")
+                return secure_mod.secure_fedavg_arena(
+                    arena.buffer, rows, weights,
+                    num_params=arena.num_params,
+                    base_seed=self.secure_seed + self.round_id,
+                )
+            mask = arena.round_mask(list(selected))
+            if not float(jnp.sum(mask)) > 0:
+                raise RuntimeError("no local models available to aggregate")
+            out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
+            return out[: arena.num_params]
 
     # ------------------------------------------------------------ eval round
     def _evaluate(self, selected: Sequence[str]) -> tuple[list[EvalReport], float, float]:
@@ -289,16 +393,32 @@ class Controller:
             nonlocal completed
             timings = RoundTimings(round_id=self.round_id)
             t0 = time.perf_counter()
-            with self._store_lock:
-                records = self.store.select_latest(None)  # all known models
-                stal = jnp.asarray(
-                    [self._model_version - r.metadata.get("model_version", 0) for r in records],
-                    jnp.float32,
-                )
-                n_ex = jnp.asarray([float(r.num_examples) for r in records], jnp.float32)
-                stack = jnp.stack([r.buffer for r in records], axis=0)
-            w = aggregation.staleness_weights(n_ex, stal, alpha)
-            new_buffer = self.aggregate_fn(stack, w)
+            if self.store_mode == "arena":
+                # Staleness-weighted masked reduction straight off the arena:
+                # the arrival that triggered this update was already written
+                # in place by _mark_task_completed, so there is no per-arrival
+                # stack rebuild — the paper's "community update request" cost
+                # is one fused kernel regardless of federation size.
+                arena = self.arena
+                with arena.lock:
+                    new_buffer = aggregation.masked_staleness_average(
+                        arena.buffer, arena.weights, arena.versions,
+                        jnp.float32(self._model_version), arena.mask, alpha,
+                    )[: arena.num_params]
+            else:
+                with self._store_lock:
+                    records = self.store.select_latest(None)  # all known models
+                    stal = jnp.asarray(
+                        [self._model_version - r.metadata.get("model_version", 0)
+                         for r in records],
+                        jnp.float32,
+                    )
+                    n_ex = jnp.asarray(
+                        [float(r.num_examples) for r in records], jnp.float32
+                    )
+                    stack = jnp.stack([r.buffer for r in records], axis=0)
+                w = aggregation.staleness_weights(n_ex, stal, alpha)
+                new_buffer = self.aggregate_fn(stack, w)
             self._server_state, new_buffer = self.server_opt.apply(
                 self._server_state, self.global_buffer, new_buffer
             )

@@ -54,6 +54,10 @@ class FederationEnv:
     secure_aggregation: bool = False
     lineage_length: int = 1
     store_capacity_bytes: int | None = None
+    # "arena" | "stack" | "auto": auto picks the legacy hash-map store when
+    # its exclusive features (lineage > 1, byte-capacity eviction) are
+    # configured, and the device-resident arena otherwise.
+    store_mode: str = "auto"
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
@@ -80,14 +84,22 @@ class Driver:
 
     def __init__(self, env: FederationEnv, aggregate_fn=None):
         self.env = env
+        store_mode = env.store_mode
+        if store_mode == "auto":
+            wants_hash_map = env.lineage_length > 1 or env.store_capacity_bytes is not None
+            store_mode = "stack" if wants_hash_map else "arena"
         self.controller = Controller(
             protocol=env.make_protocol(),
             selection=env.selection,
             aggregate_fn=aggregate_fn,
             server_optimizer=make_server_optimizer(env.server_optimizer, lr=env.server_lr),
-            store=ModelStore(env.lineage_length, env.store_capacity_bytes),
+            store=(
+                ModelStore(env.lineage_length, env.store_capacity_bytes)
+                if store_mode == "stack" else None
+            ),
             channel=Channel(env.bandwidth_gbps, env.latency_ms),
             secure=env.secure_aggregation,
+            store_mode=store_mode,
         )
         self._learners: list[Learner] = []
         self._last_heartbeat = 0.0

@@ -38,7 +38,15 @@ __all__ = [
     "pack_bytes",
     "unpack_bytes",
     "num_params",
+    "round_up",
 ]
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``n``."""
+    if multiple <= 0:
+        raise ValueError("multiple must be positive")
+    return ((n + multiple - 1) // multiple) * multiple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,18 +133,30 @@ def num_params(params: Any) -> int:
 # ---------------------------------------------------------------------------
 
 
-def pack_numeric(params: Any, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+def pack_numeric(
+    params: Any, dtype: jnp.dtype = jnp.float32, pad_to: int | None = None
+) -> jax.Array:
     """Flatten a pytree into one 1-D buffer in the accumulation dtype.
 
     jit-compatible; under ``pjit`` the output buffer inherits a sharding over
     the flattened dimension, so the downstream aggregation reduce is local to
     every device (no collectives) — see ``core/aggregation.py``.
+
+    ``pad_to`` zero-pads the buffer length up to the next multiple — the
+    VPU-lane alignment the arena store (``core/store.ArenaStore``) and the
+    Pallas kernels tile on, so an aligned upload is one full-row write with no
+    per-call padding downstream.  ``unpack_numeric`` is oblivious: the
+    manifest records the logical offsets and the zero tail never escapes.
     """
     leaves = jax.tree_util.tree_leaves(params)
     if not leaves:
-        return jnp.zeros((0,), dtype=dtype)
-    flat = [jnp.ravel(jnp.asarray(l)).astype(dtype) for l in leaves]
-    return jnp.concatenate(flat, axis=0)
+        buf = jnp.zeros((0,), dtype=dtype)
+    else:
+        flat = [jnp.ravel(jnp.asarray(l)).astype(dtype) for l in leaves]
+        buf = jnp.concatenate(flat, axis=0)
+    if pad_to is not None and buf.shape[0] % pad_to:
+        buf = jnp.pad(buf, (0, round_up(buf.shape[0], pad_to) - buf.shape[0]))
+    return buf
 
 
 def unpack_numeric(buffer: jax.Array, manifest: Manifest) -> Any:

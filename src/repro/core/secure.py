@@ -37,6 +37,7 @@ __all__ = [
     "encode_fixed",
     "decode_fixed",
     "secure_fedavg",
+    "secure_fedavg_arena",
     "FIXED_SCALE",
 ]
 
@@ -113,5 +114,40 @@ def secure_fedavg(
         raise ValueError("weights must sum to a positive value")
     total = jnp.zeros((buffers[0].shape[0],), jnp.int32)
     for i, (buf, w) in enumerate(zip(buffers, weights)):
+        total = total + mask_upload(masker, i, buf * jnp.float32(w / wsum), scale)
+    return decode_fixed(total, scale)
+
+
+def secure_fedavg_arena(
+    arena: jax.Array,
+    rows: Sequence[int],
+    weights: Sequence[float],
+    num_params: int | None = None,
+    base_seed: int = 0,
+    scale: float = FIXED_SCALE,
+) -> jax.Array:
+    """Secure FedAvg over selected rows of a device-resident arena.
+
+    The arena-store statement of :func:`secure_fedavg`: participants are the
+    given ``rows`` of the persistent ``(n_max, P)`` buffer
+    (``core/store.ArenaStore``), sliced on device — no stack rebuild, no host
+    round-trip.  Mask seeds are derived from the *position* in ``rows`` (the
+    session's participant index), so the result is bit-identical to
+    ``secure_fedavg`` on the same buffers in the same order with the same
+    ``base_seed`` — the property the arena/stack parity tests assert.
+    """
+    n = len(rows)
+    if n == 0:
+        raise ValueError("secure aggregation needs at least one participant row")
+    if n != len(weights):
+        raise ValueError("rows and weights must have equal length")
+    p = int(num_params) if num_params is not None else int(arena.shape[1])
+    masker = PairwiseMasker(base_seed=base_seed, participants=tuple(range(n)))
+    wsum = float(sum(weights))
+    if wsum <= 0:
+        raise ValueError("weights must sum to a positive value")
+    total = jnp.zeros((p,), jnp.int32)
+    for i, (row, w) in enumerate(zip(rows, weights)):
+        buf = jax.lax.dynamic_slice(arena, (int(row), 0), (1, p))[0]
         total = total + mask_upload(masker, i, buf * jnp.float32(w / wsum), scale)
     return decode_fixed(total, scale)

@@ -1,23 +1,38 @@
-"""In-memory model store for the federation controller.
+"""In-memory model stores for the federation controller.
 
 MetisFL's controller keeps every learner's latest local model in an in-memory
 hash map (the paper assumes all local models fit in memory and treats
-insert/select as O(1); §5 sketches future on-disk/distributed stores).  This
-module implements that store with the extra bookkeeping a production
-controller needs: per-learner lineage, capacity-bounded eviction, and
-aggregate byte accounting.
+insert/select as O(1); §5 sketches future on-disk/distributed stores).  Two
+backings implement that store:
+
+* :class:`ModelStore` — the hash-map store with per-learner lineage,
+  capacity-bounded eviction, and aggregate byte accounting.  Each upload is a
+  standalone buffer; aggregation re-stacks them into an ``(N, P)`` array every
+  round (the legacy path, kept for parity testing).
+
+* :class:`ArenaStore` — the device-resident aggregation arena.  One persistent
+  ``(n_max, P)`` device buffer plus ``weights``/``versions`` vectors and a
+  validity mask; every learner owns a row, uploads are donated in-place row
+  writes, and aggregation is a single masked reduction straight over the arena
+  — the controller hot path never re-packs or re-stacks anything.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 import time
 from collections import OrderedDict
-from typing import Any, Iterator
+from typing import Any, Iterator, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ModelRecord", "ModelStore"]
+from repro.core.packing import round_up
+
+__all__ = ["ModelRecord", "ModelStore", "ArenaStore"]
 
 
 @dataclasses.dataclass
@@ -105,3 +120,205 @@ class ModelStore:
 
     def num_records(self) -> int:
         return sum(len(lin) for lin in self._records.values())
+
+
+# ---------------------------------------------------------------------------
+# Device-resident aggregation arena
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_row(arena: jax.Array, row: jax.Array, buf: jax.Array) -> jax.Array:
+    """Donated in-place row write: arena[row, :len(buf)] = buf.
+
+    Donation lets XLA update the persistent buffer without allocating a new
+    ``(n_max, P)`` array — the arena's whole point.  ``row`` is a traced
+    scalar so every learner's write hits the same compiled executable.
+    """
+    return jax.lax.dynamic_update_slice(arena, buf[None, :], (row, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _set_row_meta(
+    weights: jax.Array, versions: jax.Array, mask: jax.Array,
+    row: jax.Array, weight: jax.Array, version: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return (
+        weights.at[row].set(weight),
+        versions.at[row].set(version),
+        mask.at[row].set(1.0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_new",))
+def _grown(old: jax.Array, n_new: int) -> jax.Array:
+    new = jnp.zeros((n_new,) + old.shape[1:], old.dtype)
+    return new.at[: old.shape[0]].set(old)
+
+
+class ArenaStore:
+    """Device-resident aggregation arena — the controller hot-path store.
+
+    Owns one persistent ``(n_max, padded_params)`` device buffer plus
+    ``weights (n_max,)`` (FedAvg example counts), ``versions (n_max,)`` (the
+    global-model version each row trained from, for staleness weighting) and a
+    float validity ``mask (n_max,)``.  Every learner is assigned a row on
+    first upload and *reuses* it on every subsequent upload (a donated
+    ``dynamic_update_slice`` — no host round-trip, no re-stack); aggregation
+    is a single masked reduction straight over ``buffer``
+    (``core/aggregation.masked_weighted_average`` or the Pallas
+    ``kernels.ops.masked_fedavg``), sliced to ``num_params``.
+
+    Rows are padded to ``row_align`` elements so the Pallas kernel's VMEM
+    tiles stay lane-aligned without per-call padding; the padding columns are
+    zero and never escape (aggregation output is sliced to ``num_params``).
+
+    When more learners register than ``n_max`` rows exist, the arena grows
+    geometrically (one O(n·P) copy per doubling, amortized O(1) per learner).
+
+    Thread-safety: all mutation happens under an internal re-entrant lock.
+    Because writes *donate* the previous array object, callers must not hold
+    references to ``buffer``/``weights``/``versions``/``mask`` across a
+    concurrent write — aggregate inside ``with arena.lock:``.
+    """
+
+    def __init__(
+        self,
+        num_params: int,
+        n_max: int = 8,
+        row_align: int = 1024,
+        dtype: Any = jnp.float32,
+    ):
+        if num_params < 1:
+            raise ValueError("num_params must be >= 1")
+        self.num_params = int(num_params)
+        self.padded_params = round_up(self.num_params, row_align)
+        self.dtype = jnp.dtype(dtype)
+        self.lock = threading.RLock()
+        n = max(1, int(n_max))
+        self._rows: dict[str, int] = {}
+        self._valid = np.zeros((n,), bool)
+        self._weights_host = np.zeros((n,), np.float32)
+        self.buffer = jnp.zeros((n, self.padded_params), self.dtype)
+        self.weights = jnp.zeros((n,), jnp.float32)
+        self.versions = jnp.zeros((n,), jnp.float32)
+        self.mask = jnp.zeros((n,), jnp.float32)
+        self.total_writes = 0
+        self.grow_events = 0
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def n_max(self) -> int:
+        return self.buffer.shape[0]
+
+    def _grow(self, n_new: int) -> None:
+        self.buffer = _grown(self.buffer, n_new)
+        self.weights = _grown(self.weights, n_new)
+        self.versions = _grown(self.versions, n_new)
+        self.mask = _grown(self.mask, n_new)
+        pad = n_new - len(self._valid)
+        self._valid = np.concatenate([self._valid, np.zeros((pad,), bool)])
+        self._weights_host = np.concatenate(
+            [self._weights_host, np.zeros((pad,), np.float32)]
+        )
+        self.grow_events += 1
+
+    def _assign_row(self, learner_id: str) -> int:
+        row = self._rows.get(learner_id)
+        if row is None:
+            row = len(self._rows)
+            if row >= self.n_max:
+                self._grow(max(2 * self.n_max, row + 1))
+            self._rows[learner_id] = row
+        return row
+
+    # -- writes -------------------------------------------------------------
+    def write(
+        self, learner_id: str, buffer: jax.Array, weight: float, version: float = 0.0
+    ) -> int:
+        """Insert/overwrite a learner's packed update in its arena row.
+
+        The (donated) row write is the entire MarkTaskCompleted store cost:
+        O(P) device bytes, zero allocation, no host copy.  Returns the row.
+        """
+        buf = jnp.ravel(jnp.asarray(buffer)).astype(self.dtype)
+        if buf.shape[0] not in (self.num_params, self.padded_params):
+            raise ValueError(
+                f"buffer has {buf.shape[0]} params, arena rows hold "
+                f"{self.num_params} (or {self.padded_params} pre-padded)"
+            )
+        with self.lock:
+            row = self._assign_row(learner_id)
+            self.buffer = _write_row(self.buffer, jnp.int32(row), buf)
+            self.weights, self.versions, self.mask = _set_row_meta(
+                self.weights, self.versions, self.mask,
+                jnp.int32(row), jnp.float32(weight), jnp.float32(version),
+            )
+            self._valid[row] = True
+            self._weights_host[row] = weight
+            self.total_writes += 1
+            return row
+
+    def invalidate(self, learner_id: str) -> None:
+        """Drop a learner's contribution (row is kept for reuse)."""
+        with self.lock:
+            row = self._rows.get(learner_id)
+            if row is None or not self._valid[row]:
+                return
+            self._valid[row] = False
+            self.mask = self.mask.at[row].set(0.0)
+
+    # -- selection ----------------------------------------------------------
+    def row_of(self, learner_id: str) -> int | None:
+        return self._rows.get(learner_id)
+
+    def weight_of(self, learner_id: str) -> float:
+        """Host-mirrored aggregation weight of a learner's current upload."""
+        with self.lock:
+            row = self._rows[learner_id]
+            return float(self._weights_host[row])
+
+    def row_view(self, learner_id: str) -> jax.Array:
+        """Device view of one learner's un-padded packed buffer."""
+        with self.lock:
+            row = self._rows[learner_id]
+            if not self._valid[row]:
+                raise KeyError(f"{learner_id} has no valid model in the arena")
+            return self.buffer[row, : self.num_params]
+
+    def round_mask(self, learner_ids: Sequence[str] | None = None) -> jax.Array:
+        """Validity mask restricted to a selection (the round's cohort).
+
+        ``None`` selects every valid row (async protocol).  The mask is the
+        only per-round host→device transfer of the arena path: ``n_max``
+        floats, independent of model size.
+        """
+        with self.lock:
+            if learner_ids is None:
+                return self.mask
+            sel = np.zeros((self.n_max,), np.float32)
+            for lid in learner_ids:
+                row = self._rows.get(lid)
+                if row is not None and self._valid[row]:
+                    sel[row] = 1.0
+            return jnp.asarray(sel)
+
+    def valid_ids(self) -> list[str]:
+        with self.lock:
+            return [lid for lid, row in self._rows.items() if self._valid[row]]
+
+    # -- accounting ---------------------------------------------------------
+    def __contains__(self, learner_id: str) -> bool:
+        with self.lock:
+            row = self._rows.get(learner_id)
+            return row is not None and bool(self._valid[row])
+
+    def __len__(self) -> int:
+        with self.lock:
+            return int(self._valid.sum())
+
+    def resident_bytes(self) -> int:
+        return int(
+            self.buffer.nbytes + self.weights.nbytes
+            + self.versions.nbytes + self.mask.nbytes
+        )

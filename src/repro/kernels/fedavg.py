@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fedavg_pallas", "DEFAULT_BLOCK_P"]
+__all__ = ["fedavg_pallas", "masked_fedavg_pallas", "DEFAULT_BLOCK_P"]
 
 # 8 sublanes x 128 lanes x 16 vregs worth of f32 per tile step
 DEFAULT_BLOCK_P = 16384
@@ -48,6 +48,31 @@ def choose_block_p(n_learners: int, dtype_bytes: int = 4,
     raw = (budget - 4 * n_learners) // per_elem
     aligned = max(1024, (raw // 1024) * 1024)
     return int(min(aligned, 1 << 20))
+
+
+def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024) -> int:
+    """Largest lane-aligned *divisor* of ``p`` whose working set fits VMEM.
+
+    The arena hot path must not pad: re-padding the whole ``(N, P)`` arena to
+    a non-dividing block size would re-introduce exactly the O(N·P) copy the
+    arena eliminates.  ``ArenaStore`` pads rows to a ``lane_multiple``
+    boundary at allocation, so a lane-aligned divisor always exists; for a
+    non-aligned ad-hoc P there may be none, in which case we return
+    :func:`choose_block_p` and the caller pads (legacy behaviour).
+    """
+    cap = choose_block_p(n_learners)
+    if p <= 0 or p % lane_multiple:
+        return cap
+    if p <= cap:
+        return p  # single grid step
+    k = p // lane_multiple
+    best = 0
+    for m in range(1, int(k**0.5) + 1):
+        if k % m == 0:
+            for cand in (m, k // m):
+                if lane_multiple * cand <= cap and cand > best:
+                    best = cand
+    return lane_multiple * best if best else cap
 
 
 def _fedavg_kernel(w_ref, stack_ref, out_ref):
@@ -93,4 +118,72 @@ def fedavg_pallas(
         out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
         interpret=interpret,
     )(w, stack)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Masked variant: aggregation straight off the device-resident arena
+# ---------------------------------------------------------------------------
+
+
+def _masked_fedavg_kernel(w_ref, mask_ref, arena_ref, out_ref):
+    """One grid step: out[bp] = sum_n w[n] * mask[n] * arena[n, bp].
+
+    ``w`` arrives pre-masked and pre-normalized, so invalid rows already
+    carry zero weight; the explicit ``where`` on the data additionally zeroes
+    the row *values* so a dead row containing non-finite garbage (a learner
+    that never reported, an invalidated upload) cannot produce 0 * NaN = NaN
+    in the aggregate.  The reduce stays a (1,N)x(N,BP) matmul for the MXU.
+    """
+    w = w_ref[:, 0]  # (N,) masked+normalized
+    m = mask_ref[:, 0]  # (N,) 1.0/0.0 validity
+    block = arena_ref[...].astype(jnp.float32)  # (N, BP)
+    block = jnp.where(m[:, None] > 0, block, 0.0)
+    acc = jax.lax.dot_general(
+        w[None, :], block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, BP)
+    out_ref[...] = acc
+
+
+def masked_fedavg_pallas(
+    arena: jax.Array,
+    weights: jax.Array,
+    mask: jax.Array,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = False,
+) -> jax.Array:
+    """(N_max, P) x (N_max,) x (N_max,) -> (P,) masked weighted mean.
+
+    The arena-store hot path: the full (possibly part-empty) arena streams
+    through VMEM exactly like :func:`fedavg_pallas`, with validity folded into
+    the weight vector.  P must be a multiple of ``block_p`` — use
+    :func:`choose_block_p_dividing` (as ``ops.masked_fedavg`` does) to pick a
+    dividing block for an arena-aligned P without re-padding; ops.py pads for
+    ad-hoc shapes.  If every mask entry is zero the weights fall back to
+    uniform-over-valid = all-zero, returning a zero buffer (the controller
+    raises before that happens).
+    """
+    from repro.core.aggregation import masked_normalize
+
+    n, p = arena.shape
+    assert p % block_p == 0, (p, block_p)
+    m = mask.astype(jnp.float32)
+    w = masked_normalize(weights, m)
+
+    grid = (p // block_p,)
+    out = pl.pallas_call(
+        _masked_fedavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=interpret,
+    )(w[:, None], m[:, None], arena)
     return out[0]

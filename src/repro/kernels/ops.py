@@ -18,7 +18,7 @@ from repro.kernels import quantize as _quant
 # CPU backend -> interpret mode.
 INTERPRET = jax.default_backend() == "cpu"
 
-__all__ = ["fedavg", "quantize", "dequantize", "QuantCodec"]
+__all__ = ["fedavg", "masked_fedavg", "quantize", "dequantize", "QuantCodec"]
 
 
 def _pad_to(x: jax.Array, multiple: int, axis: int = -1) -> tuple[jax.Array, int]:
@@ -43,6 +43,26 @@ def fedavg(stack: jax.Array, weights: jax.Array,
         block_p = _fedavg.choose_block_p(stack.shape[0])
     padded, p = _pad_to(stack, block_p, axis=1)
     out = _fedavg.fedavg_pallas(padded, weights, block_p=block_p, interpret=INTERPRET)
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def masked_fedavg(arena: jax.Array, weights: jax.Array, mask: jax.Array,
+                  block_p: int | None = None) -> jax.Array:
+    """Kernel-backed masked FedAvg over a device-resident arena.
+
+    The aggregation step of the arena store (``core/store.ArenaStore``):
+    invalid rows are skipped via the mask, so the same compiled kernel serves
+    every round regardless of how many learners reported.  The default block
+    size *divides* the arena's lane-aligned row width, so the hot path runs
+    with zero re-padding (``_pad_to`` is a no-op); only ad-hoc non-aligned
+    shapes pay the pad copy."""
+    if block_p is None:
+        block_p = _fedavg.choose_block_p_dividing(arena.shape[1], arena.shape[0])
+    padded, p = _pad_to(arena, block_p, axis=1)
+    out = _fedavg.masked_fedavg_pallas(
+        padded, weights, mask, block_p=block_p, interpret=INTERPRET
+    )
     return out[:p]
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fedavg_ref", "quantize_ref", "dequantize_ref"]
+__all__ = ["fedavg_ref", "masked_fedavg_ref", "quantize_ref", "dequantize_ref"]
 
 
 def fedavg_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
@@ -16,6 +16,23 @@ def fedavg_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
     w = weights.astype(jnp.float32)
     w = w / jnp.sum(w)
     return jnp.einsum("n,np->p", w, stack.astype(jnp.float32))
+
+
+def masked_fedavg_ref(
+    arena: jax.Array, weights: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """(N, P) x (N,) x (N,) -> (P,) masked normalized weighted mean in f32.
+
+    Uniform-over-valid fallback when all masked weights are zero, matching
+    ``core/aggregation.masked_weighted_average``.
+    """
+    m = mask.astype(jnp.float32)
+    w = weights.astype(jnp.float32) * m
+    total = jnp.sum(w)
+    w = jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0),
+                  m / jnp.maximum(jnp.sum(m), 1.0))
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
+    return jnp.einsum("n,np->p", w, rows)
 
 
 def quantize_ref(x: jax.Array, group: int = 256) -> tuple[jax.Array, jax.Array]:

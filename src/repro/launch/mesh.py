@@ -9,8 +9,7 @@ device state (dryrun.py sets XLA_FLAGS before any jax import).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_auto_mesh
 
 __all__ = ["make_production_mesh", "make_debug_mesh", "HARDWARE"]
 
@@ -26,10 +25,9 @@ HARDWARE = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (shard_map paths exercise on 1 device)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_auto_mesh((data, model), ("data", "model"))

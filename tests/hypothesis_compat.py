@@ -1,0 +1,107 @@
+"""`hypothesis` with a thin fallback so tier-1 collects on a bare interpreter.
+
+With the `dev` extra installed (``pip install -e .[dev]``) this module simply
+re-exports the real `hypothesis` — full property-based testing with shrinking.
+Without it, a deterministic mini-engine stands in: each ``@given`` test runs
+against ``max_examples`` seeded pseudo-random draws covering exactly the
+strategy surface this suite uses (integers, floats, lists, sampled_from,
+composite, ``.map``).  No shrinking, no database, no assume() — just enough to
+keep the properties exercised instead of skipped.
+
+Usage in test modules::
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_CAP = 25  # keep bare-interpreter runs fast
+
+    class _Strategy:
+        """A draw function wrapper mirroring the hypothesis strategy API."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kwargs) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                k = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(k)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                return _Strategy(
+                    lambda rng: fn(lambda strat: strat.draw(rng), *args, **kwargs)
+                )
+
+            return build
+
+    st = _StrategiesModule()
+
+    def settings(max_examples: int = 10, **_ignored):
+        """Record max_examples on the (already-@given-wrapped) test."""
+
+        def deco(fn):
+            fn._compat_max_examples = min(max_examples, _FALLBACK_CAP)
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test once per deterministic seeded draw."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 10)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + 7919 * i)
+                    drawn = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (real hypothesis does the same via its plugin).
+            params = list(inspect.signature(fn).parameters.values())
+            params = params[len(arg_strategies):]
+            params = [p for p in params if p.name not in kw_strategies]
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

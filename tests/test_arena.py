@@ -1,0 +1,277 @@
+"""Device-resident aggregation arena tests.
+
+Covers the acceptance surface of the arena store: numerical parity with the
+legacy stack path on every protocol (plain FedAvg, staleness-weighted async,
+secure sum), row reuse on re-upload, mask correctness when only a subset of
+registered learners reported, and geometric growth past ``n_max``.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArenaStore, AsyncProtocol, Controller, Learner, SyncProtocol,
+    aggregation, packing,
+)
+from repro.core.secure import secure_fedavg, secure_fedavg_arena
+from repro.kernels import ops, ref
+from repro.optim import sgd
+
+
+def _fill(arena, n, p, seed=0, weights=None):
+    """Write n random updates; returns (buffers, weights)."""
+    bufs, ws = [], []
+    for i in range(n):
+        buf = jax.random.normal(jax.random.key(seed + i), (p,), jnp.float32)
+        w = float(weights[i]) if weights is not None else float(10 * (i + 1))
+        arena.write(f"l{i}", buf, weight=w, version=float(i))
+        bufs.append(buf)
+        ws.append(w)
+    return bufs, ws
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation rules vs the stack path
+# ---------------------------------------------------------------------------
+
+
+def test_masked_weighted_average_matches_stack_fedavg():
+    arena = ArenaStore(num_params=3000, n_max=6, row_align=1024)
+    bufs, ws = _fill(arena, 4, 3000)
+    got = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )[: arena.num_params]
+    want = aggregation.fedavg(jnp.stack(bufs), jnp.asarray(ws))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_masked_kernel_matches_ref_and_stack():
+    arena = ArenaStore(num_params=5000, n_max=8, row_align=1024)
+    bufs, ws = _fill(arena, 5, 5000)
+    got = ops.masked_fedavg(arena.buffer, arena.weights, arena.mask)[: arena.num_params]
+    want_ref = ref.masked_fedavg_ref(arena.buffer, arena.weights, arena.mask)[:5000]
+    want_stack = aggregation.fedavg(jnp.stack(bufs), jnp.asarray(ws))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_stack), rtol=1e-4, atol=1e-5)
+
+
+def test_masked_staleness_average_matches_stack():
+    arena = ArenaStore(num_params=2000, n_max=4, row_align=1024)
+    bufs, ws = _fill(arena, 4, 2000)  # versions 0..3
+    current = 5.0
+    alpha = 0.5
+    got = aggregation.masked_staleness_average(
+        arena.buffer, arena.weights, arena.versions,
+        jnp.float32(current), arena.mask, alpha,
+    )[: arena.num_params]
+    stal = jnp.asarray([current - v for v in range(4)], jnp.float32)
+    w = aggregation.staleness_weights(jnp.asarray(ws), stal, alpha)
+    want = aggregation.fedavg(jnp.stack(bufs), w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_secure_arena_bitexact_with_stack_secure():
+    arena = ArenaStore(num_params=512, n_max=4, row_align=128)
+    bufs, ws = _fill(arena, 3, 512)
+    rows = [arena.row_of(f"l{i}") for i in range(3)]
+    got = secure_fedavg_arena(
+        arena.buffer, rows, ws, num_params=512, base_seed=7
+    )
+    want = secure_fedavg(bufs, ws, base_seed=7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_kernel_block_divides_arena_rows():
+    """The arena hot path must never re-pad the (N, P) arena: the default
+    block size divides any lane-aligned row width within the VMEM cap."""
+    from repro.kernels.fedavg import DEFAULT_BLOCK_P, choose_block_p, choose_block_p_dividing
+
+    for n in (2, 8, 64, 200):
+        cap = choose_block_p(n)
+        for p in (1024, 5120, 1 << 20, 1024 * 977, 1024 * 3 * 7 * 11):
+            bp = choose_block_p_dividing(p, n)
+            assert p % bp == 0, (n, p, bp)
+            assert bp <= cap, (n, p, bp)  # working set stays within VMEM
+    # non-lane-aligned ad-hoc P falls back to the padding path
+    assert choose_block_p_dividing(5000, 4) == choose_block_p(4)
+    assert DEFAULT_BLOCK_P % 1024 == 0
+
+
+def test_masked_average_ignores_poisoned_invalid_row():
+    """A dead row full of NaN must not leak into the aggregate."""
+    arena = ArenaStore(num_params=100, n_max=4, row_align=128)
+    _fill(arena, 3, 100)
+    arena.write("poison", jnp.full((100,), jnp.nan), weight=100.0)
+    arena.invalidate("poison")
+    out = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )[:100]
+    assert np.isfinite(np.asarray(out)).all()
+    out_k = ops.masked_fedavg(arena.buffer, arena.weights, arena.mask)[:100]
+    assert np.isfinite(np.asarray(out_k)).all()
+
+
+# ---------------------------------------------------------------------------
+# store mechanics: row reuse, subset masks, growth
+# ---------------------------------------------------------------------------
+
+
+def test_row_reuse_after_reupload():
+    arena = ArenaStore(num_params=256, n_max=4, row_align=128)
+    r0 = arena.write("a", jnp.zeros((256,)), weight=1.0)
+    r1 = arena.write("b", jnp.ones((256,)), weight=1.0)
+    # re-upload: same row, new contents, no growth
+    r0b = arena.write("a", jnp.full((256,), 7.0), weight=3.0, version=2.0)
+    assert r0b == r0 and r0 != r1
+    assert arena.n_max == 4 and arena.grow_events == 0
+    assert arena.total_writes == 3
+    row = np.asarray(arena.row_view("a"))
+    np.testing.assert_array_equal(row, np.full((256,), 7.0, np.float32))
+    assert arena.weight_of("a") == 3.0
+    assert float(arena.versions[r0]) == 2.0
+
+
+def test_round_mask_subset_of_registered():
+    """Only the cohort that actually reported contributes to the round."""
+    arena = ArenaStore(num_params=128, n_max=8, row_align=128)
+    bufs, ws = _fill(arena, 5, 128)
+    cohort = ["l0", "l2", "l4", "never-uploaded"]
+    mask = np.asarray(arena.round_mask(cohort))
+    assert mask.sum() == 3
+    got = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, jnp.asarray(mask)
+    )[:128]
+    want = aggregation.fedavg(
+        jnp.stack([bufs[0], bufs[2], bufs[4]]),
+        jnp.asarray([ws[0], ws[2], ws[4]]),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_arena_grows_past_n_max():
+    arena = ArenaStore(num_params=64, n_max=2, row_align=64)
+    bufs, ws = _fill(arena, 7, 64)
+    assert arena.n_max >= 7
+    assert arena.grow_events >= 2  # 2 -> 4 -> 8
+    assert len(arena) == 7
+    # all seven rows survive the copies intact
+    got = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )[:64]
+    want = aggregation.fedavg(jnp.stack(bufs), jnp.asarray(ws))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_arena_rejects_wrong_size_and_empty_mask_falls_back():
+    arena = ArenaStore(num_params=128, n_max=2, row_align=128)
+    with pytest.raises(ValueError):
+        arena.write("a", jnp.zeros((64,)), weight=1.0)
+    # nothing written: mask all-zero -> masked average returns zeros
+    out = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_concurrent_writes_are_serialized():
+    arena = ArenaStore(num_params=1024, n_max=4, row_align=1024)
+    errs = []
+
+    def upload(i):
+        try:
+            for _ in range(10):
+                arena.write(f"l{i}", jnp.full((1024,), float(i)), weight=1.0)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=upload, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert arena.total_writes == 80 and len(arena) == 8
+    for i in range(8):
+        np.testing.assert_array_equal(
+            np.asarray(arena.row_view(f"l{i}")), np.full((1024,), float(i), np.float32)
+        )
+
+
+# ---------------------------------------------------------------------------
+# controller-level parity: arena vs stack on all protocols
+# ---------------------------------------------------------------------------
+
+
+def _make_learner(i):
+    def loss_fn(p, b):
+        return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+
+    rng = np.random.default_rng(i)
+    X = rng.normal(size=(64, 4)).astype(np.float32)
+    y = X @ np.ones((4, 1), np.float32)
+
+    def data_fn(bs):
+        j = rng.integers(0, 64, size=bs)
+        return X[j], y[j]
+
+    return Learner(
+        f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+        data_fn, lambda: (X, y), sgd(0.05), 64,
+    )
+
+
+def _run_sync(store_mode, secure=False, rounds=2):
+    ctrl = Controller(
+        protocol=SyncProtocol(local_steps=2, batch_size=16),
+        secure=secure, store_mode=store_mode,
+    )
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(3):
+        ctrl.register_learner(_make_learner(i))
+    for _ in range(rounds):
+        ctrl.run_round()
+    out = np.asarray(ctrl.global_params["w"])
+    ctrl.shutdown()
+    return out, ctrl
+
+
+@pytest.mark.parametrize("secure", [False, True])
+def test_controller_sync_parity_arena_vs_stack(secure):
+    arena_out, actrl = _run_sync("arena", secure=secure)
+    stack_out, _ = _run_sync("stack", secure=secure)
+    tol = 1e-3 if secure else 1e-5  # secure: fixed-point quantization
+    np.testing.assert_allclose(arena_out, stack_out, atol=tol)
+    assert actrl.arena is not None and actrl.arena.total_writes >= 6
+    assert actrl.store.total_inserts == 0  # arena mode bypasses the hash map
+
+
+def test_controller_async_staleness_arena_matches_manual():
+    """One deterministic arrival: arena async community update == hand-built
+    staleness-weighted stack aggregation over the same state."""
+    ctrl = Controller(
+        protocol=AsyncProtocol(local_steps=1, batch_size=8), store_mode="arena"
+    )
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(2):
+        ctrl.register_learner(_make_learner(i))
+    hist = ctrl.run_async(total_updates=4)
+    out = np.asarray(ctrl.global_params["w"])
+    ctrl.shutdown()
+    assert len(hist) >= 4
+    assert ctrl._model_version >= 4
+    assert np.isfinite(out).all()
+    # every arrival wrote in place; no stack was ever built
+    assert ctrl.arena.total_writes >= 4
+    assert ctrl.store.total_inserts == 0
+
+
+def test_controller_arena_round_uses_padded_rows():
+    """P=4 model pads to one 1024-lane row; aggregation slices back to P."""
+    _, ctrl = _run_sync("arena", rounds=1)
+    assert ctrl.arena.num_params == 4
+    assert ctrl.arena.padded_params == 1024
+    assert ctrl.global_buffer.shape == (4,)

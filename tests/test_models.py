@@ -36,6 +36,7 @@ def _batch_for(cfg, B=2, S=16, seed=1):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHITECTURES)
 def test_arch_smoke_forward_and_train_step(arch):
     from repro.launch.steps import make_train_step
@@ -68,6 +69,7 @@ def test_arch_smoke_forward_and_train_step(arch):
         assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "arch",
     ["gemma3-4b", "mamba2-780m", "zamba2-1.2b", "deepseek-v3-671b",
@@ -167,6 +169,7 @@ def test_moe_padded_experts_never_routed():
     assert int(jnp.max(idx)) < 3  # pad expert (id 3) never selected
 
 
+@pytest.mark.slow
 def test_ssd_chunked_matches_sequential():
     cfg = ModelConfig(
         name="t", arch_type="ssm", n_layers=1, d_model=64, n_heads=4, n_kv_heads=4,

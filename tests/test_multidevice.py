@@ -13,6 +13,10 @@ import textwrap
 
 import pytest
 
+# Every test here spawns a subprocess with XLA-forced host devices; the CI
+# tier-1 lane runs them (8 forced devices) to exercise real mesh sharding.
+pytestmark = pytest.mark.multidevice
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -150,6 +154,7 @@ def test_serve_step_with_sharded_cache():
     """)
 
 
+@pytest.mark.slow
 def test_flash_decode_matches_unsharded():
     """shard_map flash-decoding (seq-sharded cache) must equal the plain
     decode path — GQA + sliding + MLA, on a real (2,2) mesh."""

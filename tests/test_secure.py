@@ -4,7 +4,7 @@ and upload indistinguishability from the per-learner view."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import secure
 from repro.core.aggregation import fedavg

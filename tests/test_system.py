@@ -13,6 +13,9 @@ from repro.models import mlp as mlp_model
 from repro.models import transformer
 from repro.optim import sgd
 
+# End-to-end federation runs: minutes each — nightly lane, not tier-1.
+pytestmark = pytest.mark.slow
+
 
 def test_housing_mlp_federation_converges():
     """The paper's exact stress-test workload at reduced scale: HousingMLP,
