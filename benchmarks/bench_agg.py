@@ -19,6 +19,14 @@ stack with ``jnp.stack``, then reduce) against the device-resident arena
 round's aggregation is just one masked reduction).  Also reports the arena's
 per-upload row-write cost, which the stack path pays *again* as part of every
 aggregation.  JSON output via ``--json`` for the CI nightly artifact.
+
+Sharded-vs-single-device arena (``run_sharded``, ``--sharded``): the same
+masked reduction and row write on a mesh-sharded arena
+(``ArenaStore(mesh=...)``, every visible device) against the single-device
+arena.  Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on
+CPU (as the CI nightly does) for an 8-shard layout; on real hardware the
+mesh spans the accelerators.  Includes an allclose parity check per shape so
+the bench doubles as a smoke test.  See ``benchmarks/README.md``.
 """
 
 from __future__ import annotations
@@ -155,17 +163,111 @@ def run_compare(learner_counts=(8, 32, 64), param_counts=(1 << 20, 1 << 22),
     return rows
 
 
+def run_sharded(learner_counts=(8, 32), param_counts=(1 << 20, 1 << 22),
+                iters=10):
+    """Sharded-vs-single-device arena: masked reduction + row-write latency.
+
+    Both arms hold the same N uploads in an :class:`ArenaStore`; the sharded
+    arm lays the buffer out column-sharded over a 1-D ``("data",)`` mesh of
+    every visible device (``launch/mesh.make_controller_mesh``) and reduces
+    per shard with zero collectives.  On CPU with forced host devices the
+    sharded arm mostly demonstrates *layout correctness* (host "devices"
+    share one socket); on real accelerators each shard reduces on its own
+    chip's HBM.  A per-shape allclose parity assert keeps the bench honest.
+    """
+    import numpy as np
+
+    from repro.launch.mesh import make_controller_mesh
+
+    n_dev = jax.device_count()
+    if n_dev == 1:
+        print("sharded: only 1 device visible — layout is a no-op; set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU",
+              flush=True)
+    mesh = make_controller_mesh()
+
+    rows = []
+    for p in param_counts:
+        for n in learner_counts:
+            buffers = [
+                jax.random.normal(jax.random.key(i), (p,), jnp.float32)
+                for i in range(n)
+            ]
+            jax.block_until_ready(buffers)
+            weights = [float(10 * (i + 1)) for i in range(n)]
+
+            single = ArenaStore(num_params=p, n_max=n, row_align=1024)
+            sharded = ArenaStore(num_params=p, n_max=n, row_align=1024, mesh=mesh)
+            for i, buf in enumerate(buffers):
+                single.write(f"l{i}", buf, weight=weights[i])
+                sharded.write(f"l{i}", buf, weight=weights[i])
+
+            def single_round():
+                with single.lock:
+                    return aggregation.masked_weighted_average(
+                        single.buffer, single.weights, single.mask
+                    )[: single.num_params]
+
+            sharded_fn = aggregation.masked_fedavg_sharded(mesh)
+
+            def sharded_round():
+                with sharded.lock:
+                    return sharded_fn(
+                        sharded.buffer, sharded.weights, sharded.mask
+                    )[: sharded.num_params]
+
+            np.testing.assert_allclose(
+                np.asarray(single_round()), np.asarray(sharded_round()),
+                rtol=1e-5, atol=1e-6,
+            )
+            t_single = bench(single_round, warmup=2, iters=iters)
+            t_sharded = bench(sharded_round, warmup=2, iters=iters)
+
+            def sharded_write():
+                sharded.write("l0", buffers[0], weight=weights[0])
+                jax.block_until_ready(sharded.buffer)
+
+            t_write = bench(sharded_write, warmup=2, iters=iters, block=False)
+
+            row = {
+                "bench": "arena_sharded", "params": p, "learners": n,
+                "n_shards": sharded.n_shards,
+                "shard_width": sharded.shard_width,
+                "single_round_s": t_single, "sharded_round_s": t_sharded,
+                "sharded_write_s": t_write,
+                "speedup_sharded_vs_single": t_single / t_sharded,
+            }
+            rows.append(row)
+            print(
+                f"sharded,P={p},N={n},shards={sharded.n_shards},"
+                f"single={t_single*1e3:.2f}ms,sharded={t_sharded*1e3:.2f}ms,"
+                f"write={t_write*1e3:.3f}ms,"
+                f"speedup={t_single/t_sharded:.2f}x",
+                flush=True,
+            )
+            del single, sharded, buffers
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--compare", action="store_true",
                     help="arena-vs-stack per-round aggregation latency")
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-sharded vs single-device arena aggregation")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump result rows as JSON")
     args = ap.parse_args(argv)
 
-    if args.compare:
+    if args.sharded:
+        if args.smoke:
+            rows = run_sharded(learner_counts=(4, 8), param_counts=(1 << 16,),
+                               iters=3)
+        else:
+            rows = run_sharded()
+    elif args.compare:
         if args.smoke:
             rows = run_compare(learner_counts=(4, 8), param_counts=(1 << 16,),
                                iters=3)

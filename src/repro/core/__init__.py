@@ -25,7 +25,9 @@ from repro.core.aggregation import (
     fedavg_sharded,
     hierarchical_fedavg,
     masked_fedavg,
+    masked_fedavg_sharded,
     masked_staleness_average,
+    masked_staleness_sharded,
     masked_weighted_average,
     staleness_weights,
     trimmed_mean,
@@ -45,6 +47,7 @@ __all__ = [
     "pack_bytes", "pack_numeric", "round_up", "unpack_bytes", "unpack_numeric",
     "fedavg", "weighted_average", "coordinate_median", "trimmed_mean",
     "masked_fedavg", "masked_staleness_average", "masked_weighted_average",
+    "masked_fedavg_sharded", "masked_staleness_sharded",
     "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
     "ModelRecord", "ModelStore", "ArenaStore",
     "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",

@@ -44,6 +44,9 @@ __all__ = [
     "staleness_weights",
     "fedavg_sharded",
     "hierarchical_fedavg",
+    "masked_fedavg_sharded",
+    "masked_staleness_sharded",
+    "arena_axes",
 ]
 
 
@@ -181,6 +184,71 @@ def fedavg_sharded(mesh: Mesh, stack: jax.Array, weights: jax.Array) -> jax.Arra
     fn = jax.jit(weighted_average, in_shardings=(in_spec, NamedSharding(mesh, P())),
                  out_shardings=out_spec)
     return fn(stack, weights)
+
+
+def arena_axes(mesh: Mesh, axes=None) -> tuple[str, ...]:
+    """Resolve the arena column-sharding axes for ``mesh``.
+
+    The single source of truth for the default — the ``"data"`` axis if the
+    mesh has one, else every axis — shared by ``models.sharding.arena_specs``
+    (the store's buffer layout), the sharded reductions below, and
+    ``kernels/ops.masked_fedavg_sharded``, so the arena's layout and the
+    jitted reductions' shardings can never silently disagree.
+    """
+    if axes is None:
+        return ("data",) if "data" in mesh.axis_names else tuple(mesh.axis_names)
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+
+
+def masked_fedavg_sharded(mesh: Mesh, axes=None):
+    """Masked FedAvg over a column-sharded arena — zero collectives.
+
+    Returns a jitted ``(arena (N_max,P), weights (N_max,), mask (N_max,)) ->
+    (P,)`` closed over the mesh: the arena arrives (and stays) sharded
+    ``P(None, axes)``, the tiny metadata vectors are replicated, and the
+    output keeps the ``P(axes)`` column sharding — every device reduces its
+    own ``(N_max, P/n_shards)`` shard and nothing is gathered until the
+    caller unpacks the model.  The per-shard math is exactly
+    :func:`masked_weighted_average` (the weight normalization only reduces
+    over the replicated ``(N_max,)`` vectors), so the result is numerically
+    identical to the single-device arena path.
+    """
+    ax = arena_axes(mesh, axes)
+    return jax.jit(
+        masked_weighted_average,
+        in_shardings=(
+            NamedSharding(mesh, P(None, ax)),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
+
+
+def masked_staleness_sharded(mesh: Mesh, axes=None, alpha: float = 0.5):
+    """Sharded statement of :func:`masked_staleness_average` for async FL.
+
+    Returns a jitted ``(arena, num_examples, versions, current_version,
+    mask) -> (P,)`` with the same column sharding contract as
+    :func:`masked_fedavg_sharded`; the staleness discount is computed on the
+    replicated ``(N_max,)`` vectors so the sharded reduction stays
+    collective-free.
+    """
+    ax = arena_axes(mesh, axes)
+
+    def _agg(arena, num_examples, versions, current_version, mask):
+        return masked_staleness_average(
+            arena, num_examples, versions, current_version, mask, alpha
+        )
+
+    repl = NamedSharding(mesh, P())
+    return jax.jit(
+        _agg,
+        in_shardings=(NamedSharding(mesh, P(None, ax)), repl, repl, repl, repl),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
 
 
 def hierarchical_fedavg(mesh: Mesh, pod_axis: str = "pod"):

@@ -18,6 +18,12 @@ re-engineered operations of §3:
   ``(N, P)`` array or round-trips through the host.  ``store_mode="stack"``
   keeps the legacy per-upload-buffer + ``jnp.stack`` path for parity testing
   (``benchmarks/bench_agg.py --compare`` measures the difference).
+* **mesh-sharded arena** (``arena_mesh=``) — the same arena column-sharded
+  over a device mesh: row writes are ``shard_map``-ed shard-local updates and
+  every protocol's reduction runs per shard with zero collectives, so the
+  controller scales past one device's HBM without touching protocol code
+  (``benchmarks/bench_agg.py --sharded`` measures it; ``docs/ARENA.md``
+  documents the layout).
 * **per-op timing** — the controller measures exactly the six operations the
   paper's stress test reports: train dispatch, train round, aggregation,
   eval dispatch, eval round, federation round.
@@ -62,6 +68,7 @@ class RoundTimings:
     metrics: dict = dataclasses.field(default_factory=dict)
 
     def as_row(self) -> dict:
+        """Flatten to one dict row for the CSV/JSON benchmark output."""
         return {
             "round": self.round_id,
             "train_dispatch_s": self.train_dispatch_s,
@@ -99,6 +106,18 @@ class Controller:
     secure:
         If True, uploads are mask-encoded and the controller only sums
         (``core/secure``) — it never sees an individual model.
+    arena_mesh:
+        Optional :class:`jax.sharding.Mesh`.  When given (arena mode only),
+        the persistent ``(n_max, P)`` arena is **column-sharded** over the
+        mesh's data axis (``launch/mesh.make_controller_mesh`` builds a 1-D
+        one over all local devices): uploads scatter once and write
+        shard-locally, and every aggregation protocol — plain, staleness-
+        weighted async, secure sum — reduces per shard with zero collectives.
+        Numerics are identical to the single-device arena
+        (``tests/test_arena_sharded.py``); see ``docs/ARENA.md``.
+    arena_axes:
+        Mesh axis name(s) to split ``P`` over (default: the ``"data"`` axis
+        if the mesh has one, else every axis).
     """
 
     def __init__(
@@ -116,6 +135,8 @@ class Controller:
         masked_aggregate_fn: Callable | None = None,
         arena_n_max: int = 8,
         arena_row_align: int = 1024,
+        arena_mesh: Any = None,
+        arena_axes: Any = None,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -143,6 +164,13 @@ class Controller:
         self.arena: ArenaStore | None = None
         self._arena_n_max = arena_n_max
         self._arena_row_align = arena_row_align
+        self.arena_mesh = arena_mesh
+        self.arena_axes = arena_axes
+        if arena_mesh is not None and store_mode != "arena":
+            raise ValueError("arena_mesh= requires store_mode='arena'")
+        # Built lazily in set_initial_model when the arena is sharded.
+        self._sharded_masked_fn: Callable | None = None
+        self._sharded_staleness_fn: Callable | None = None
         self.channel = channel or Channel()
         self.secure = secure
         self.secure_seed = secure_seed
@@ -174,15 +202,31 @@ class Controller:
                 num_params=max(1, int(self.global_buffer.shape[0])),
                 n_max=max(self._arena_n_max, len(self._learners)),
                 row_align=self._arena_row_align,
+                mesh=self.arena_mesh,
+                axes=self.arena_axes,
             )
+            if self.arena.sharded:
+                # Per-shard masked reductions over the column-sharded arena
+                # (zero collectives; numerically identical to single-device).
+                # A user-supplied masked rule is honoured as-is — it runs on
+                # the sharded buffer with whatever layout XLA infers.
+                self._sharded_masked_fn = aggregation.masked_fedavg_sharded(
+                    self.arena.mesh, self.arena.axes
+                )
+                alpha = getattr(self.protocol, "staleness_alpha", 0.5)
+                self._sharded_staleness_fn = aggregation.masked_staleness_sharded(
+                    self.arena.mesh, self.arena.axes, alpha
+                )
 
     def register_learner(self, learner: Learner) -> None:
+        """Admit a learner to the federation (paper Fig. 8 join)."""
         self._learners[learner.learner_id] = learner
         self._learner_profiles[learner.learner_id] = {}
         self._learner_versions[learner.learner_id] = 0
 
     @property
     def learner_ids(self) -> list[str]:
+        """IDs of every registered learner, in registration order."""
         return list(self._learners)
 
     # -------------------------------------------------------------- dispatch
@@ -305,15 +349,28 @@ class Controller:
                         weights.append(arena.weight_of(lid))
                 if not rows:
                     raise RuntimeError("no local models available to aggregate")
+                # Sharded arena: sum the full padded width — padded_params is
+                # divisible by n_shards by construction, so the column-sharded
+                # int32 accumulator always engages (pairwise pads cancel
+                # exactly whatever the width, and padding columns decode to
+                # zero, so the [:num_params] slice is bit-identical to the
+                # unpadded single-device sum).
+                width = arena.padded_params if arena.sharded else arena.num_params
                 return secure_mod.secure_fedavg_arena(
                     arena.buffer, rows, weights,
-                    num_params=arena.num_params,
+                    num_params=width,
                     base_seed=self.secure_seed + self.round_id,
-                )
+                    out_sharding=arena.row_sharding,
+                )[: arena.num_params]
             mask = arena.round_mask(list(selected))
             if not float(jnp.sum(mask)) > 0:
                 raise RuntimeError("no local models available to aggregate")
-            out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
+            if self._sharded_masked_fn is not None and (
+                self.masked_aggregate_fn is aggregation.masked_weighted_average
+            ):
+                out = self._sharded_masked_fn(arena.buffer, arena.weights, mask)
+            else:
+                out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
             return out[: arena.num_params]
 
     # ------------------------------------------------------------ eval round
@@ -401,10 +458,16 @@ class Controller:
                 # is one fused kernel regardless of federation size.
                 arena = self.arena
                 with arena.lock:
-                    new_buffer = aggregation.masked_staleness_average(
-                        arena.buffer, arena.weights, arena.versions,
-                        jnp.float32(self._model_version), arena.mask, alpha,
-                    )[: arena.num_params]
+                    if self._sharded_staleness_fn is not None:
+                        new_buffer = self._sharded_staleness_fn(
+                            arena.buffer, arena.weights, arena.versions,
+                            jnp.float32(self._model_version), arena.mask,
+                        )[: arena.num_params]
+                    else:
+                        new_buffer = aggregation.masked_staleness_average(
+                            arena.buffer, arena.weights, arena.versions,
+                            jnp.float32(self._model_version), arena.mask, alpha,
+                        )[: arena.num_params]
             else:
                 with self._store_lock:
                     records = self.store.select_latest(None)  # all known models
@@ -470,4 +533,5 @@ class Controller:
         }
 
     def shutdown(self) -> None:
+        """Stop the dispatch executor (waits for in-flight tasks)."""
         self._executor.shutdown(wait=True)

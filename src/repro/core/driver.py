@@ -58,12 +58,19 @@ class FederationEnv:
     # its exclusive features (lineage > 1, byte-capacity eviction) are
     # configured, and the device-resident arena otherwise.
     store_mode: str = "auto"
+    # 0 = single-device arena; N > 0 column-shards the arena over an N-device
+    # 1-D ("data",) controller mesh (launch/mesh.make_controller_mesh); -1
+    # shards over every visible device.  Ignored when the auto-pick above
+    # falls back to the hash-map store; combining it with an explicit
+    # store_mode="stack" raises.
+    arena_shards: int = 0
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
     termination: TerminationCriteria = TerminationCriteria()
 
     def make_protocol(self):
+        """Instantiate the protocol object this environment describes."""
         if self.protocol == "sync":
             return SyncProtocol(self.local_steps, self.batch_size, self.learning_rate)
         if self.protocol == "semi_sync":
@@ -88,6 +95,21 @@ class Driver:
         if store_mode == "auto":
             wants_hash_map = env.lineage_length > 1 or env.store_capacity_bytes is not None
             store_mode = "stack" if wants_hash_map else "arena"
+        arena_mesh = None
+        if env.arena_shards and env.store_mode == "stack":
+            # Mirror Controller's arena_mesh+stack rejection: an explicitly
+            # requested stack store cannot be sharded — only the documented
+            # auto-pick fallback (lineage/eviction configured) drops the knob.
+            raise ValueError(
+                "arena_shards requires an arena store; it cannot combine with "
+                "store_mode='stack'"
+            )
+        if env.arena_shards and store_mode == "arena":
+            from repro.launch.mesh import make_controller_mesh
+
+            arena_mesh = make_controller_mesh(
+                None if env.arena_shards < 0 else env.arena_shards
+            )
         self.controller = Controller(
             protocol=env.make_protocol(),
             selection=env.selection,
@@ -100,12 +122,14 @@ class Driver:
             channel=Channel(env.bandwidth_gbps, env.latency_ms),
             secure=env.secure_aggregation,
             store_mode=store_mode,
+            arena_mesh=arena_mesh,
         )
         self._learners: list[Learner] = []
         self._last_heartbeat = 0.0
 
     # -- initialization (Fig. 8 top) ----------------------------------------
     def initialize(self, initial_params: Any, learners: Sequence[Learner]) -> None:
+        """Ship the initial model and register live learners (Fig. 8 init)."""
         log.info("driver: initializing controller with model state")
         self.controller.set_initial_model(initial_params)
         for learner in learners:
@@ -142,6 +166,7 @@ class Driver:
 
     # -- run ------------------------------------------------------------------
     def run(self) -> list[RoundTimings]:
+        """Run federation rounds until a termination criterion fires."""
         t_start = time.monotonic()
         history: list[RoundTimings] = []
         if self.env.protocol == "async":
@@ -161,6 +186,7 @@ class Driver:
 
     # -- shutdown (learners first, then controller) ---------------------------
     def shutdown(self) -> None:
+        """Tear the federation down: learners first, then the controller."""
         for learner in self._learners:
             learner.shutdown()
         self.controller.shutdown()

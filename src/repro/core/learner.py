@@ -40,6 +40,8 @@ class LocalUpdate:
 
 @dataclasses.dataclass
 class EvalReport:
+    """Result of one synchronous EvaluateModel call on a learner."""
+
     learner_id: str
     round_id: int
     metrics: dict
@@ -78,9 +80,11 @@ class Learner:
 
     # -- heartbeat ----------------------------------------------------------
     def ping(self) -> bool:
+        """Heartbeat: True while the learner is alive (driver monitoring)."""
         return self.alive
 
     def shutdown(self) -> None:
+        """Mark the learner dead (driver shutdown / failure injection)."""
         self.alive = False
 
     # -- training -----------------------------------------------------------
@@ -122,6 +126,7 @@ class Learner:
 
     # -- evaluation ---------------------------------------------------------
     def evaluate(self, params: Any, round_id: int) -> EvalReport:
+        """Synchronous EvaluateModel over the learner's private eval data."""
         batch = self._eval_data_fn()
         metrics = {k: float(v) for k, v in self._eval_fn(params, batch).items()}
         return EvalReport(

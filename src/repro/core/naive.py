@@ -56,6 +56,7 @@ def naive_serialize(params: Any) -> list[bytes]:
 
 
 def naive_deserialize(blobs: list[bytes], treedef) -> Any:
+    """Inverse of :func:`naive_serialize`: per-tensor unpickle + unflatten."""
     leaves = [pickle.loads(b) for b in blobs]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -67,6 +68,7 @@ class NaiveDispatcher:
         self.dispatch_s = 0.0
 
     def dispatch(self, params: Any, learners: Sequence[Callable[[Any], Any]]) -> list[Any]:
+        """Serialize, send, and block on each learner strictly in turn."""
         results = []
         treedef = jax.tree_util.tree_structure(params)
         for learner_fn in learners:

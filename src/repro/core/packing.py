@@ -61,6 +61,7 @@ class TensorSpec:
 
     @property
     def nbytes(self) -> int:
+        """Wire size of this tensor in bytes (original dtype)."""
         return self.size * np.dtype(jnp.dtype(self.dtype)).itemsize
 
 
@@ -81,13 +82,16 @@ class Manifest:
 
     @property
     def total_elements(self) -> int:
+        """Total scalar element count across every packed tensor."""
         return sum(s.size for s in self.specs)
 
     @property
     def total_bytes(self) -> int:
+        """Total wire bytes across every packed tensor."""
         return sum(s.nbytes for s in self.specs)
 
     def spec_by_name(self, name: str) -> TensorSpec:
+        """Look up one tensor's spec by its pytree key-path name."""
         for s in self.specs:
             if s.name == name:
                 return s
@@ -125,6 +129,7 @@ def build_manifest(params: Any) -> Manifest:
 
 
 def num_params(params: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
     return sum(int(np.prod(jnp.shape(l)) or 1) for l in jax.tree_util.tree_leaves(params))
 
 

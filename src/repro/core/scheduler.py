@@ -39,11 +39,15 @@ class TrainTask:
 
 @dataclasses.dataclass(frozen=True)
 class SyncProtocol:
+    """Synchronous rounds: same step budget for every selected learner,
+    aggregate when the whole cohort has uploaded (paper's FedAvg setting)."""
+
     local_steps: int = 1
     batch_size: int = 100
     learning_rate: float = 0.01
 
     def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        """Build the fixed-step TrainTask for this round."""
         return TrainTask(
             round_id=round_id,
             local_steps=self.local_steps,
@@ -68,6 +72,7 @@ class SemiSyncProtocol:
     default_steps: int = 1
 
     def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        """Size the task from the learner's measured seconds-per-step."""
         steps = self.default_steps
         if learner_profile and learner_profile.get("seconds_per_step", 0) > 0:
             steps = max(1, int(self.hyperperiod_s / learner_profile["seconds_per_step"]))
@@ -82,12 +87,17 @@ class SemiSyncProtocol:
 
 @dataclasses.dataclass(frozen=True)
 class AsyncProtocol:
+    """Asynchronous protocol: no round barrier — the controller aggregates on
+    every arrival, staleness-damped by ``staleness_alpha``
+    (``core/aggregation.staleness_weights``; semantics in docs/PROTOCOLS.md)."""
+
     local_steps: int = 1
     batch_size: int = 100
     learning_rate: float = 0.01
     staleness_alpha: float = 0.5
 
     def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        """Build the TrainTask for the learner's next async leg."""
         return TrainTask(
             round_id=round_id,
             local_steps=self.local_steps,

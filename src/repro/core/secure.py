@@ -26,7 +26,7 @@ stress tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,7 @@ def encode_fixed(buffer: jax.Array, scale: float = FIXED_SCALE) -> jax.Array:
 
 
 def decode_fixed(ints: jax.Array, scale: float = FIXED_SCALE) -> jax.Array:
+    """int32 fixed point -> float32 (plaintext analogue of CKKS decode)."""
     return ints.astype(jnp.float32) / scale
 
 
@@ -125,6 +126,7 @@ def secure_fedavg_arena(
     num_params: int | None = None,
     base_seed: int = 0,
     scale: float = FIXED_SCALE,
+    out_sharding: Any = None,
 ) -> jax.Array:
     """Secure FedAvg over selected rows of a device-resident arena.
 
@@ -135,6 +137,17 @@ def secure_fedavg_arena(
     session's participant index), so the result is bit-identical to
     ``secure_fedavg`` on the same buffers in the same order with the same
     ``base_seed`` — the property the arena/stack parity tests assert.
+
+    ``out_sharding`` supports the **sharded** arena
+    (``core/store.ArenaStore(mesh=...)``): pass the arena's row sharding
+    (``P(axes)`` over the mesh) and the masked int32 accumulator is committed
+    to it, keeping every wrap-add column-sharded alongside the buffer instead
+    of congregating on one device (ignored when ``num_params`` does not
+    divide the shard count — the layout hint simply no-ops).  Sharding never
+    changes the result:
+    the whole pipeline is exact int32 arithmetic, so the sharded sum stays
+    **bit-identical** to the single-device arena path (asserted by
+    ``tests/test_arena_sharded.py``).
     """
     n = len(rows)
     if n == 0:
@@ -146,7 +159,14 @@ def secure_fedavg_arena(
     wsum = float(sum(weights))
     if wsum <= 0:
         raise ValueError("weights must sum to a positive value")
+    if out_sharding is not None:
+        try:
+            out_sharding.shard_shape((p,))  # layout only applies when p divides
+        except ValueError:
+            out_sharding = None
     total = jnp.zeros((p,), jnp.int32)
+    if out_sharding is not None:
+        total = jax.device_put(total, out_sharding)
     for i, (row, w) in enumerate(zip(rows, weights)):
         buf = jax.lax.dynamic_slice(arena, (int(row), 0), (1, p))[0]
         total = total + mask_upload(masker, i, buf * jnp.float32(w / wsum), scale)

@@ -18,6 +18,9 @@ __all__ = ["SelectionPolicy", "select_learners"]
 
 @dataclasses.dataclass(frozen=True)
 class SelectionPolicy:
+    """How the controller picks each round's cohort: everyone (``all``),
+    uniformly at random, or dataset-size-weighted (``stratified``)."""
+
     kind: str = "all"  # all | random | stratified
     fraction: float = 1.0  # for random/stratified: fraction of learners per round
     min_learners: int = 1
@@ -30,6 +33,8 @@ def select_learners(
     round_id: int,
     num_examples: dict[str, int] | None = None,
 ) -> list[str]:
+    """Select the round's participants per ``policy`` (deterministic in
+    ``(seed, round_id)`` so runs are reproducible)."""
     ids = list(learner_ids)
     if not ids:
         return []

@@ -22,6 +22,8 @@ __all__ = ["ServerOptState", "ServerOptimizer", "make_server_optimizer"]
 
 
 class ServerOptState(NamedTuple):
+    """Adaptive-server state: step counter plus first/second moments."""
+
     step: jax.Array  # scalar int32
     m: jax.Array  # first moment, (P,)
     v: jax.Array  # second moment, (P,)

@@ -15,6 +15,14 @@ backings implement that store:
   validity mask; every learner owns a row, uploads are donated in-place row
   writes, and aggregation is a single masked reduction straight over the arena
   — the controller hot path never re-packs or re-stacks anything.
+
+  Passing ``mesh=`` puts the arena in **sharded mode**: the buffer is laid out
+  column-sharded over the mesh (``P`` split over the data axis, rows
+  replication-free), row writes run through a ``shard_map``-ed donated
+  ``dynamic_update_slice`` so each device only ever touches its own
+  ``(n_max, P/n_shards)`` shard, and the masked reduction happens per shard
+  with **zero collectives** — nothing is gathered until the final model
+  unpack.  See ``docs/ARENA.md``.
 """
 
 from __future__ import annotations
@@ -37,6 +45,8 @@ __all__ = ["ModelRecord", "ModelStore", "ArenaStore"]
 
 @dataclasses.dataclass
 class ModelRecord:
+    """One stored local model plus its aggregation metadata."""
+
     learner_id: str
     round_id: int
     buffer: Any  # packed numeric buffer (jax.Array) or byte buffer
@@ -46,6 +56,7 @@ class ModelRecord:
 
     @property
     def nbytes(self) -> int:
+        """Resident bytes of the stored buffer (eviction accounting)."""
         b = self.buffer
         if hasattr(b, "nbytes"):
             return int(b.nbytes)
@@ -72,6 +83,7 @@ class ModelStore:
 
     # -- insertion ---------------------------------------------------------
     def insert(self, record: ModelRecord) -> None:
+        """Append to the learner's lineage, trimming history and evicting."""
         lineage = self._records.setdefault(record.learner_id, [])
         lineage.append(record)
         self.total_inserts += 1
@@ -95,9 +107,11 @@ class ModelStore:
 
     # -- selection ---------------------------------------------------------
     def latest(self, learner_id: str) -> ModelRecord:
+        """The learner's most recent record (KeyError if never uploaded)."""
         return self._records[learner_id][-1]
 
     def lineage(self, learner_id: str) -> list[ModelRecord]:
+        """Oldest-to-newest stored history for one learner (may be empty)."""
         return list(self._records.get(learner_id, []))
 
     def select_latest(self, learner_ids: list[str] | None = None) -> list[ModelRecord]:
@@ -116,9 +130,11 @@ class ModelStore:
 
     # -- accounting ---------------------------------------------------------
     def resident_bytes(self) -> int:
+        """Total bytes across every stored record (drives eviction)."""
         return sum(rec.nbytes for lin in self._records.values() for rec in lin)
 
     def num_records(self) -> int:
+        """Total stored records across all learners and lineages."""
         return sum(len(lin) for lin in self._records.values())
 
 
@@ -150,10 +166,39 @@ def _set_row_meta(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n_new",))
-def _grown(old: jax.Array, n_new: int) -> jax.Array:
+def _grown_impl(old: jax.Array, n_new: int) -> jax.Array:
     new = jnp.zeros((n_new,) + old.shape[1:], old.dtype)
     return new.at[: old.shape[0]].set(old)
+
+
+_grown = jax.jit(_grown_impl, static_argnames=("n_new",))
+
+
+def _make_sharded_writer(mesh, axes):
+    """Build the sharded-arena row writer: a donated ``shard_map``-ed
+    ``dynamic_update_slice``.
+
+    Each device holds an ``(n_max, shard_width)`` column shard of the arena
+    and the matching ``(shard_width,)`` slice of the incoming upload; the
+    write is purely local (the row index is replicated, the column offset is
+    0 in every shard's coordinates), so the compiled program contains no
+    collectives and — thanks to donation — no ``(n_max, P)`` re-allocation.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def _write(arena, row, buf):
+        return jax.lax.dynamic_update_slice(arena, buf[None, :], (row, 0))
+
+    sm = shard_map(
+        _write,
+        mesh=mesh,
+        in_specs=(P(None, axes), P(), P(axes)),
+        out_specs=P(None, axes),
+        check_vma=False,
+    )
+    return jax.jit(sm, donate_argnums=(0,))
 
 
 class ArenaStore:
@@ -176,6 +221,17 @@ class ArenaStore:
     When more learners register than ``n_max`` rows exist, the arena grows
     geometrically (one O(n·P) copy per doubling, amortized O(1) per learner).
 
+    **Sharded mode** (``mesh=`` given): the buffer is created with a
+    ``P(None, axes)`` :class:`~jax.sharding.NamedSharding` — columns split
+    over the mesh's data axis, rows replication-free — so each device owns a
+    ``(n_max, shard_width)`` shard.  Row writes route through a
+    ``shard_map``-ed donated ``dynamic_update_slice`` (each device updates
+    only its shard; zero collectives) and ``padded_params`` is rounded up to
+    ``row_align * n_shards`` so every shard stays lane-aligned for the Pallas
+    kernel.  The tiny metadata vectors stay host-driven exactly as in the
+    single-device mode.  Growth preserves the sharding (the grown buffer is
+    re-laid-out with the same spec; the copy is shard-local).
+
     Thread-safety: all mutation happens under an internal re-entrant lock.
     Because writes *donate* the previous array object, callers must not hold
     references to ``buffer``/``weights``/``versions``/``mask`` across a
@@ -188,31 +244,76 @@ class ArenaStore:
         n_max: int = 8,
         row_align: int = 1024,
         dtype: Any = jnp.float32,
+        mesh: Any = None,
+        axes: Any = None,
     ):
         if num_params < 1:
             raise ValueError("num_params must be >= 1")
         self.num_params = int(num_params)
-        self.padded_params = round_up(self.num_params, row_align)
         self.dtype = jnp.dtype(dtype)
         self.lock = threading.RLock()
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.models.sharding import arena_specs
+
+            buf_s, row_s, repl_s = arena_specs(mesh, axes)
+            self.axes = row_s.spec[0]
+            self.buffer_sharding, self.row_sharding = buf_s, row_s
+            self.n_shards = int(
+                np.prod([mesh.shape[a] for a in self.axes], dtype=np.int64)
+            )
+            self._writer = _make_sharded_writer(mesh, self.axes)
+            # One jitted grow program per store (cached across growth events;
+            # jit re-specializes per (shape, n_new) but never rebuilds the
+            # wrapper, unlike a fresh jax.jit per call).
+            self._grower = jax.jit(
+                _grown_impl, static_argnames=("n_new",), out_shardings=buf_s
+            )
+            self.padded_params = round_up(self.num_params, row_align * self.n_shards)
+        else:
+            self.axes = None
+            self.buffer_sharding = self.row_sharding = None
+            self.n_shards = 1
+            self._writer = None
+            self._grower = _grown
+            self.padded_params = round_up(self.num_params, row_align)
         n = max(1, int(n_max))
         self._rows: dict[str, int] = {}
         self._valid = np.zeros((n,), bool)
         self._weights_host = np.zeros((n,), np.float32)
-        self.buffer = jnp.zeros((n, self.padded_params), self.dtype)
+        self.buffer = self._zeros((n, self.padded_params), self.dtype,
+                                  self.buffer_sharding)
         self.weights = jnp.zeros((n,), jnp.float32)
         self.versions = jnp.zeros((n,), jnp.float32)
         self.mask = jnp.zeros((n,), jnp.float32)
         self.total_writes = 0
         self.grow_events = 0
 
+    @staticmethod
+    def _zeros(shape, dtype, sharding):
+        """Allocate zeros, directly laid out per ``sharding`` when given."""
+        if sharding is None:
+            return jnp.zeros(shape, dtype)
+        return jax.jit(lambda: jnp.zeros(shape, dtype), out_shardings=sharding)()
+
     # -- capacity -----------------------------------------------------------
     @property
     def n_max(self) -> int:
+        """Current row capacity (grows geometrically on demand)."""
         return self.buffer.shape[0]
 
+    @property
+    def sharded(self) -> bool:
+        """True when the arena buffer is column-sharded over a device mesh."""
+        return self.mesh is not None
+
+    @property
+    def shard_width(self) -> int:
+        """Per-device column width: ``padded_params / n_shards``."""
+        return self.padded_params // self.n_shards
+
     def _grow(self, n_new: int) -> None:
-        self.buffer = _grown(self.buffer, n_new)
+        self.buffer = self._grower(self.buffer, n_new=n_new)
         self.weights = _grown(self.weights, n_new)
         self.versions = _grown(self.versions, n_new)
         self.mask = _grown(self.mask, n_new)
@@ -247,9 +348,17 @@ class ArenaStore:
                 f"buffer has {buf.shape[0]} params, arena rows hold "
                 f"{self.num_params} (or {self.padded_params} pre-padded)"
             )
+        if self.sharded:
+            if buf.shape[0] != self.padded_params:
+                buf = jnp.pad(buf, (0, self.padded_params - buf.shape[0]))
+            # Scatter the upload across the mesh once, then write shard-local.
+            buf = jax.device_put(buf, self.row_sharding)
         with self.lock:
             row = self._assign_row(learner_id)
-            self.buffer = _write_row(self.buffer, jnp.int32(row), buf)
+            if self.sharded:
+                self.buffer = self._writer(self.buffer, jnp.int32(row), buf)
+            else:
+                self.buffer = _write_row(self.buffer, jnp.int32(row), buf)
             self.weights, self.versions, self.mask = _set_row_meta(
                 self.weights, self.versions, self.mask,
                 jnp.int32(row), jnp.float32(weight), jnp.float32(version),
@@ -270,6 +379,7 @@ class ArenaStore:
 
     # -- selection ----------------------------------------------------------
     def row_of(self, learner_id: str) -> int | None:
+        """The learner's assigned arena row (None before first upload)."""
         return self._rows.get(learner_id)
 
     def weight_of(self, learner_id: str) -> float:
@@ -304,6 +414,7 @@ class ArenaStore:
             return jnp.asarray(sel)
 
     def valid_ids(self) -> list[str]:
+        """Learners whose arena row currently holds a valid upload."""
         with self.lock:
             return [lid for lid, row in self._rows.items() if self._valid[row]]
 
@@ -318,6 +429,7 @@ class ArenaStore:
             return int(self._valid.sum())
 
     def resident_bytes(self) -> int:
+        """Global device bytes held by the arena (buffer + metadata)."""
         return int(
             self.buffer.nbytes + self.weights.nbytes
             + self.versions.nbytes + self.mask.nbytes

@@ -23,6 +23,8 @@ __all__ = ["ChannelStats", "Channel", "Envelope"]
 
 @dataclasses.dataclass
 class ChannelStats:
+    """Cumulative transport accounting for one channel."""
+
     messages: int = 0
     bytes_moved: int = 0
     serialize_s: float = 0.0

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the controller's compute hot-spots.
+
+``fedavg.py`` (fused/masked weighted aggregation) and ``quantize.py`` (int8
+group quantization for transport) are the raw kernels; ``ops.py`` holds the
+jit'd public wrappers (padding + interpret-mode dispatch on CPU) and
+``ref.py`` the pure-XLA oracles the kernels are validated against.
+"""

@@ -23,7 +23,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fedavg_pallas", "masked_fedavg_pallas", "DEFAULT_BLOCK_P"]
+__all__ = [
+    "fedavg_pallas",
+    "masked_fedavg_pallas",
+    "choose_block_p",
+    "choose_block_p_dividing",
+    "choose_block_p_for_shard",
+    "DEFAULT_BLOCK_P",
+]
 
 # 8 sublanes x 128 lanes x 16 vregs worth of f32 per tile step
 DEFAULT_BLOCK_P = 16384
@@ -73,6 +80,27 @@ def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024) 
                 if lane_multiple * cand <= cap and cand > best:
                     best = cand
     return lane_multiple * best if best else cap
+
+
+def choose_block_p_for_shard(
+    p: int, n_learners: int, n_shards: int, lane_multiple: int = 1024
+) -> int:
+    """Block size for one column shard of a mesh-sharded arena.
+
+    Under ``shard_map`` the kernel sees the **local** ``(N, p / n_shards)``
+    shard, so the block must divide the *shard* width, not the global row —
+    a block sized for the global ``P`` would force every device to re-pad its
+    shard, reintroducing the O(N·P) copy the arena exists to avoid.
+    ``ArenaStore(mesh=...)`` pads rows to ``row_align * n_shards``, so the
+    shard width is always lane-aligned and a dividing block exists; a
+    non-dividing ad-hoc ``p`` falls back to :func:`choose_block_p` (the
+    caller pads, legacy behaviour).
+    """
+    if n_shards <= 1:
+        return choose_block_p_dividing(p, n_learners, lane_multiple)
+    if p % n_shards:
+        return choose_block_p(n_learners)
+    return choose_block_p_dividing(p // n_shards, n_learners, lane_multiple)
 
 
 def _fedavg_kernel(w_ref, stack_ref, out_ref):

@@ -18,7 +18,10 @@ from repro.kernels import quantize as _quant
 # CPU backend -> interpret mode.
 INTERPRET = jax.default_backend() == "cpu"
 
-__all__ = ["fedavg", "masked_fedavg", "quantize", "dequantize", "QuantCodec"]
+__all__ = [
+    "fedavg", "masked_fedavg", "masked_fedavg_sharded",
+    "quantize", "dequantize", "QuantCodec",
+]
 
 
 def _pad_to(x: jax.Array, multiple: int, axis: int = -1) -> tuple[jax.Array, int]:
@@ -78,8 +81,48 @@ def quantize(x: jax.Array, group: int = _quant.DEFAULT_GROUP,
 def dequantize(q: jax.Array, scales: jax.Array, orig_size: int,
                group: int = _quant.DEFAULT_GROUP,
                block_rows: int = _quant.DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Inverse of :func:`quantize`, sliced back to ``orig_size`` elements."""
     x = _quant.dequantize_pallas(q, scales, group, block_rows, interpret=INTERPRET)
     return x[:orig_size]
+
+
+def masked_fedavg_sharded(mesh, axes=None):
+    """Kernel-backed masked FedAvg over a mesh-sharded arena.
+
+    Returns a jitted ``(arena (N_max,P), weights, mask) -> (P,)`` that runs
+    :func:`masked_fedavg` **per column shard** under ``shard_map``: each
+    device's Pallas call sees only its local ``(N_max, P/n_shards)`` shard
+    (so ``choose_block_p_dividing`` picks a block that divides the *shard*
+    width — see ``kernels.fedavg.choose_block_p_for_shard``), the weight
+    normalization reduces only over the replicated ``(N_max,)`` vectors, and
+    the compiled program contains zero collectives.  The output keeps the
+    ``P(axes)`` column sharding of ``core/store.ArenaStore(mesh=...)``.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.aggregation import arena_axes
+
+    ax = arena_axes(mesh, axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in ax], dtype=np.int64))
+
+    def _local(arena, weights, mask):
+        # arena here is the device-local (N, P/n_shards) shard; size the
+        # block from the global width so the choice is explicit and testable.
+        block_p = _fedavg.choose_block_p_for_shard(
+            arena.shape[1] * n_shards, arena.shape[0], n_shards
+        )
+        return masked_fedavg(arena, weights, mask, block_p=block_p)
+
+    sm = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(None, ax), P(), P()),
+        out_specs=P(ax),
+        check_vma=False,
+    )
+    return jax.jit(sm)
 
 
 _DTYPE_CODES = {"float32": 0, "bfloat16": 1, "float16": 2, "float64": 3}
@@ -97,6 +140,7 @@ class QuantCodec:
 
     @staticmethod
     def encode(params):
+        """Quantize every float leaf to int8 + scales (ints pass through)."""
         def enc(leaf):
             leaf = jnp.asarray(leaf)
             if not jnp.issubdtype(leaf.dtype, jnp.floating):
@@ -116,6 +160,7 @@ class QuantCodec:
 
     @staticmethod
     def decode(encoded):
+        """Reconstruct the pytree encoded by :meth:`encode` (lossy to int8)."""
         def is_q(x):
             return isinstance(x, dict) and "__quant__" in x
 

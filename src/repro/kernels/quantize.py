@@ -72,6 +72,7 @@ def dequantize_pallas(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = False,
 ) -> jax.Array:
+    """Inverse of :func:`quantize_pallas`: int8 groups × scales -> float32."""
     rows = q.shape[0] // group
     assert rows % block_rows == 0, (rows, block_rows)
     qg = q.reshape(rows, group)

@@ -48,5 +48,6 @@ def quantize_ref(x: jax.Array, group: int = 256) -> tuple[jax.Array, jax.Array]:
 
 
 def dequantize_ref(q: jax.Array, scales: jax.Array, group: int = 256) -> jax.Array:
+    """Oracle for ``ops.dequantize``: per-group rescale back to float32."""
     qg = q.astype(jnp.float32).reshape(-1, group)
     return (qg * scales[:, None]).reshape(-1)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.compat import make_auto_mesh
 
-__all__ = ["make_production_mesh", "make_debug_mesh", "HARDWARE"]
+__all__ = ["make_production_mesh", "make_debug_mesh", "make_controller_mesh", "HARDWARE"]
 
 # TPU v5e-class constants used by the roofline analysis (launch/roofline.py).
 HARDWARE = {
@@ -31,3 +31,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (shard_map paths exercise on 1 device)."""
     return make_auto_mesh((data, model), ("data", "model"))
+
+
+def make_controller_mesh(n_shards: int | None = None):
+    """1-D ``("data",)`` mesh over the controller's local devices.
+
+    The mesh the sharded aggregation arena lays its ``(n_max, P)`` buffer out
+    on (``core/store.ArenaStore(mesh=...)``): ``P`` splits over ``data``, rows
+    are replication-free, and every row write / masked reduction stays
+    collective-free.  ``n_shards`` defaults to every visible device; pass 1
+    for a single-device smoke mesh (identical numerics, same code path).
+    """
+    import jax
+
+    n = int(n_shards) if n_shards else len(jax.devices())
+    return make_auto_mesh((n,), ("data",))

@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
-__all__ = ["ShardingPolicy", "make_policy", "constrain"]
+__all__ = ["ShardingPolicy", "make_policy", "constrain", "arena_specs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +90,34 @@ def constrain(x: jax.Array, policy: ShardingPolicy | None, *spec) -> jax.Array:
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(policy.mesh, P(*spec))
+    )
+
+
+def arena_specs(
+    mesh: Mesh, axes: str | tuple[str, ...] | None = None
+) -> tuple[NamedSharding, NamedSharding, NamedSharding]:
+    """Shardings for a column-sharded aggregation arena on ``mesh``.
+
+    The arena layout of ``core/store.ArenaStore(mesh=...)``: the persistent
+    ``(n_max, P)`` buffer is split along ``P`` over ``axes`` (default: the
+    mesh's ``"data"`` axis if present, else every axis) and *replicated-free*
+    along rows — each device owns a ``(n_max, P/n_shards)`` shard and no row
+    ever lives on two devices twice.  Returns
+    ``(buffer_sharding, row_sharding, replicated)``:
+
+    * ``buffer_sharding`` — ``P(None, axes)`` for the ``(n_max, P)`` arena;
+    * ``row_sharding`` — ``P(axes)`` for a single packed ``(P,)`` upload or
+      the ``(P,)`` aggregate;
+    * ``replicated`` — ``P()`` for the tiny ``(n_max,)`` metadata vectors
+      (weights / versions / mask).
+    """
+    from repro.core.aggregation import arena_axes
+
+    axes = arena_axes(mesh, axes)
+    return (
+        NamedSharding(mesh, P(None, axes)),
+        NamedSharding(mesh, P(axes)),
+        NamedSharding(mesh, P()),
     )
 
 

@@ -14,8 +14,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    ArenaStore, AsyncProtocol, Controller, Learner, SyncProtocol,
-    aggregation, packing,
+    ArenaStore, AsyncProtocol, Controller, Driver, FederationEnv, Learner,
+    SyncProtocol, aggregation, packing,
 )
 from repro.core.secure import secure_fedavg, secure_fedavg_arena
 from repro.kernels import ops, ref
@@ -101,6 +101,26 @@ def test_masked_kernel_block_divides_arena_rows():
     assert DEFAULT_BLOCK_P % 1024 == 0
 
 
+def test_choose_block_p_for_shard_divides_shard_width():
+    """The sharded-arena block (used by ops.masked_fedavg_sharded) must
+    divide the per-device shard width, not the global row."""
+    from repro.kernels.fedavg import (
+        choose_block_p, choose_block_p_dividing, choose_block_p_for_shard,
+    )
+
+    for n in (2, 8, 64):
+        for shards in (1, 2, 8):
+            for p in (1024 * shards, 8192 * shards, (1 << 20)):
+                if p % shards:
+                    continue
+                bp = choose_block_p_for_shard(p, n, shards)
+                assert (p // shards) % bp == 0, (n, shards, p, bp)
+                # equivalent to sizing directly from the local shard width
+                assert bp == choose_block_p_dividing(p // shards, n)
+    # non-divisible global width falls back to the padding path
+    assert choose_block_p_for_shard(5000, 4, 8) == choose_block_p(4)
+
+
 def test_masked_average_ignores_poisoned_invalid_row():
     """A dead row full of NaN must not leak into the aggregate."""
     arena = ArenaStore(num_params=100, n_max=4, row_align=128)
@@ -175,6 +195,86 @@ def test_arena_rejects_wrong_size_and_empty_mask_falls_back():
         arena.buffer, arena.weights, arena.mask
     )
     np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_n_max_exactly_at_capacity_never_grows():
+    """Filling every row of an exactly-sized arena must not trigger growth;
+    the first learner past capacity must."""
+    arena = ArenaStore(num_params=64, n_max=4, row_align=64)
+    bufs, ws = _fill(arena, 4, 64)
+    assert arena.n_max == 4 and arena.grow_events == 0 and len(arena) == 4
+    got = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )[:64]
+    want = aggregation.fedavg(jnp.stack(bufs), jnp.asarray(ws))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    arena.write("l4", jnp.ones((64,)), weight=1.0)  # one past capacity
+    assert arena.grow_events == 1 and arena.n_max == 8
+
+
+def test_learner_joins_after_growth():
+    """A learner registering after a growth event gets a fresh row in the
+    grown buffer; pre-growth rows keep their identity and contents."""
+    arena = ArenaStore(num_params=64, n_max=2, row_align=64)
+    bufs, ws = _fill(arena, 3, 64)  # third write grows 2 -> 4
+    assert arena.grow_events == 1
+    pre_rows = {f"l{i}": arena.row_of(f"l{i}") for i in range(3)}
+
+    late = jnp.full((64,), 9.0)
+    row = arena.write("late-joiner", late, weight=5.0)
+    assert row == 3  # next free row of the grown arena
+    assert {f"l{i}": arena.row_of(f"l{i}") for i in range(3)} == pre_rows
+    np.testing.assert_array_equal(
+        np.asarray(arena.row_view("late-joiner")), np.asarray(late)
+    )
+    # re-upload of a pre-growth learner still lands in its original row
+    arena.write("l0", jnp.zeros((64,)), weight=1.0)
+    assert arena.row_of("l0") == pre_rows["l0"]
+
+    got = aggregation.masked_weighted_average(
+        arena.buffer, arena.weights, arena.mask
+    )[:64]
+    want = aggregation.fedavg(
+        jnp.stack([jnp.zeros((64,)), bufs[1], bufs[2], late]),
+        jnp.asarray([1.0, ws[1], ws[2], 5.0]),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "env_kwargs,expected",
+    [
+        ({}, "arena"),
+        ({"lineage_length": 2}, "stack"),
+        ({"store_capacity_bytes": 1 << 20}, "stack"),
+        ({"lineage_length": 3, "store_capacity_bytes": 1 << 20}, "stack"),
+        ({"store_mode": "arena"}, "arena"),
+        ({"store_mode": "stack"}, "stack"),
+    ],
+)
+def test_driver_auto_picks_store_mode(env_kwargs, expected):
+    """The Driver auto-pick documented in README/docs/ARENA.md: lineage or
+    byte-capacity eviction forces the legacy hash-map store, everything else
+    gets the arena."""
+    driver = Driver(FederationEnv(**env_kwargs))
+    try:
+        assert driver.controller.store_mode == expected
+    finally:
+        driver.controller.shutdown()
+
+
+def test_driver_rejects_sharding_an_explicit_stack_store():
+    """arena_shards contradicts an explicitly requested stack store (the
+    auto-pick fallback ignores the knob; an explicit ask must raise)."""
+    with pytest.raises(ValueError):
+        Driver(FederationEnv(store_mode="stack", arena_shards=2))
+    # auto-pick falling back to stack drops the knob silently (documented)
+    driver = Driver(FederationEnv(lineage_length=2, arena_shards=2))
+    try:
+        assert driver.controller.store_mode == "stack"
+        assert driver.controller.arena_mesh is None
+    finally:
+        driver.controller.shutdown()
 
 
 def test_concurrent_writes_are_serialized():

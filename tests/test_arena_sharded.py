@@ -1,0 +1,196 @@
+"""Mesh-sharded aggregation arena: parity with the single-device arena.
+
+Every test runs in a SUBPROCESS with 8 XLA-forced host devices (the
+``test_multidevice.py`` pattern) and asserts the acceptance surface of the
+sharded arena (``core/store.ArenaStore(mesh=...)``, ``docs/ARENA.md``):
+
+* the ``(n_max, P)`` buffer is laid out column-sharded ``P(None, ("data",))``
+  and growth preserves both the sharding and the row contents;
+* the masked fused reduction, the staleness-weighted async reduction, and the
+  shard_map-ed Pallas kernel all match the single-device arena to ``allclose``
+  with **zero collectives** in the compiled HLO;
+* the sharded secure masked sum is **bit-identical** to the single-device
+  arena secure path;
+* the controller produces the same global model with ``arena_mesh=`` as
+  without, on sync / semi-sync / async / secure, and the Driver's
+  ``arena_shards`` knob plumbs through.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.multidevice
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Shared by the controller-parity subprocess scripts: a deterministic linear
+# learner identical to the one tests/test_arena.py uses for arena-vs-stack
+# parity, so the only varying factor between arms is the arena layout.
+_LEARNER = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (
+        AsyncProtocol, Controller, Learner, SemiSyncProtocol, SyncProtocol,
+    )
+    from repro.launch.mesh import make_controller_mesh
+    from repro.optim import sgd
+
+    def make_learner(i):
+        def loss_fn(p, b):
+            return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+        rng = np.random.default_rng(i)
+        X = rng.normal(size=(64, 4)).astype(np.float32)
+        y = X @ np.ones((4, 1), np.float32)
+        def data_fn(bs):
+            j = rng.integers(0, 64, size=bs)
+            return X[j], y[j]
+        return Learner(
+            f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+            data_fn, lambda: (X, y), sgd(0.05), 64,
+        )
+
+    def run(proto, mesh, secure=False, async_updates=0, n_learners=3):
+        ctrl = Controller(protocol=proto, secure=secure, arena_mesh=mesh)
+        ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+        for i in range(n_learners):
+            ctrl.register_learner(make_learner(i))
+        if async_updates:
+            ctrl.run_async(total_updates=async_updates)
+        else:
+            for _ in range(2):
+                ctrl.run_round()
+        out = np.asarray(ctrl.global_params["w"])
+        ctrl.shutdown()
+        return out, ctrl
+"""
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_store_parity_and_no_collectives():
+    """Store-level: layout, growth, fused/staleness/Pallas parity, secure
+    bit-identity, and a zero-collective compiled reduction."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import aggregation
+        from repro.core.secure import secure_fedavg_arena
+        from repro.core.store import ArenaStore
+        from repro.kernels import ops
+        from repro.launch.mesh import make_controller_mesh
+
+        mesh = make_controller_mesh()
+        assert mesh.shape["data"] == 8
+        P_ = 3000
+        sh = ArenaStore(num_params=P_, n_max=4, row_align=1024, mesh=mesh)
+        sd = ArenaStore(num_params=P_, n_max=4, row_align=1024)
+
+        # shard layout: P padded to row_align * n_shards, lane-aligned shards
+        assert sh.sharded and sh.n_shards == 8
+        assert sh.padded_params == 8192 and sh.shard_width == 1024
+        assert sh.buffer.sharding.spec == P(None, ("data",))
+
+        bufs, ws = [], []
+        for i in range(5):  # 5 > n_max=4: forces growth in both arms
+            buf = jax.random.normal(jax.random.key(i), (P_,), jnp.float32)
+            sh.write(f"l{i}", buf, weight=10.0 * (i + 1), version=float(i))
+            sd.write(f"l{i}", buf, weight=10.0 * (i + 1), version=float(i))
+            bufs.append(buf); ws.append(10.0 * (i + 1))
+        assert sh.grow_events == 1 and sh.n_max == 8
+        assert sh.buffer.sharding.spec == P(None, ("data",))  # growth kept it
+
+        # fused masked reduction parity + zero collectives
+        f = aggregation.masked_fedavg_sharded(mesh)
+        got = f(sh.buffer, sh.weights, sh.mask)[:P_]
+        want = aggregation.masked_weighted_average(sd.buffer, sd.weights, sd.mask)[:P_]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        hlo = f.lower(sh.buffer, sh.weights, sh.mask).compile().as_text()
+        for op in ("all-reduce", "all-gather", "all-to-all", "collective-permute"):
+            assert f" {op}(" not in hlo, f"unexpected collective {op}"
+
+        # staleness-weighted async reduction parity
+        fs = aggregation.masked_staleness_sharded(mesh, alpha=0.5)
+        got = fs(sh.buffer, sh.weights, sh.versions, jnp.float32(7.0), sh.mask)[:P_]
+        want = aggregation.masked_staleness_average(
+            sd.buffer, sd.weights, sd.versions, jnp.float32(7.0), sd.mask, 0.5)[:P_]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+        # shard_map-ed Pallas kernel parity (interpret mode on CPU)
+        fk = ops.masked_fedavg_sharded(mesh)
+        got = fk(sh.buffer, sh.weights, sh.mask)[:P_]
+        want = aggregation.masked_weighted_average(sd.buffer, sd.weights, sd.mask)[:P_]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+        # secure masked sum: bit-identical, sharded accumulator or not
+        rows = [sh.row_of(f"l{i}") for i in range(5)]
+        got = secure_fedavg_arena(sh.buffer, rows, ws, num_params=P_,
+                                  base_seed=3, out_sharding=sh.row_sharding)
+        want = secure_fedavg_arena(sd.buffer, rows, ws, num_params=P_, base_seed=3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        print("SHARDED STORE PARITY OK")
+    """)
+
+
+def test_sharded_controller_parity_sync_semisync_secure():
+    """Controller-level: identical global model with and without arena_mesh
+    on sync, sync+secure, and semi-sync rounds."""
+    _run(_LEARNER + """
+    mesh = make_controller_mesh()
+    arms = [
+        ("sync", lambda: SyncProtocol(local_steps=2, batch_size=16), False),
+        ("sync-secure", lambda: SyncProtocol(local_steps=2, batch_size=16), True),
+        ("semisync", lambda: SemiSyncProtocol(hyperperiod_s=0.05, batch_size=16), False),
+    ]
+    for name, mk, secure in arms:
+        a, actrl = run(mk(), mesh, secure=secure)
+        b, _ = run(mk(), None, secure=secure)
+        tol = 1e-3 if secure else 1e-5  # secure: fixed-point quantization
+        np.testing.assert_allclose(a, b, atol=tol)
+        assert actrl.arena.sharded and actrl.arena.n_shards == 8
+        assert actrl.arena.total_writes >= 6
+        print(name, "OK")
+    print("SHARDED CONTROLLER SYNC/SEMI/SECURE OK")
+    """)
+
+
+def test_sharded_controller_parity_async_and_driver():
+    """Async community updates off the sharded arena match the single-device
+    arena (one learner keeps arrival order deterministic), and the Driver's
+    arena_shards knob builds the controller mesh."""
+    _run(_LEARNER + """
+    from repro.core import Driver, FederationEnv, TerminationCriteria
+
+    mesh = make_controller_mesh()
+    a, actrl = run(AsyncProtocol(local_steps=1, batch_size=8), mesh,
+                   async_updates=3, n_learners=1)
+    b, _ = run(AsyncProtocol(local_steps=1, batch_size=8), None,
+               async_updates=3, n_learners=1)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    assert actrl.arena.sharded and actrl.arena.total_writes >= 3
+    print("async OK")
+
+    env = FederationEnv(protocol="sync", local_steps=1, batch_size=8,
+                        arena_shards=-1,
+                        termination=TerminationCriteria(max_rounds=1))
+    d = Driver(env)
+    d.initialize({"w": jnp.zeros((4, 1))}, [make_learner(0)])
+    d.run()
+    assert d.controller.arena.sharded and d.controller.arena.n_shards == 8
+    print("SHARDED ASYNC + DRIVER OK")
+    """)
