@@ -1,20 +1,22 @@
 """Transport / serialization benchmark (the dispatch-time share of
 Figs. 5a/5d...): per-tensor pickle (naive) vs flat-byte packing (paper's
-proto-tensor) vs flat packing + int8 Pallas codec (beyond paper).
+proto-tensor) vs flat packing + int8 Pallas codec (beyond paper), plus the
+serialize-once broadcast fan-out vs legacy per-send dispatch.
 
 Reports bytes-on-wire and serialize+deserialize wall time per model size.
 """
 
 from __future__ import annotations
 
-import pickle
+import argparse
+import json
 
 import jax
 import numpy as np
 
 from benchmarks.timing import bench
 from repro.configs import housing_mlp
-from repro.core import naive, packing
+from repro.core import Channel, naive, packing
 from repro.kernels.ops import QuantCodec
 from repro.models import mlp as mlp_model
 
@@ -64,5 +66,75 @@ def run(sizes=("100k", "1m", "10m")):
     return rows
 
 
+def run_broadcast(sizes=("1m", "10m"), n_recipients=32, iters=3):
+    """Serialize-once fan-out vs legacy per-send dispatch, per model size.
+
+    ``persend`` re-serializes the pytree for every recipient (the old
+    ``Channel.send`` loop, O(N·P)); ``broadcast`` serializes once straight
+    off the flat numeric buffer and stamps N shared envelopes (O(P + N)).
+    A bit-identity check against the per-send bytes keeps the arms honest.
+    """
+    rows = []
+    for size in sizes:
+        cfg = housing_mlp.config(size)
+        params = mlp_model.init_params(jax.random.key(0), cfg)
+        manifest = packing.build_manifest(params)
+        numeric = packing.pack_numeric(params)
+        jax.block_until_ready(numeric)
+
+        def persend():
+            ch = Channel()
+            for _ in range(n_recipients):
+                env = ch.send(params)
+            return env
+
+        def broadcast():
+            ch = Channel()
+            bc = ch.broadcast(params=params, buffer=numeric, manifest=manifest)
+            for _ in range(n_recipients):
+                env = bc.to()
+            return env
+
+        # honesty: both arms put identical bytes on the wire
+        np.testing.assert_array_equal(
+            np.asarray(persend().buffer), np.asarray(broadcast().buffer)
+        )
+        t_persend = bench(persend, warmup=1, iters=iters, block=False)
+        t_broadcast = bench(broadcast, warmup=1, iters=iters, block=False)
+        rows.append({
+            "bench": "broadcast", "size": size, "recipients": n_recipients,
+            "persend_s": t_persend, "broadcast_s": t_broadcast,
+            "speedup_broadcast_vs_persend": t_persend / t_broadcast,
+        })
+        print(
+            f"broadcast,{size},N={n_recipients},"
+            f"persend={t_persend*1e3:.2f}ms,broadcast={t_broadcast*1e3:.2f}ms,"
+            f"speedup={t_persend/t_broadcast:.1f}x",
+            flush=True,
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (seconds, not minutes)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump result rows as JSON")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows = run(sizes=("100k",)) + run_broadcast(sizes=("100k",),
+                                                    n_recipients=8, iters=2)
+    else:
+        rows = run() + run_broadcast()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.json}", flush=True)
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -14,6 +14,7 @@ from repro.core.packing import (
     build_manifest,
     num_params,
     pack_bytes,
+    pack_bytes_from_numeric,
     pack_numeric,
     round_up,
     unpack_bytes,
@@ -40,11 +41,12 @@ from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.learner import EvalReport, Learner, LocalUpdate
 from repro.core.controller import Controller, RoundTimings
 from repro.core.driver import Driver, FederationEnv, TerminationCriteria
-from repro.core.transport import Channel, ChannelStats, Envelope
+from repro.core.transport import Broadcast, Channel, ChannelStats, Envelope
 
 __all__ = [
     "Manifest", "TensorSpec", "build_manifest", "num_params",
-    "pack_bytes", "pack_numeric", "round_up", "unpack_bytes", "unpack_numeric",
+    "pack_bytes", "pack_bytes_from_numeric", "pack_numeric", "round_up",
+    "unpack_bytes", "unpack_numeric",
     "fedavg", "weighted_average", "coordinate_median", "trimmed_mean",
     "masked_fedavg", "masked_staleness_average", "masked_weighted_average",
     "masked_fedavg_sharded", "masked_staleness_sharded",
@@ -56,5 +58,5 @@ __all__ = [
     "Learner", "LocalUpdate", "EvalReport",
     "Controller", "RoundTimings",
     "Driver", "FederationEnv", "TerminationCriteria",
-    "Channel", "ChannelStats", "Envelope",
+    "Broadcast", "Channel", "ChannelStats", "Envelope",
 ]

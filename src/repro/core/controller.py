@@ -7,6 +7,16 @@ re-engineered operations of §3:
   executor; the learner's completion callback (MarkTaskCompleted) inserts the
   local model into the :class:`ModelStore`.  The controller never blocks on a
   single learner while dispatching.
+* **serialize-once broadcast dispatch** — the global model is serialized at
+  most **once per model version** (``Channel.broadcast`` straight off the
+  flat ``global_buffer``, manifest cached — never rebuilt per send) and
+  fanned out as shared read-only envelopes, so per-round dispatch cost is
+  O(P + N), independent of federation size at fixed payload.
+* **flat-buffer upload fast path** — learners hold the manifest (shipped once
+  at registration) and return the packed ``(P,)`` buffer with every upload,
+  so MarkTaskCompleted writes straight into the arena row: zero pytree
+  flattening and zero host concatenation on arrival, in both the sync round
+  and the async community-update loop.
 * **sync eval dispatch** — EvaluateModel keeps the call open (paper Fig. 10).
 * **packed aggregation** — local models are packed once at upload
   (``pack_numeric``) and aggregated as a fused ``(N, P)`` reduction
@@ -49,7 +59,7 @@ from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, 
 from repro.core.selection import SelectionPolicy, select_learners
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
-from repro.core.transport import Channel
+from repro.core.transport import Broadcast, Channel
 
 __all__ = ["RoundTimings", "Controller"]
 
@@ -118,6 +128,13 @@ class Controller:
     arena_axes:
         Mesh axis name(s) to split ``P`` over (default: the ``"data"`` axis
         if the mesh has one, else every axis).
+    flat_uploads:
+        If True (default), every registered learner receives the model
+        manifest (plus the arena row width) once at registration and returns
+        flat packed buffers with its uploads, so ``_mark_task_completed``
+        never flattens a pytree (``upload_fallback_packs`` counts the times
+        it had to).  False keeps the legacy pack-on-arrival path, for parity
+        testing.
     """
 
     def __init__(
@@ -137,6 +154,7 @@ class Controller:
         arena_row_align: int = 1024,
         arena_mesh: Any = None,
         arena_axes: Any = None,
+        flat_uploads: bool = True,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -189,14 +207,32 @@ class Controller:
         # async protocol state
         self._model_version = 0
         self._learner_versions: dict[str, int] = {}
+        # serialize-once dispatch state: one wire payload per model version
+        self.flat_uploads = flat_uploads
+        self._wire_lock = threading.Lock()
+        self._wire_cache: tuple[tuple, Broadcast] | None = None
+        # perf counters asserted by tests/test_dispatch.py: actual global-
+        # model serializations triggered by dispatch, and the number of
+        # uploads the controller had to flatten itself (0 on the fast path)
+        self.dispatch_serializations = 0
+        self.upload_fallback_packs = 0
 
     # ------------------------------------------------------------------ init
     def set_initial_model(self, params: Any) -> None:
-        """Driver ships initial model tensors to the controller (Fig. 8)."""
-        self.global_params = params
+        """Driver ships initial model tensors to the controller (Fig. 8).
+
+        The controller's canonical model state is the flat numeric
+        ``global_buffer`` + cached ``manifest``; ``global_params`` is
+        normalized through one numeric roundtrip so the serialize-once
+        broadcast (which reads the buffer) and the legacy per-send path
+        (which reads the pytree) are bit-identical from round zero.
+        """
         self.manifest = packing.build_manifest(params)
         self.global_buffer = packing.pack_numeric(params)
+        self.global_params = packing.unpack_numeric(self.global_buffer, self.manifest)
         self._server_state = self.server_opt.init(self.global_buffer)
+        with self._wire_lock:
+            self._wire_cache = None
         if self.store_mode == "arena":
             self.arena = ArenaStore(
                 num_params=max(1, int(self.global_buffer.shape[0])),
@@ -217,12 +253,28 @@ class Controller:
                 self._sharded_staleness_fn = aggregation.masked_staleness_sharded(
                     self.arena.mesh, self.arena.axes, alpha
                 )
+        for learner in self._learners.values():
+            self._ship_manifest(learner)
+
+    def _ship_manifest(self, learner: Learner) -> None:
+        """Ship the wire manifest + arena row width to one learner (once).
+
+        This is the flat-upload contract: with the manifest resident the
+        learner packs its own uploads (padded to the arena row width), so
+        arrival is a straight arena row write.  No-op until the initial model
+        exists or when ``flat_uploads=False``.
+        """
+        if not self.flat_uploads or self.manifest is None:
+            return
+        pad_to = self.arena.padded_params if self.arena is not None else None
+        learner.accept_manifest(self.manifest, pad_to=pad_to)
 
     def register_learner(self, learner: Learner) -> None:
         """Admit a learner to the federation (paper Fig. 8 join)."""
         self._learners[learner.learner_id] = learner
         self._learner_profiles[learner.learner_id] = {}
         self._learner_versions[learner.learner_id] = 0
+        self._ship_manifest(learner)
 
     @property
     def learner_ids(self) -> list[str]:
@@ -230,14 +282,38 @@ class Controller:
         return list(self._learners)
 
     # -------------------------------------------------------------- dispatch
+    def _broadcast(self) -> Broadcast:
+        """The current model's shared wire payload, serialized at most once.
+
+        Cached per (model version, codec): every dispatch within one version
+        — train fan-out, eval fan-out, async re-dispatches between community
+        updates — reuses the same read-only byte buffer, and the bytes come
+        straight off ``global_buffer`` with the cached manifest (no pytree
+        flattening, no manifest rebuild).  Aggregation bumps the version,
+        which invalidates the cache on the next dispatch.
+        """
+        key = (self._model_version, id(self.channel.codec))
+        with self._wire_lock:
+            if self._wire_cache is None or self._wire_cache[0] != key:
+                bc = self.channel.broadcast(
+                    params=self.global_params,
+                    buffer=self.global_buffer,
+                    manifest=self.manifest,
+                )
+                self.dispatch_serializations += 1
+                self._wire_cache = (key, bc)
+            return self._wire_cache[1]
+
     def _dispatch_train(self, selected: Sequence[str]) -> tuple[list[Future], float]:
-        """Asynchronous RunTask dispatch: serialize model once per learner,
-        submit, collect Acks.  Returns completion futures + dispatch time."""
+        """Asynchronous RunTask dispatch: serialize the model **once** for the
+        whole cohort, fan out per-recipient envelopes, submit, collect Acks.
+        Returns completion futures + dispatch time."""
         t0 = time.perf_counter()
+        broadcast = self._broadcast()
         futures = []
         for lid in selected:
             task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
-            envelope = self.channel.send(self.global_params, {"task": task})
+            envelope = broadcast.to({"task": task})
 
             def run(lid=lid, task=task, envelope=envelope) -> LocalUpdate:
                 learner = self._learners[lid]
@@ -250,18 +326,27 @@ class Controller:
         dispatch_s = time.perf_counter() - t0
         return futures, dispatch_s
 
-    def _mark_task_completed(self, update: LocalUpdate) -> None:
-        """MarkTaskCompleted: pack + insert into the store.
+    def _upload_buffer(self, update: LocalUpdate, pad_to: int | None) -> jax.Array:
+        """The upload's flat buffer: the learner's pre-packed fast path, or a
+        counted controller-side flattening fallback."""
+        if update.buffer is not None:
+            return update.buffer
+        with self._store_lock:  # completions run on concurrent executor threads
+            self.upload_fallback_packs += 1
+        return packing.pack_numeric(update.params, pad_to=pad_to)
 
-        Arena mode packs straight into the learner's assigned arena row (a
-        donated in-place device write — the upload never becomes a standalone
-        buffer the aggregation would later have to re-stack).  Stack mode
-        inserts a standalone packed buffer into the hash-map store.
+    def _mark_task_completed(self, update: LocalUpdate) -> None:
+        """MarkTaskCompleted: insert the upload into the store.
+
+        Fast path (``flat_uploads``): the learner already packed its params
+        into a flat buffer at the arena's padded row width, so arena mode is
+        a straight donated row write — zero pytree flattening, zero host
+        concatenation on arrival.  Otherwise the controller packs here (the
+        legacy path, counted in ``upload_fallback_packs``).  Stack mode
+        inserts the buffer into the hash-map store either way.
         """
         if self.store_mode == "arena":
-            buffer = packing.pack_numeric(
-                update.params, pad_to=self.arena.padded_params
-            )
+            buffer = self._upload_buffer(update, pad_to=self.arena.padded_params)
             self.arena.write(
                 update.learner_id,
                 buffer,
@@ -272,7 +357,7 @@ class Controller:
                 prof = self._learner_profiles[update.learner_id]
                 prof["seconds_per_step"] = update.seconds_per_step
             return
-        buffer = packing.pack_numeric(update.params)
+        buffer = self._upload_buffer(update, pad_to=None)
         with self._store_lock:
             self.store.insert(
                 ModelRecord(
@@ -362,9 +447,12 @@ class Controller:
                     base_seed=self.secure_seed + self.round_id,
                     out_sharding=arena.row_sharding,
                 )[: arena.num_params]
-            mask = arena.round_mask(list(selected))
-            if not float(jnp.sum(mask)) > 0:
+            # Empty-cohort check from the arena's host-side row map: probing
+            # the device mask (float(jnp.sum(mask))) would force a blocking
+            # device round-trip onto every round's critical path.
+            if arena.num_valid(list(selected)) == 0:
                 raise RuntimeError("no local models available to aggregate")
+            mask = arena.round_mask(list(selected))
             if self._sharded_masked_fn is not None and (
                 self.masked_aggregate_fn is aggregation.masked_weighted_average
             ):
@@ -375,11 +463,16 @@ class Controller:
 
     # ------------------------------------------------------------ eval round
     def _evaluate(self, selected: Sequence[str]) -> tuple[list[EvalReport], float, float]:
-        """Synchronous EvaluateModel fan-out (paper Fig. 10, T7-T9)."""
+        """Synchronous EvaluateModel fan-out (paper Fig. 10, T7-T9).
+
+        Shares the post-aggregation model's single serialization with the
+        next round's train dispatch (both read the same version's broadcast).
+        """
         t0 = time.perf_counter()
+        broadcast = self._broadcast()
         futures = []
         for lid in selected:
-            envelope = self.channel.send(self.global_params, {"eval": True})
+            envelope = broadcast.to({"eval": True})
 
             def run(lid=lid, envelope=envelope) -> EvalReport:
                 params = self.channel.recv(envelope)
@@ -501,7 +594,9 @@ class Controller:
         def dispatch_to(lid: str) -> None:
             task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
             self._learner_versions[lid] = self._model_version
-            envelope = self.channel.send(self.global_params, {"task": task})
+            # Learners dispatched between two community updates share one
+            # serialization (the broadcast is cached per model version).
+            envelope = self._broadcast().to({"task": task})
 
             def run() -> None:
                 params = self.channel.recv(envelope)

@@ -64,6 +64,11 @@ class FederationEnv:
     # falls back to the hash-map store; combining it with an explicit
     # store_mode="stack" raises.
     arena_shards: int = 0
+    # Flat-buffer upload fast path: ship the wire manifest to every learner
+    # at registration so uploads arrive as packed (P,) buffers and the
+    # controller never flattens a pytree on arrival.  False keeps the legacy
+    # pack-on-arrival path (parity/debugging).
+    flat_uploads: bool = True
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
@@ -123,6 +128,7 @@ class Driver:
             secure=env.secure_aggregation,
             store_mode=store_mode,
             arena_mesh=arena_mesh,
+            flat_uploads=env.flat_uploads,
         )
         self._learners: list[Learner] = []
         self._last_heartbeat = 0.0

@@ -20,6 +20,7 @@ from typing import Any, Callable, Iterator
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.scheduler import TrainTask
 from repro.optim import Optimizer, apply_fedprox
 
@@ -28,7 +29,15 @@ __all__ = ["LocalUpdate", "EvalReport", "Learner"]
 
 @dataclasses.dataclass
 class LocalUpdate:
-    """Payload of MarkTaskCompleted."""
+    """Payload of MarkTaskCompleted.
+
+    ``buffer`` is the flat-buffer upload fast path: when the learner holds the
+    federation's manifest (shipped once at registration), it packs its trained
+    params into the flat ``(P,)`` numeric buffer itself — already padded to
+    the controller's arena row width — so the controller writes it straight
+    into the arena row with zero pytree flattening on arrival.  ``None`` means
+    the controller must pack ``params`` itself (the legacy path).
+    """
 
     learner_id: str
     round_id: int
@@ -36,6 +45,7 @@ class LocalUpdate:
     num_examples: int
     metrics: dict
     seconds_per_step: float
+    buffer: Any = None
 
 
 @dataclasses.dataclass
@@ -77,6 +87,21 @@ class Learner:
         self.num_examples = num_examples
         self._step_cache: dict[float, Callable] = {}
         self.alive = True
+        self._manifest = None
+        self._upload_pad: int | None = None
+
+    # -- wire contract ------------------------------------------------------
+    def accept_manifest(self, manifest: Any, pad_to: int | None = None) -> None:
+        """Receive the federation's wire manifest (shipped once, at join).
+
+        MetisFL ships the model's proto descriptors to every participant at
+        registration; this is the analogue.  With a manifest resident the
+        learner returns its trained model as a flat packed buffer
+        (``LocalUpdate.buffer``), pre-padded to ``pad_to`` (the controller's
+        arena row width), so the upload path never re-flattens a pytree.
+        """
+        self._manifest = manifest
+        self._upload_pad = pad_to
 
     # -- heartbeat ----------------------------------------------------------
     def ping(self) -> bool:
@@ -115,6 +140,11 @@ class Learner:
         jax.block_until_ready(loss)
         elapsed = time.perf_counter() - t0
         losses.append(float(loss))
+        buffer = None
+        if self._manifest is not None:
+            # Flat-buffer upload fast path: pack learner-side (off the
+            # controller's arrival path), padded to the arena row width.
+            buffer = packing.pack_numeric(params, pad_to=self._upload_pad)
         return LocalUpdate(
             learner_id=self.learner_id,
             round_id=task.round_id,
@@ -122,6 +152,7 @@ class Learner:
             num_examples=self.num_examples,
             metrics={"train_loss": losses[-1], "local_steps": task.local_steps},
             seconds_per_step=elapsed / max(task.local_steps, 1),
+            buffer=buffer,
         )
 
     # -- evaluation ---------------------------------------------------------

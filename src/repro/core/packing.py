@@ -23,6 +23,7 @@ MetisFL's proto descriptors.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Sequence
 
 import jax
@@ -36,6 +37,7 @@ __all__ = [
     "pack_numeric",
     "unpack_numeric",
     "pack_bytes",
+    "pack_bytes_from_numeric",
     "unpack_bytes",
     "num_params",
     "round_up",
@@ -198,15 +200,72 @@ def pack_bytes(params: Any) -> tuple[np.ndarray, Manifest]:
     return out, manifest
 
 
-def unpack_bytes(buffer: np.ndarray, manifest: Manifest) -> Any:
-    """Inverse of :func:`pack_bytes` (zero-copy views into the wire buffer,
-    one device_put per tensor)."""
+def pack_bytes_from_numeric(buffer: Any, manifest: Manifest) -> np.ndarray:
+    """Wire bytes straight off a flat numeric buffer — no pytree walk.
+
+    The serialize-once broadcast path (``core/transport.Channel.broadcast``)
+    feeds the controller's already-maintained ``global_buffer`` here instead
+    of re-flattening ``global_params`` leaf by leaf: one device→host transfer
+    of the whole buffer, then a single ``astype``/byte view when the model is
+    dtype-homogeneous (the common case), or one cast per spec otherwise.  A
+    zero-padded tail (``pack_numeric(pad_to=...)``) is sliced off.
+
+    Bit-identical to ``pack_bytes(unpack_numeric(buffer, manifest))[0]`` —
+    i.e. to serializing exactly the pytree the controller's numeric state
+    decodes to.  The wire bytes are always *materialized* (one O(P) copy,
+    like ``pack_bytes``), never a zero-copy alias of ``buffer``: the channel
+    contract is to perform the real serialization work it accounts for, and
+    on accelerator backends the host transfer is unavoidable anyway.
+    """
+    if not manifest.specs:
+        return np.empty((0,), np.uint8)
+    host = np.asarray(buffer)[: manifest.total_elements]
+    dtypes = {s.dtype for s in manifest.specs}
+    if len(dtypes) == 1:
+        dt = jnp.dtype(next(iter(dtypes)))
+        wire = host.astype(dt, copy=True)
+        return wire.reshape(-1).view(np.uint8)
+    out = np.empty((manifest.total_bytes,), np.uint8)
+    cursor = 0
+    for spec in manifest.specs:
+        seg = host[spec.offset : spec.offset + spec.size]
+        raw = np.ascontiguousarray(seg.astype(jnp.dtype(spec.dtype)))
+        out[cursor : cursor + spec.nbytes] = raw.reshape(-1).view(np.uint8)
+        cursor += spec.nbytes
+    return out
+
+
+@functools.partial(jax.jit, static_argnames="manifest")
+def _unpack_bytes_device(buffer: jax.Array, manifest: Manifest) -> Any:
+    """Device-side wire decode: slice + bitcast every tensor out of one
+    resident ``uint8`` buffer (compiled once per manifest, cached)."""
     leaves = []
     cursor = 0
     for spec in manifest.specs:
-        nbytes = spec.nbytes
-        seg = buffer[cursor : cursor + nbytes]
-        arr = seg.view(jnp.dtype(spec.dtype)).reshape(spec.shape)
-        leaves.append(jnp.asarray(arr))
-        cursor += nbytes
+        dt = jnp.dtype(spec.dtype)
+        seg = jax.lax.slice(buffer, (cursor,), (cursor + spec.nbytes,))
+        if dt == jnp.dtype(bool):
+            leaf = seg.astype(bool)  # XLA cannot bitcast to pred
+        elif dt.itemsize == 1:
+            leaf = jax.lax.bitcast_convert_type(seg, dt)
+        else:
+            leaf = jax.lax.bitcast_convert_type(seg.reshape(spec.size, dt.itemsize), dt)
+        leaves.append(leaf.reshape(spec.shape))
+        cursor += spec.nbytes
     return jax.tree_util.tree_unflatten(manifest.treedef, leaves)
+
+
+def unpack_bytes(buffer: np.ndarray, manifest: Manifest) -> Any:
+    """Inverse of :func:`pack_bytes`: **one** ``device_put`` of the whole wire
+    buffer, then device-side slices + bitcasts per tensor.
+
+    The legacy implementation transferred one tensor at a time (one host→
+    device copy per leaf — hundreds for a deep model); this path moves the
+    buffer once and reconstructs every tensor on device through a jitted
+    program cached per manifest, so a receiver's deserialization cost is a
+    single O(P) transfer regardless of how many tensors the model has.
+    """
+    if not manifest.specs:
+        return jax.tree_util.tree_unflatten(manifest.treedef, [])
+    dev = jnp.asarray(np.ascontiguousarray(buffer))
+    return _unpack_bytes_device(dev, manifest)

@@ -418,6 +418,25 @@ class ArenaStore:
         with self.lock:
             return [lid for lid, row in self._rows.items() if self._valid[row]]
 
+    def num_valid(self, learner_ids: Sequence[str] | None = None) -> int:
+        """How many of the given learners hold a valid upload (host-side).
+
+        ``None`` counts every valid row.  Answered entirely from the arena's
+        host-side row map — no device read, no sync.  This is how the
+        controller detects an empty cohort before aggregating: the previous
+        ``float(jnp.sum(mask))`` probe forced a device round-trip onto every
+        round's critical path.
+        """
+        with self.lock:
+            if learner_ids is None:
+                return int(self._valid.sum())
+            count = 0
+            for lid in learner_ids:
+                row = self._rows.get(lid)
+                if row is not None and self._valid[row]:
+                    count += 1
+            return count
+
     # -- accounting ---------------------------------------------------------
     def __contains__(self, learner_id: str) -> bool:
         with self.lock:

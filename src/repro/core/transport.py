@@ -6,11 +6,28 @@ in-process channel that performs the *real* serialization work
 (``core/packing.pack_bytes``), counts bytes, and optionally accounts virtual
 wire time from a bandwidth/latency model — so benchmarks can separate compute
 cost from modeled network cost without sleeping.
+
+Two send paths exist:
+
+* :meth:`Channel.send` — the legacy point-to-point half: one serialization per
+  recipient (kept for parity testing and single-recipient messages).
+* :meth:`Channel.broadcast` — the fan-out half: serialize **once** into a
+  shared read-only byte buffer, then stamp per-recipient envelopes with
+  :meth:`Broadcast.to`.  Each ``to()`` charges that recipient's bytes and
+  virtual wire time but never re-serializes, so dispatch cost is
+  O(P + N) instead of O(N·P).  When the caller already maintains the flat
+  numeric buffer (the controller's ``global_buffer``), the wire bytes come
+  straight off it (``packing.pack_bytes_from_numeric``) — no pytree walk at
+  all.
+
+All stats mutation is lock-guarded: the controller's async protocol calls
+``send``/``recv``/``Broadcast.to`` concurrently from executor threads.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -18,15 +35,23 @@ import numpy as np
 
 from repro.core import packing
 
-__all__ = ["ChannelStats", "Channel", "Envelope"]
+__all__ = ["ChannelStats", "Channel", "Envelope", "Broadcast"]
 
 
 @dataclasses.dataclass
 class ChannelStats:
-    """Cumulative transport accounting for one channel."""
+    """Cumulative transport accounting for one channel.
+
+    ``messages``/``bytes_moved``/``virtual_wire_s`` count per *recipient*
+    (a broadcast to N learners counts N); ``serializations``/``serialize_s``
+    count actual serialization work (the same broadcast counts 1).  Mutated
+    only by :class:`Channel` under its stats lock — safe to read from tests
+    after joining worker threads.
+    """
 
     messages: int = 0
     bytes_moved: int = 0
+    serializations: int = 0
     serialize_s: float = 0.0
     deserialize_s: float = 0.0
     virtual_wire_s: float = 0.0
@@ -34,11 +59,58 @@ class ChannelStats:
 
 @dataclasses.dataclass(frozen=True)
 class Envelope:
-    """One message on the wire: byte buffer + manifest + metadata."""
+    """One message on the wire: byte buffer + manifest + metadata.
+
+    Envelopes minted by :meth:`Broadcast.to` share one read-only buffer and
+    manifest across all recipients; only ``metadata`` is per-recipient.
+    """
 
     buffer: np.ndarray
     manifest: packing.Manifest
     metadata: dict
+
+
+class Broadcast:
+    """One serialized payload fanned out to many recipients.
+
+    Created by :meth:`Channel.broadcast`.  The byte buffer and manifest are
+    serialized exactly once and shared read-only; :meth:`to` mints a
+    per-recipient :class:`Envelope` and charges that recipient's bytes and
+    virtual wire time on the owning channel.  Thread-safe: ``to`` may be
+    called concurrently from dispatch executor threads.
+    """
+
+    def __init__(
+        self,
+        channel: "Channel",
+        buffer: np.ndarray,
+        manifest: packing.Manifest,
+        metadata: dict,
+    ):
+        try:
+            buffer.flags.writeable = False  # shared across recipients
+        except ValueError:
+            pass  # already a read-only view (e.g. of a jax host buffer)
+        self._channel = channel
+        self.buffer = buffer
+        self.manifest = manifest
+        self._metadata = metadata
+        self._lock = threading.Lock()
+        self.recipients = 0
+
+    def to(self, metadata: dict | None = None) -> Envelope:
+        """Mint one recipient's envelope: shared bytes, fresh metadata.
+
+        Per-recipient accounting (message count, bytes, virtual wire time)
+        happens here; serialization happened once, at broadcast creation.
+        """
+        md = dict(self._metadata)
+        if metadata:
+            md.update(metadata)
+        self._channel._account_send(int(self.buffer.nbytes))
+        with self._lock:
+            self.recipients += 1
+        return Envelope(buffer=self.buffer, manifest=self.manifest, metadata=md)
 
 
 class Channel:
@@ -59,27 +131,72 @@ class Channel:
         self.latency_ms = latency_ms
         self.codec = quantize_codec
         self.stats = ChannelStats()
+        self._stats_lock = threading.Lock()
 
+    # -- accounting ---------------------------------------------------------
+    def _wire_time(self, nbytes: int) -> float:
+        return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_gbps * 1e9)
+
+    def _account_send(self, nbytes: int) -> None:
+        with self._stats_lock:
+            self.stats.messages += 1
+            self.stats.bytes_moved += nbytes
+            self.stats.virtual_wire_s += self._wire_time(nbytes)
+
+    def _account_serialize(self, dt: float) -> None:
+        with self._stats_lock:
+            self.stats.serializations += 1
+            self.stats.serialize_s += dt
+
+    # -- send halves --------------------------------------------------------
     def send(self, params: Any, metadata: dict | None = None) -> Envelope:
-        """Serialize a pytree for the wire (the sender half)."""
+        """Serialize a pytree for one recipient (the legacy per-send half)."""
         t0 = time.perf_counter()
         if self.codec is not None:
             params = self.codec.encode(params)
         buf, manifest = packing.pack_bytes(params)
-        dt = time.perf_counter() - t0
-        self.stats.messages += 1
-        self.stats.bytes_moved += int(buf.nbytes)
-        self.stats.serialize_s += dt
-        self.stats.virtual_wire_s += (
-            self.latency_ms / 1e3 + buf.nbytes * 8 / (self.bandwidth_gbps * 1e9)
-        )
+        self._account_serialize(time.perf_counter() - t0)
+        self._account_send(int(buf.nbytes))
         return Envelope(buffer=buf, manifest=manifest, metadata=dict(metadata or {}))
 
+    def broadcast(
+        self,
+        params: Any = None,
+        metadata: dict | None = None,
+        *,
+        buffer: Any = None,
+        manifest: packing.Manifest | None = None,
+    ) -> Broadcast:
+        """Serialize **once** for a fan-out; recipients pay only wire time.
+
+        With ``buffer=``/``manifest=`` (the controller's flat numeric
+        ``global_buffer`` plus its cached manifest) and no codec, the wire
+        bytes come straight off the flat buffer
+        (``packing.pack_bytes_from_numeric``) — zero pytree flattening.
+        Otherwise falls back to ``pack_bytes(params)`` (the codec, when set,
+        is applied to ``params``) — still exactly one serialization.
+
+        Per-recipient byte/wire-time accounting happens at each
+        :meth:`Broadcast.to`; this call accounts only the serialization.
+        """
+        t0 = time.perf_counter()
+        if buffer is not None and manifest is not None and self.codec is None:
+            wire = packing.pack_bytes_from_numeric(buffer, manifest)
+            m = manifest
+        else:
+            src = params if self.codec is None else self.codec.encode(params)
+            wire, m = packing.pack_bytes(src)
+        self._account_serialize(time.perf_counter() - t0)
+        return Broadcast(self, wire, m, dict(metadata or {}))
+
+    # -- receive ------------------------------------------------------------
     def recv(self, envelope: Envelope) -> Any:
         """Deserialize at the receiver half."""
         t0 = time.perf_counter()
         params = packing.unpack_bytes(envelope.buffer, envelope.manifest)
         if self.codec is not None:
             params = self.codec.decode(params)
-        self.stats.deserialize_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.deserialize_s += dt
         return params

@@ -61,6 +61,22 @@ def test_bytes_roundtrip_bitexact(tree):
         assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
 
 
+@settings(max_examples=30, deadline=None)
+@given(pytrees())
+def test_pack_bytes_from_numeric_matches_pytree_pack(tree):
+    """The broadcast fast path (wire bytes straight off the flat numeric
+    buffer) must serialize exactly what the numeric state decodes to."""
+    m = packing.build_manifest(tree)
+    num = packing.pack_numeric(tree)
+    want, _ = packing.pack_bytes(packing.unpack_numeric(num, m))
+    got = packing.pack_bytes_from_numeric(num, m)
+    assert got.dtype == np.uint8
+    assert want.tobytes() == got.tobytes()
+    # zero-padded tails (arena row alignment) never reach the wire
+    padded = packing.pack_numeric(tree, pad_to=128)
+    assert packing.pack_bytes_from_numeric(padded, m).tobytes() == want.tobytes()
+
+
 def test_manifest_offsets_contiguous():
     tree = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((5,), jnp.bfloat16), "c": jnp.zeros(())}
     m = packing.build_manifest(tree)
