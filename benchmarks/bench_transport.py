@@ -1,7 +1,10 @@
 """Transport / serialization benchmark (the dispatch-time share of
 Figs. 5a/5d...): per-tensor pickle (naive) vs flat-byte packing (paper's
 proto-tensor) vs flat packing + int8 Pallas codec (beyond paper), plus the
-serialize-once broadcast fan-out vs legacy per-send dispatch.
+serialize-once broadcast fan-out vs legacy per-send dispatch, plus the
+measured **uplink** (``--upload``): raw vs int8 upload codec over the
+``Channel.upload``/``recv_upload`` half — the dominant wire direction of a
+federation round (N uploads vs 1 broadcast).
 
 Reports bytes-on-wire and serialize+deserialize wall time per model size.
 """
@@ -12,6 +15,7 @@ import argparse
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.timing import bench
@@ -115,15 +119,76 @@ def run_broadcast(sizes=("1m", "10m"), n_recipients=32, iters=3):
     return rows
 
 
+def run_upload(sizes=(2**23,), iters=2):
+    """Measured uplink: raw vs int8 upload codec over flat (P,) buffers.
+
+    Each arm times **one** learner row through the channel's upload half
+    (``Channel.upload`` → ``recv_upload``) and reports that upload's wire
+    bytes — per-roundtrip units, same convention as :func:`run`, so MB/s is
+    computable straight off the JSON row.  Honesty checks: the raw arm must
+    round-trip bit-exactly; the int8 arm must stay inside the per-group
+    quantization bound.  The headline number is ``uplink_saving`` — int8
+    cuts uplink wire bytes ~3.9x vs raw.
+    """
+    rows = []
+    for p in sizes:
+        buf = jnp.asarray(
+            np.random.default_rng(0).normal(size=(int(p),)).astype(np.float32)
+        )
+        jax.block_until_ready(buf)
+        arms = {}
+        for codec in ("raw", "int8"):
+            ch = Channel(upload_codec=codec)
+
+            def roundtrip(ch=ch):
+                env = ch.upload(buf)
+                row = ch.recv_upload(env)
+                jax.block_until_ready(row)
+                return env
+
+            env = roundtrip()
+            got = np.asarray(ch.recv_upload(env))
+            if codec == "raw":
+                np.testing.assert_array_equal(got, np.asarray(buf))
+            else:
+                amax = float(np.max(np.abs(np.asarray(buf))))
+                assert float(np.max(np.abs(got - np.asarray(buf)))) <= amax / 127
+
+            arms[codec] = (bench(roundtrip, warmup=1, iters=iters, block=False),
+                           int(env.payload.nbytes))
+        t_raw, b_raw = arms["raw"]
+        t_int8, b_int8 = arms["int8"]
+        saving = b_raw / b_int8
+        rows.append({
+            "bench": "upload", "p": int(p),
+            "raw_s": t_raw, "int8_s": t_int8,
+            "raw_bytes": b_raw, "int8_bytes": b_int8,
+            "uplink_saving": saving,
+        })
+        print(
+            f"upload,P={int(p)},"
+            f"raw={t_raw*1e3:.2f}ms/{b_raw/1e6:.2f}MB,"
+            f"int8={t_int8*1e3:.2f}ms/{b_int8/1e6:.2f}MB,"
+            f"uplink_saving={saving:.2f}x",
+            flush=True,
+        )
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
+    ap.add_argument("--upload", action="store_true",
+                    help="run only the uplink raw-vs-int8 codec arm")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump result rows as JSON")
     args = ap.parse_args(argv)
 
-    if args.smoke:
+    if args.upload:
+        rows = (run_upload(sizes=(2**16,), iters=2)
+                if args.smoke else run_upload())
+    elif args.smoke:
         rows = run(sizes=("100k",)) + run_broadcast(sizes=("100k",),
                                                     n_recipients=8, iters=2)
     else:

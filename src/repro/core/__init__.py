@@ -41,7 +41,16 @@ from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.learner import EvalReport, Learner, LocalUpdate
 from repro.core.controller import Controller, RoundTimings
 from repro.core.driver import Driver, FederationEnv, TerminationCriteria
-from repro.core.transport import Broadcast, Channel, ChannelStats, Envelope
+from repro.core.transport import (
+    Broadcast,
+    Channel,
+    ChannelStats,
+    Envelope,
+    Int8UploadCodec,
+    RawUploadCodec,
+    UploadEnvelope,
+    get_upload_codec,
+)
 
 __all__ = [
     "Manifest", "TensorSpec", "build_manifest", "num_params",
@@ -59,4 +68,5 @@ __all__ = [
     "Controller", "RoundTimings",
     "Driver", "FederationEnv", "TerminationCriteria",
     "Broadcast", "Channel", "ChannelStats", "Envelope",
+    "UploadEnvelope", "RawUploadCodec", "Int8UploadCodec", "get_upload_codec",
 ]

@@ -12,11 +12,14 @@ re-engineered operations of §3:
   flat ``global_buffer``, manifest cached — never rebuilt per send) and
   fanned out as shared read-only envelopes, so per-round dispatch cost is
   O(P + N), independent of federation size at fixed payload.
-* **flat-buffer upload fast path** — learners hold the manifest (shipped once
-  at registration) and return the packed ``(P,)`` buffer with every upload,
-  so MarkTaskCompleted writes straight into the arena row: zero pytree
-  flattening and zero host concatenation on arrival, in both the sync round
-  and the async community-update loop.
+* **measured upload fast path** — learners hold the manifest and the channel
+  handle (shipped once at registration) and send the packed ``(P,)`` buffer
+  through the channel's uplink half (``Channel.upload``, codec-encoded wire
+  envelope with per-send byte/time accounting), so MarkTaskCompleted decodes
+  straight into the arena row: zero pytree flattening and zero host
+  concatenation on arrival, in both the sync round and the async
+  community-update loop — and both wire directions show up in
+  ``ChannelStats``.
 * **sync eval dispatch** — EvaluateModel keeps the call open (paper Fig. 10).
 * **packed aggregation** — local models are packed once at upload
   (``pack_numeric``) and aggregated as a fused ``(N, P)`` reduction
@@ -59,7 +62,7 @@ from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, 
 from repro.core.selection import SelectionPolicy, select_learners
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
-from repro.core.transport import Broadcast, Channel
+from repro.core.transport import Broadcast, Channel, get_upload_codec
 
 __all__ = ["RoundTimings", "Controller"]
 
@@ -130,11 +133,21 @@ class Controller:
         if the mesh has one, else every axis).
     flat_uploads:
         If True (default), every registered learner receives the model
-        manifest (plus the arena row width) once at registration and returns
-        flat packed buffers with its uploads, so ``_mark_task_completed``
-        never flattens a pytree (``upload_fallback_packs`` counts the times
-        it had to).  False keeps the legacy pack-on-arrival path, for parity
-        testing.
+        manifest (plus the arena row width and the channel handle) once at
+        registration and sends its uploads through the measured uplink
+        (``Channel.upload``) as codec-encoded wire envelopes, so
+        ``_mark_task_completed`` never flattens a pytree
+        (``upload_fallback_packs`` counts the times it had to).  False keeps
+        the legacy pack-on-arrival path, for parity testing — those uploads
+        still cross the measured uplink (the controller stands in for the
+        learner's send half), so ``ChannelStats`` reconciles on every path.
+    upload_codec:
+        Uplink wire format: ``"raw"`` (default, bit-transparent f32 bytes)
+        or ``"int8"`` (blockwise quantization, ~3.9x fewer uplink bytes), or
+        a codec object (``core/transport.get_upload_codec``).  ``None``
+        (default) keeps whatever the channel already uses; when set, it is
+        installed on the controller's channel — including an explicitly
+        passed ``channel=``, whose previous upload codec it replaces.
     """
 
     def __init__(
@@ -155,6 +168,7 @@ class Controller:
         arena_mesh: Any = None,
         arena_axes: Any = None,
         flat_uploads: bool = True,
+        upload_codec: Any = None,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -190,6 +204,8 @@ class Controller:
         self._sharded_masked_fn: Callable | None = None
         self._sharded_staleness_fn: Callable | None = None
         self.channel = channel or Channel()
+        if upload_codec is not None:
+            self.channel.upload_codec = get_upload_codec(upload_codec)
         self.secure = secure
         self.secure_seed = secure_seed
 
@@ -257,17 +273,19 @@ class Controller:
             self._ship_manifest(learner)
 
     def _ship_manifest(self, learner: Learner) -> None:
-        """Ship the wire manifest + arena row width to one learner (once).
+        """Ship the wire contract (manifest + row width + channel) once.
 
         This is the flat-upload contract: with the manifest resident the
-        learner packs its own uploads (padded to the arena row width), so
-        arrival is a straight arena row write.  No-op until the initial model
-        exists or when ``flat_uploads=False``.
+        learner packs its own uploads (padded to the arena row width) and —
+        with the channel handle — sends them through the measured uplink
+        (``Channel.upload``), so arrival is a codec decode plus a straight
+        arena row write.  No-op until the initial model exists or when
+        ``flat_uploads=False``.
         """
         if not self.flat_uploads or self.manifest is None:
             return
         pad_to = self.arena.padded_params if self.arena is not None else None
-        learner.accept_manifest(self.manifest, pad_to=pad_to)
+        learner.accept_manifest(self.manifest, pad_to=pad_to, channel=self.channel)
 
     def register_learner(self, learner: Learner) -> None:
         """Admit a learner to the federation (paper Fig. 8 join)."""
@@ -327,23 +345,41 @@ class Controller:
         return futures, dispatch_s
 
     def _upload_buffer(self, update: LocalUpdate, pad_to: int | None) -> jax.Array:
-        """The upload's flat buffer: the learner's pre-packed fast path, or a
-        counted controller-side flattening fallback."""
-        if update.buffer is not None:
-            return update.buffer
-        with self._store_lock:  # completions run on concurrent executor threads
-            self.upload_fallback_packs += 1
-        return packing.pack_numeric(update.params, pad_to=pad_to)
+        """The upload's decoded flat buffer, always off the measured uplink.
+
+        Fast path: the learner already sent its packed row through
+        ``Channel.upload`` and the update carries the wire envelope — decode
+        it (one ``device_put`` + jitted codec decode).  Legacy paths (a bare
+        pre-packed buffer, or ``flat_uploads=False`` where the controller
+        must flatten the pytree itself — counted in ``upload_fallback_packs``)
+        still cross the same measured half, with the controller standing in
+        for the learner's send: every upload on every protocol is encoded,
+        byte-accounted, and decoded through the channel's upload codec.
+        """
+        if update.upload is not None:
+            return self.channel.recv_upload(update.upload)
+        buffer = update.buffer
+        if buffer is None:
+            with self._store_lock:  # completions run on concurrent executor threads
+                self.upload_fallback_packs += 1
+            buffer = packing.pack_numeric(update.params, pad_to=pad_to)
+        envelope = self.channel.upload(
+            buffer, metadata={"learner_id": update.learner_id,
+                              "round_id": update.round_id},
+        )
+        return self.channel.recv_upload(envelope)
 
     def _mark_task_completed(self, update: LocalUpdate) -> None:
-        """MarkTaskCompleted: insert the upload into the store.
+        """MarkTaskCompleted: decode the upload off the wire, insert in store.
 
         Fast path (``flat_uploads``): the learner already packed its params
-        into a flat buffer at the arena's padded row width, so arena mode is
-        a straight donated row write — zero pytree flattening, zero host
-        concatenation on arrival.  Otherwise the controller packs here (the
-        legacy path, counted in ``upload_fallback_packs``).  Stack mode
-        inserts the buffer into the hash-map store either way.
+        at the arena's padded row width and sent them through the measured
+        uplink, so arena mode is a codec decode plus a straight donated row
+        write — zero pytree flattening, zero host concatenation on arrival.
+        Otherwise the controller packs here (the legacy path, counted in
+        ``upload_fallback_packs``) and routes the buffer through the same
+        measured half.  Stack mode inserts the decoded buffer into the
+        hash-map store either way.
         """
         if self.store_mode == "arena":
             buffer = self._upload_buffer(update, pad_to=self.arena.padded_params)

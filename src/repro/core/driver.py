@@ -69,6 +69,9 @@ class FederationEnv:
     # controller never flattens a pytree on arrival.  False keeps the legacy
     # pack-on-arrival path (parity/debugging).
     flat_uploads: bool = True
+    # Uplink wire format for update buffers: "raw" (bit-transparent f32
+    # bytes) or "int8" (blockwise quantization, ~3.9x fewer uplink bytes).
+    upload_codec: str = "raw"
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
@@ -124,7 +127,8 @@ class Driver:
                 ModelStore(env.lineage_length, env.store_capacity_bytes)
                 if store_mode == "stack" else None
             ),
-            channel=Channel(env.bandwidth_gbps, env.latency_ms),
+            channel=Channel(env.bandwidth_gbps, env.latency_ms,
+                            upload_codec=env.upload_codec),
             secure=env.secure_aggregation,
             store_mode=store_mode,
             arena_mesh=arena_mesh,

@@ -31,12 +31,16 @@ __all__ = ["LocalUpdate", "EvalReport", "Learner"]
 class LocalUpdate:
     """Payload of MarkTaskCompleted.
 
-    ``buffer`` is the flat-buffer upload fast path: when the learner holds the
-    federation's manifest (shipped once at registration), it packs its trained
-    params into the flat ``(P,)`` numeric buffer itself — already padded to
-    the controller's arena row width — so the controller writes it straight
-    into the arena row with zero pytree flattening on arrival.  ``None`` means
-    the controller must pack ``params`` itself (the legacy path).
+    ``upload`` is the measured-wire fast path: when the learner holds both
+    the federation's manifest and a channel handle (shipped once at
+    registration), it packs its trained params into the flat ``(P,)`` buffer
+    — already padded to the controller's arena row width — and sends it
+    through ``Channel.upload``, so the update arrives as a codec-encoded
+    ``UploadEnvelope`` with uplink byte/time accounting already charged; the
+    controller decodes it straight into the arena row.  ``buffer`` is the
+    pre-envelope flat-buffer path (manifest but no channel — kept for direct
+    ``Learner`` API use).  Both ``None`` means the controller must pack
+    ``params`` itself (the legacy path).
     """
 
     learner_id: str
@@ -46,6 +50,7 @@ class LocalUpdate:
     metrics: dict
     seconds_per_step: float
     buffer: Any = None
+    upload: Any = None
 
 
 @dataclasses.dataclass
@@ -89,19 +94,26 @@ class Learner:
         self.alive = True
         self._manifest = None
         self._upload_pad: int | None = None
+        self._channel = None
 
     # -- wire contract ------------------------------------------------------
-    def accept_manifest(self, manifest: Any, pad_to: int | None = None) -> None:
-        """Receive the federation's wire manifest (shipped once, at join).
+    def accept_manifest(
+        self, manifest: Any, pad_to: int | None = None, channel: Any = None
+    ) -> None:
+        """Receive the federation's wire contract (shipped once, at join).
 
         MetisFL ships the model's proto descriptors to every participant at
         registration; this is the analogue.  With a manifest resident the
-        learner returns its trained model as a flat packed buffer
-        (``LocalUpdate.buffer``), pre-padded to ``pad_to`` (the controller's
-        arena row width), so the upload path never re-flattens a pytree.
+        learner packs its trained model into a flat ``(P,)`` buffer itself,
+        pre-padded to ``pad_to`` (the controller's arena row width), so the
+        upload path never re-flattens a pytree.  With a ``channel`` handle
+        also resident the buffer additionally crosses the measured uplink
+        (``Channel.upload`` — codec-encoded, byte/time-accounted) and the
+        update carries an ``UploadEnvelope`` instead of an in-process buffer.
         """
         self._manifest = manifest
         self._upload_pad = pad_to
+        self._channel = channel
 
     # -- heartbeat ----------------------------------------------------------
     def ping(self) -> bool:
@@ -140,11 +152,21 @@ class Learner:
         jax.block_until_ready(loss)
         elapsed = time.perf_counter() - t0
         losses.append(float(loss))
-        buffer = None
+        buffer = upload = None
         if self._manifest is not None:
             # Flat-buffer upload fast path: pack learner-side (off the
             # controller's arrival path), padded to the arena row width.
             buffer = packing.pack_numeric(params, pad_to=self._upload_pad)
+            if self._channel is not None:
+                # Measured uplink: the packed row crosses the channel as a
+                # codec-encoded wire envelope; the in-process buffer is
+                # dropped so arrival reads exactly what the wire carried.
+                upload = self._channel.upload(
+                    buffer,
+                    metadata={"learner_id": self.learner_id,
+                              "round_id": task.round_id},
+                )
+                buffer = None
         return LocalUpdate(
             learner_id=self.learner_id,
             round_id=task.round_id,
@@ -153,6 +175,7 @@ class Learner:
             metrics={"train_loss": losses[-1], "local_steps": task.local_steps},
             seconds_per_step=elapsed / max(task.local_steps, 1),
             buffer=buffer,
+            upload=upload,
         )
 
     # -- evaluation ---------------------------------------------------------

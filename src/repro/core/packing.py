@@ -39,6 +39,8 @@ __all__ = [
     "pack_bytes",
     "pack_bytes_from_numeric",
     "unpack_bytes",
+    "pack_row_bytes",
+    "unpack_row_bytes",
     "num_params",
     "round_up",
 ]
@@ -233,6 +235,53 @@ def pack_bytes_from_numeric(buffer: Any, manifest: Manifest) -> np.ndarray:
         out[cursor : cursor + spec.nbytes] = raw.reshape(-1).view(np.uint8)
         cursor += spec.nbytes
     return out
+
+
+def pack_row_bytes(buffer: Any, dtype: Any = jnp.float32) -> np.ndarray:
+    """Wire bytes of one flat ``(P,)`` numeric buffer (the upload row format).
+
+    The uplink mirror of :func:`pack_bytes_from_numeric` for a *single* flat
+    buffer with no manifest: one device→host transfer plus one cast/copy,
+    then a zero-copy byte view.  Like the downlink path, the wire bytes are
+    always *materialized* (one O(P) copy, never an alias of the caller's
+    buffer): the channel's contract is to perform the serialization work it
+    accounts for, and an aliased envelope would mutate if the caller's buffer
+    did.  This is what the transport's ``raw`` upload codec puts on the wire
+    — ``P * itemsize`` bytes, bit-identical to the numeric buffer.
+    """
+    dt = np.dtype(jnp.dtype(dtype))
+    host = np.asarray(buffer)
+    return host.reshape(-1).astype(dt, copy=True).view(np.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("num_elements", "dtype"))
+def _bitcast_row_device(wire: jax.Array, num_elements: int, dtype: str) -> jax.Array:
+    """Device-side inverse of :func:`pack_row_bytes` (compiled per layout)."""
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 1:
+        row = jax.lax.bitcast_convert_type(wire, dt)
+    else:
+        row = jax.lax.bitcast_convert_type(wire.reshape(num_elements, dt.itemsize), dt)
+    return row.reshape(num_elements)
+
+
+def unpack_row_bytes(wire: np.ndarray, num_elements: int, dtype: Any = "float32") -> jax.Array:
+    """Inverse of :func:`pack_row_bytes`: **one** ``device_put`` of the wire
+    bytes, then a jitted device-side bitcast back to the ``(P,)`` row.
+
+    Mirrors :func:`unpack_bytes`' one-transfer design on the upload direction:
+    a controller ingesting N uploads per round pays N single O(P) transfers
+    and zero host-side numeric work, regardless of model depth.
+    """
+    dt = jnp.dtype(dtype)
+    if int(np.size(wire)) != int(num_elements) * dt.itemsize:
+        raise ValueError(
+            f"row payload holds {int(np.size(wire))} bytes, expected "
+            f"{int(num_elements) * dt.itemsize} for {num_elements} "
+            f"{dt.name} elements"
+        )
+    dev = jnp.asarray(np.ascontiguousarray(wire))
+    return _bitcast_row_device(dev, int(num_elements), str(dt))
 
 
 @functools.partial(jax.jit, static_argnames="manifest")

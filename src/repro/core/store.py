@@ -80,6 +80,7 @@ class ModelStore:
         self._capacity_bytes = capacity_bytes
         self._records: OrderedDict[str, list[ModelRecord]] = OrderedDict()
         self.total_inserts = 0
+        self.bytes_ingested = 0
 
     # -- insertion ---------------------------------------------------------
     def insert(self, record: ModelRecord) -> None:
@@ -87,6 +88,9 @@ class ModelStore:
         lineage = self._records.setdefault(record.learner_id, [])
         lineage.append(record)
         self.total_inserts += 1
+        # Cumulative ingest accounting (never decremented by eviction):
+        # reconciles against the channel's uplink counters in tests.
+        self.bytes_ingested += record.nbytes
         if len(lineage) > self._lineage_length:
             del lineage[: len(lineage) - self._lineage_length]
         self._maybe_evict()
@@ -288,6 +292,7 @@ class ArenaStore:
         self.mask = jnp.zeros((n,), jnp.float32)
         self.total_writes = 0
         self.grow_events = 0
+        self.bytes_ingested = 0
 
     @staticmethod
     def _zeros(shape, dtype, sharding):
@@ -366,6 +371,9 @@ class ArenaStore:
             self._valid[row] = True
             self._weights_host[row] = weight
             self.total_writes += 1
+            # Cumulative decoded-row ingest bytes: reconciles against the
+            # channel's uplink message count in the dispatch tests.
+            self.bytes_ingested += int(buf.nbytes)
             return row
 
     def invalidate(self, learner_id: str) -> None:

@@ -7,46 +7,73 @@ in-process channel that performs the *real* serialization work
 wire time from a bandwidth/latency model — so benchmarks can separate compute
 cost from modeled network cost without sleeping.
 
-Two send paths exist:
+The channel is **full duplex** — both wire directions are measured:
 
-* :meth:`Channel.send` — the legacy point-to-point half: one serialization per
-  recipient (kept for parity testing and single-recipient messages).
-* :meth:`Channel.broadcast` — the fan-out half: serialize **once** into a
-  shared read-only byte buffer, then stamp per-recipient envelopes with
-  :meth:`Broadcast.to`.  Each ``to()`` charges that recipient's bytes and
-  virtual wire time but never re-serializes, so dispatch cost is
+* :meth:`Channel.send` — the legacy point-to-point downlink half: one
+  serialization per recipient (kept for parity testing and single-recipient
+  messages).
+* :meth:`Channel.broadcast` — the downlink fan-out half: serialize **once**
+  into a shared read-only byte buffer, then stamp per-recipient envelopes
+  with :meth:`Broadcast.to`.  Each ``to()`` charges that recipient's bytes
+  and virtual wire time but never re-serializes, so dispatch cost is
   O(P + N) instead of O(N·P).  When the caller already maintains the flat
   numeric buffer (the controller's ``global_buffer``), the wire bytes come
   straight off it (``packing.pack_bytes_from_numeric``) — no pytree walk at
   all.
+* :meth:`Channel.upload` / :meth:`Channel.recv_upload` — the **uplink** half.
+  A learner's flat ``(P,)`` update buffer is encoded through a pluggable
+  upload codec (``raw`` passthrough — 4 bytes/param; ``int8`` blockwise
+  quantization via ``kernels/quantize`` — ~3.9x fewer wire bytes) into an
+  :class:`UploadEnvelope`, with per-send byte/time accounting; the controller
+  decodes it back to a device-resident row with one ``device_put`` plus a
+  jitted bitcast/dequant program, ready for a straight arena row write.
+  Uplink is the dominant wire direction (N uploads vs 1 broadcast per round),
+  so this is where the codec pays off.
 
 All stats mutation is lock-guarded: the controller's async protocol calls
-``send``/``recv``/``Broadcast.to`` concurrently from executor threads.
+``send``/``recv``/``upload``/``recv_upload``/``Broadcast.to`` concurrently
+from executor threads.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 from typing import Any
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing
 
-__all__ = ["ChannelStats", "Channel", "Envelope", "Broadcast"]
+__all__ = [
+    "ChannelStats", "Channel", "Envelope", "Broadcast",
+    "UploadEnvelope", "RawUploadCodec", "Int8UploadCodec",
+    "UPLOAD_CODECS", "get_upload_codec",
+]
 
 
 @dataclasses.dataclass
 class ChannelStats:
-    """Cumulative transport accounting for one channel.
+    """Cumulative transport accounting for one channel, both directions.
 
-    ``messages``/``bytes_moved``/``virtual_wire_s`` count per *recipient*
-    (a broadcast to N learners counts N); ``serializations``/``serialize_s``
-    count actual serialization work (the same broadcast counts 1).  Mutated
-    only by :class:`Channel` under its stats lock — safe to read from tests
-    after joining worker threads.
+    Downlink (controller → learners): ``messages``/``bytes_moved``/
+    ``virtual_wire_s`` count per *recipient* (a broadcast to N learners
+    counts N); ``serializations``/``serialize_s`` count actual serialization
+    work (the same broadcast counts 1).
+
+    Uplink (learners → controller): ``upload_messages``/``upload_bytes``/
+    ``upload_virtual_wire_s`` count one per :meth:`Channel.upload`;
+    ``upload_serializations``/``upload_serialize_s`` count the codec encode
+    work and ``upload_deserialize_s`` the controller-side decode.  Every
+    upload is its own serialization (no fan-in sharing), so
+    ``upload_messages == upload_serializations`` always.
+
+    Mutated only by :class:`Channel` under its stats lock — safe to read from
+    tests after joining worker threads.
     """
 
     messages: int = 0
@@ -55,6 +82,191 @@ class ChannelStats:
     serialize_s: float = 0.0
     deserialize_s: float = 0.0
     virtual_wire_s: float = 0.0
+    upload_messages: int = 0
+    upload_bytes: int = 0
+    upload_serializations: int = 0
+    upload_serialize_s: float = 0.0
+    upload_deserialize_s: float = 0.0
+    upload_virtual_wire_s: float = 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        """Bytes moved across both wire directions (downlink + uplink)."""
+        return self.bytes_moved + self.upload_bytes
+
+    @property
+    def total_virtual_wire_s(self) -> float:
+        """Modeled wire time across both directions."""
+        return self.virtual_wire_s + self.upload_virtual_wire_s
+
+
+# ---------------------------------------------------------------------------
+# Upload codecs (uplink wire formats)
+# ---------------------------------------------------------------------------
+
+
+class RawUploadCodec:
+    """Passthrough upload codec: f32 row bytes on the wire (4 bytes/param).
+
+    Bit-transparent: ``decode(encode(x)) == x`` for any float32 buffer, so
+    protocols that assert bit-identical parity run through it unchanged.
+    """
+
+    codec_id = "raw"
+
+    def wire_params(self) -> dict:
+        """Codec parameters a receiver needs to decode (none for raw)."""
+        return {}
+
+    def encode(self, buffer: Any) -> np.ndarray:
+        """Flat ``(P,)`` numeric buffer → its f32 wire bytes (one copy)."""
+        return packing.pack_row_bytes(buffer, jnp.float32)
+
+    def decode(self, payload: np.ndarray, num_elements: int) -> jax.Array:
+        """Wire bytes → device-resident f32 ``(P,)`` row (one transfer)."""
+        return packing.unpack_row_bytes(payload, num_elements, "float32")
+
+
+@functools.partial(jax.jit, static_argnames=("n_q", "n_scales"))
+def _split_quant_wire(wire: jax.Array, n_q: int, n_scales: int):
+    """Device-side split of one int8 upload payload into (q int8, scales f32).
+
+    Compiled once per wire layout and cached — together with the jitted
+    ``kernels/ops.dequantize`` this makes the controller's int8 ingest a
+    single ``device_put`` plus device-only bitcasts and the dequant kernel,
+    mirroring the downlink's one-transfer ``unpack_bytes`` design.
+    """
+    q = jax.lax.bitcast_convert_type(jax.lax.slice(wire, (0,), (n_q,)), jnp.int8)
+    sb = jax.lax.slice(wire, (n_q,), (n_q + 4 * n_scales,))
+    scales = jax.lax.bitcast_convert_type(sb.reshape(n_scales, 4), jnp.float32)
+    return q, scales.reshape(n_scales)
+
+
+class Int8UploadCodec:
+    """Blockwise-int8 upload codec (``kernels/quantize``): ~3.9x fewer bytes.
+
+    Encode runs the jitted Pallas quantize kernel over the learner's flat
+    ``(P,)`` buffer (symmetric per-group scales, group a multiple of 128 so
+    VPU lanes stay full) and concatenates ``int8`` values + ``f32`` scales
+    into one wire payload.  The kernel block height adapts to the buffer
+    (``kernels/quantize.effective_block_rows``): buffers under one tile pad
+    zero rows and larger buffers pad at most ~6.25% of their rows, so the
+    compression ratio is ≈3.94x at block-aligned sizes and never drops below
+    ~3.6x once P reaches one group — there is no size band where the pad to
+    the next whole tile halves the saving.  Decode is one ``device_put`` of the
+    payload, a jitted bitcast split, and the Pallas dequant kernel — the
+    decoded f32 row is ready for a straight arena row write with zero
+    host-side numeric work.  Lossy to the int8 step (~0.4% relative); use
+    ``raw`` where bit-identity matters.
+    """
+
+    codec_id = "int8"
+
+    def __init__(self, group: int | None = None, block_rows: int | None = None):
+        from repro.kernels import quantize as quant
+
+        self.group = int(group or quant.DEFAULT_GROUP)
+        self.block_rows = int(block_rows or quant.DEFAULT_BLOCK_ROWS)
+
+    def wire_params(self) -> dict:
+        """Codec parameters the receiver needs to derive the wire layout."""
+        return {"group": self.group, "block_rows": self.block_rows}
+
+    def encode(self, buffer: Any) -> np.ndarray:
+        """Quantize a flat ``(P,)`` buffer into int8 values + f32 scales."""
+        from repro.kernels import ops, quantize as quant
+
+        flat = jnp.asarray(buffer, jnp.float32).reshape(-1)
+        q, scales = ops.quantize(
+            flat, group=self.group,
+            block_rows=quant.effective_block_rows(
+                flat.shape[0], self.group, self.block_rows
+            ),
+        )
+        qb = np.asarray(q).view(np.uint8).reshape(-1)
+        sb = np.asarray(scales).view(np.uint8).reshape(-1)
+        out = np.empty((qb.size + sb.size,), np.uint8)
+        out[: qb.size] = qb
+        out[qb.size:] = sb
+        return out
+
+    def decode(self, payload: np.ndarray, num_elements: int) -> jax.Array:
+        """Dequantize an int8 payload back to the f32 ``(P,)`` row."""
+        from repro.kernels import ops, quantize as quant
+
+        n_q, n_scales, nbytes = quant.wire_layout(
+            num_elements, self.group, self.block_rows
+        )
+        if int(payload.size) != nbytes:
+            raise ValueError(
+                f"int8 payload holds {int(payload.size)} bytes, expected "
+                f"{nbytes} for {num_elements} elements"
+            )
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        q, scales = _split_quant_wire(dev, n_q, n_scales)
+        return ops.dequantize(
+            q, scales, num_elements, group=self.group,
+            block_rows=quant.effective_block_rows(
+                num_elements, self.group, self.block_rows
+            ),
+        )
+
+
+UPLOAD_CODECS = {"raw": RawUploadCodec, "int8": Int8UploadCodec}
+
+
+def _codec_params(codec: Any) -> dict:
+    """The codec's self-describing wire parameters ({} if it declares none)."""
+    wire_params = getattr(codec, "wire_params", None)
+    return wire_params() if wire_params is not None else {}
+
+
+def get_upload_codec(spec: Any) -> Any:
+    """Resolve an upload codec: a registry id (``"raw"``/``"int8"``), an
+    already-constructed codec object, or ``None`` (→ raw).
+
+    A codec object must declare a string ``codec_id`` (stamped on every
+    envelope).  Note that envelopes of codecs *outside* the registry can only
+    be decoded by a channel configured with an equivalent codec — see
+    :class:`UploadEnvelope` for the exact contract.
+    """
+    if spec is None:
+        return RawUploadCodec()
+    if isinstance(spec, str):
+        try:
+            return UPLOAD_CODECS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown upload codec {spec!r}; known: {sorted(UPLOAD_CODECS)}"
+            ) from None
+    if not isinstance(getattr(spec, "codec_id", None), str):
+        raise ValueError(
+            "an upload codec object must define a string `codec_id` "
+            f"attribute; got {type(spec).__name__}"
+        )
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadEnvelope:
+    """One learner→controller message on the wire.
+
+    ``payload`` is the codec's byte buffer (read-only); ``codec`` names the
+    encoding and ``codec_params`` carries its layout parameters (e.g. the
+    int8 group/block sizes); ``num_elements`` is the logical ``(P,)`` length
+    the payload decodes to (codec-internal padding is derivable from it).
+    Envelopes of **registry** codecs (``UPLOAD_CODECS``: raw, int8) are fully
+    self-describing — any channel decodes them with no out-of-band state.  An
+    envelope minted by a custom codec *object* decodes only on a channel
+    whose configured codec has the same ``codec_id`` and wire params (the
+    registry cannot reconstruct a class it does not know).
+    """
+
+    codec: str
+    payload: np.ndarray
+    num_elements: int
+    metadata: dict
+    codec_params: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,11 +326,14 @@ class Broadcast:
 
 
 class Channel:
-    """A measured point-to-point channel (controller <-> learner).
+    """A measured full-duplex channel (controller <-> learner).
 
     ``bandwidth_gbps``/``latency_ms`` feed the *virtual* wire-time account;
     they never block real execution.  ``quantize_codec`` optionally compresses
-    the payload (beyond-paper int8 transport, ``kernels/quantize``).
+    the downlink pytree payload (beyond-paper int8 transport,
+    ``kernels/quantize``); ``upload_codec`` selects the uplink wire format for
+    flat ``(P,)`` update buffers (``"raw"`` default, ``"int8"`` blockwise
+    quantization, or a codec object).
     """
 
     def __init__(
@@ -126,10 +341,12 @@ class Channel:
         bandwidth_gbps: float = 10.0,
         latency_ms: float = 0.5,
         quantize_codec: Any | None = None,
+        upload_codec: Any = "raw",
     ):
         self.bandwidth_gbps = bandwidth_gbps
         self.latency_ms = latency_ms
         self.codec = quantize_codec
+        self.upload_codec = get_upload_codec(upload_codec)
         self.stats = ChannelStats()
         self._stats_lock = threading.Lock()
 
@@ -200,3 +417,65 @@ class Channel:
         with self._stats_lock:
             self.stats.deserialize_s += dt
         return params
+
+    # -- upload half (learner -> controller) --------------------------------
+    def _resolve_upload_codec(self, envelope: UploadEnvelope) -> Any:
+        # The channel's own codec decodes its own envelopes; anything else is
+        # reconstructed from the envelope's self-describing codec id + params.
+        own = self.upload_codec
+        if (envelope.codec == own.codec_id
+                and envelope.codec_params == _codec_params(own)):
+            return own
+        try:
+            cls = UPLOAD_CODECS[envelope.codec]
+        except KeyError:
+            raise ValueError(
+                f"cannot decode upload codec {envelope.codec!r}; "
+                f"known: {sorted(UPLOAD_CODECS)}"
+            ) from None
+        return cls(**envelope.codec_params)
+
+    def upload(
+        self, buffer: Any, metadata: dict | None = None, codec: Any = None
+    ) -> UploadEnvelope:
+        """Learner half of the uplink: encode one flat ``(P,)`` update buffer.
+
+        The buffer is encoded through the channel's upload codec (or an
+        explicit ``codec=`` override) into a wire payload; encode time is
+        accounted as upload serialization work and the payload's bytes and
+        virtual wire time are charged per send, under the stats lock (the
+        async protocol uploads concurrently from executor threads).
+        """
+        c = self.upload_codec if codec is None else get_upload_codec(codec)
+        n = int(np.shape(buffer)[0])
+        t0 = time.perf_counter()
+        payload = c.encode(buffer)
+        dt = time.perf_counter() - t0
+        payload.flags.writeable = False  # wire bytes are immutable
+        nbytes = int(payload.nbytes)
+        with self._stats_lock:
+            self.stats.upload_serializations += 1
+            self.stats.upload_serialize_s += dt
+            self.stats.upload_messages += 1
+            self.stats.upload_bytes += nbytes
+            self.stats.upload_virtual_wire_s += self._wire_time(nbytes)
+        return UploadEnvelope(
+            codec=c.codec_id, payload=payload, num_elements=n,
+            metadata=dict(metadata or {}), codec_params=_codec_params(c),
+        )
+
+    def recv_upload(self, envelope: UploadEnvelope) -> jax.Array:
+        """Controller half of the uplink: decode wire bytes to a device row.
+
+        One ``device_put`` of the payload plus a jitted decode program cached
+        per wire layout (bitcast for ``raw``, bitcast split + Pallas dequant
+        for ``int8``) — the returned f32 ``(P,)`` row feeds a straight arena
+        row write with zero host-side numeric work.
+        """
+        c = self._resolve_upload_codec(envelope)
+        t0 = time.perf_counter()
+        row = c.decode(envelope.payload, envelope.num_elements)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.upload_deserialize_s += dt
+        return row

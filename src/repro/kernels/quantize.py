@@ -15,10 +15,57 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["quantize_pallas", "dequantize_pallas", "DEFAULT_GROUP", "DEFAULT_BLOCK_ROWS"]
+__all__ = [
+    "quantize_pallas", "dequantize_pallas", "wire_layout",
+    "effective_block_rows", "DEFAULT_GROUP", "DEFAULT_BLOCK_ROWS",
+]
 
 DEFAULT_GROUP = 256
 DEFAULT_BLOCK_ROWS = 64
+
+
+def effective_block_rows(
+    n: int, group: int = DEFAULT_GROUP, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> int:
+    """Kernel block height actually used for an ``(n,)`` buffer.
+
+    ``block_rows`` is a *cap*, not a floor.  A buffer smaller than one full
+    ``group * block_rows`` tile shrinks the block to its own row count (zero
+    row padding); a larger buffer gets the tallest block whose row padding
+    stays within ~6.25% of the needed rows, so wire bytes never balloon to
+    the next whole tile (a fixed 64-row tile would pad a 65-row buffer to
+    128 rows — 2x on the wire; this rule pads it to 70).  Both codec halves
+    derive the same value from ``n`` alone, so the choice needs no extra
+    wire state.  Sub-``block_rows`` blocks trade some TPU sublane alignment
+    for wire compactness — the uplink is bandwidth-bound, not compute-bound.
+    """
+    rows_needed = max(1, (n + group - 1) // group)
+    if rows_needed <= block_rows:
+        return rows_needed
+    budget = -(-rows_needed // 16)  # allow ≤ ~6.25% padded rows
+    for rows in range(block_rows, 0, -1):
+        if (-rows_needed) % rows <= budget:
+            return rows
+    return 1  # unreachable: rows=1 always pads zero rows
+
+
+def wire_layout(
+    n: int, group: int = DEFAULT_GROUP, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> tuple[int, int, int]:
+    """Wire layout of one quantized ``(n,)`` buffer.
+
+    Returns ``(n_padded, n_scales, payload_bytes)``: the kernel-tile-padded
+    element count (a ``group * effective_block_rows`` multiple — what the
+    quantize path actually emits), the number of f32 group scales, and the
+    total uplink wire bytes (``n_padded`` int8 values followed by
+    ``n_scales`` f32 scales).  The transport's int8 upload codec and its
+    tests derive payload sizes from this single source of truth, so the
+    kernel's padding policy can change without desynchronizing the wire.
+    """
+    tile = group * effective_block_rows(n, group, block_rows)
+    n_padded = ((n + tile - 1) // tile) * tile
+    n_scales = n_padded // group
+    return n_padded, n_scales, n_padded + 4 * n_scales
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):

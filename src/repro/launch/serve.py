@@ -10,7 +10,9 @@ dry-run proves on the production mesh.
 ``--push-replicas N`` additionally simulates publishing the served weights to
 N replica hosts through the federation transport's serialize-once broadcast
 (the same ``Channel.broadcast`` the controller's dispatch uses), printing the
-measured one-serialization fan-out accounting.
+measured one-serialization fan-out accounting.  ``--replica-upload raw|int8``
+then echoes the weights back per replica through the measured uplink half
+(``Channel.upload``) so both wire directions are accounted.
 """
 
 from __future__ import annotations
@@ -26,16 +28,27 @@ from repro.launch.steps import make_serve_step
 from repro.models import kvcache, transformer
 
 
-def push_to_replicas(params, n_replicas: int, bandwidth_gbps: float = 10.0) -> None:
+def push_to_replicas(
+    params,
+    n_replicas: int,
+    bandwidth_gbps: float = 10.0,
+    replica_upload: str | None = None,
+) -> None:
     """Publish model weights to ``n_replicas`` serving hosts, serialize-once.
 
     One ``Channel.broadcast`` serialization, N shared envelopes; each replica
     deserializes its own copy (one device_put of the whole wire buffer).
     Prints bytes-on-wire and the broadcast-vs-per-send serialization ratio.
-    """
-    from repro.core import Channel
 
-    ch = Channel(bandwidth_gbps=bandwidth_gbps)
+    ``replica_upload`` additionally exercises the measured uplink: every
+    replica reports its resident weights back through ``Channel.upload``
+    (health-check echo) with the given codec (``"raw"`` or ``"int8"``), so
+    the printed accounting covers both wire directions — the full-duplex
+    contract the federation controller runs on.
+    """
+    from repro.core import Channel, packing
+
+    ch = Channel(bandwidth_gbps=bandwidth_gbps, upload_codec=replica_upload or "raw")
     t0 = time.time()
     broadcast = ch.broadcast(params=params)
     envelopes = [broadcast.to({"replica": i}) for i in range(n_replicas)]
@@ -50,6 +63,23 @@ def push_to_replicas(params, n_replicas: int, bandwidth_gbps: float = 10.0) -> N
         f"virtual wire {stats.virtual_wire_s*1e3:.1f}ms"
     )
     assert stats.serializations == 1 and stats.messages == n_replicas
+    if replica_upload:
+        buf = packing.pack_numeric(replica_params)
+        jax.block_until_ready(buf)
+        t0 = time.time()
+        for i in range(n_replicas):
+            env = ch.upload(buf, metadata={"replica": i})
+        echo = ch.recv_upload(env)  # the server decodes one echo as a check
+        jax.block_until_ready(echo)
+        elapsed = time.time() - t0
+        print(
+            f"echo: {n_replicas} uploads ({replica_upload}), "
+            f"{stats.upload_bytes/1e6:.1f}MB on wire "
+            f"({stats.bytes_moved / max(stats.upload_bytes, 1):.2f}x vs downlink), "
+            f"{elapsed:.3f}s incl. one decode, "
+            f"virtual wire {stats.upload_virtual_wire_s*1e3:.1f}ms"
+        )
+        assert stats.upload_messages == n_replicas
 
 
 def main() -> None:
@@ -61,12 +91,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--push-replicas", type=int, default=0,
                     help="simulate serialize-once weight push to N replicas")
+    ap.add_argument("--replica-upload", choices=("raw", "int8"), default=None,
+                    help="also echo weights back per replica through the "
+                         "measured uplink with this codec")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
     params = transformer.init_params(jax.random.key(args.seed), cfg)
     if args.push_replicas:
-        push_to_replicas(params, args.push_replicas)
+        push_to_replicas(params, args.push_replicas,
+                         replica_upload=args.replica_upload)
     B = args.batch
     max_len = args.prompt_len + args.gen_len
 

@@ -1,0 +1,312 @@
+"""Protocol × store × upload-codec conformance matrix.
+
+Every future transport change runs this whole grid: {sync, semi-sync, async,
+secure} × {arena, stack, sharded arena under 8 forced host devices} ×
+{raw, int8 upload codec}, each arm compared against a learner-side *replay
+reference* that re-runs the exact fit sequence outside the controller and
+aggregates it two ways:
+
+* **exact** — the controller's own fused pipeline (``weighted_average`` /
+  ``secure_fedavg`` + the fedavg server optimizer) over the replayed uploads
+  in selection order.  Raw-codec arms whose aggregation order is
+  deterministic (stack mode, async single-learner, secure) must match it
+  **bit-identically**; arena arms (row order follows upload *arrival* order)
+  match to float-accumulation tolerance.
+* **naive** — ``core/naive.naive_aggregate``, the per-tensor f64 Python-loop
+  baseline.  Every raw arm must agree to ~1e-5 relative; int8 arms to the
+  quantization-bounded tolerance.
+
+Uplink accounting is asserted alongside: every arm must report a nonzero,
+reconciling upload byte/message count (the full-duplex wire contract).
+
+Marked ``conformance`` (``pytest -m conformance`` runs just this grid — the
+CI fast lane does).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncProtocol, Controller, Learner, SemiSyncProtocol, SyncProtocol,
+    aggregation, naive, packing,
+)
+from repro.core import secure as secure_mod
+from repro.core.server_opt import make_server_optimizer
+from repro.optim import sgd
+
+pytestmark = pytest.mark.conformance
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_INIT = {"w": np.zeros((4, 1), np.float32)}
+
+# int8 upload quantization error bound: weights stay O(0.5) in these runs and
+# the per-group error compounds over at most 3 aggregation hops.
+_INT8_RTOL, _INT8_ATOL = 0.02, 0.02
+
+
+def _make_learner(i):
+    def loss_fn(p, b):
+        return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+
+    rng = np.random.default_rng(i)
+    X = rng.normal(size=(64, 4)).astype(np.float32)
+    y = X @ np.ones((4, 1), np.float32)
+
+    def data_fn(bs):
+        j = rng.integers(0, 64, size=bs)
+        return X[j], y[j]
+
+    return Learner(
+        f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+        data_fn, lambda: (X, y), sgd(0.05), 64,
+    )
+
+
+_CASES = {
+    "sync": dict(
+        proto=lambda: SyncProtocol(local_steps=2, batch_size=16),
+        n=3, rounds=2, updates=0, secure=False,
+    ),
+    # one round only: from round 2 on, semi-sync task sizing depends on
+    # *measured* seconds-per-step, which is not replayable
+    "semi_sync": dict(
+        proto=lambda: SemiSyncProtocol(hyperperiod_s=0.05, batch_size=16,
+                                       default_steps=2),
+        n=3, rounds=1, updates=0, secure=False,
+    ),
+    # single learner: the async community-update sequence is deterministic
+    "async": dict(
+        proto=lambda: AsyncProtocol(local_steps=2, batch_size=16),
+        n=1, rounds=0, updates=3, secure=False,
+    ),
+    "secure": dict(
+        proto=lambda: SyncProtocol(local_steps=2, batch_size=16),
+        n=3, rounds=2, updates=0, secure=True,
+    ),
+}
+
+
+def _reference(case, agg_mode):
+    """Replay the federation's exact fit sequence learner-side.
+
+    ``agg_mode="exact"`` aggregates with the controller's fused pipeline in
+    selection order; ``"naive"`` with the f64 per-tensor Python baseline.
+    Both share the real fedavg server optimizer, so the only difference from
+    the federation is transport + aggregation order.
+    """
+    proto = case["proto"]()
+    learners = [_make_learner(i) for i in range(case["n"])]
+    manifest = packing.build_manifest(_INIT)
+    gbuf = packing.pack_numeric(_INIT)
+    params = packing.unpack_numeric(gbuf, manifest)
+    server = make_server_optimizer("fedavg")
+    state = server.init(gbuf)
+    for r in range(case["rounds"] or case["updates"]):
+        task = proto.make_task(r, {})
+        ups = [l.fit(params, task) for l in learners]
+        weights = [float(u.num_examples) for u in ups]
+        bufs = [packing.pack_numeric(u.params) for u in ups]
+        if agg_mode == "naive":
+            new = packing.pack_numeric(
+                naive.naive_aggregate([u.params for u in ups], weights)
+            )
+        elif case["secure"]:
+            new = secure_mod.secure_fedavg(bufs, weights, base_seed=r)
+        elif case["updates"]:  # async, single learner: the row IS the update
+            new = bufs[0]
+        else:
+            new = aggregation.weighted_average(
+                jnp.stack(bufs), jnp.asarray(weights, jnp.float32)
+            )
+        state, gbuf = server.apply(state, gbuf, new)
+        params = packing.unpack_numeric(gbuf, manifest)
+    return np.asarray(params["w"])
+
+
+def _federation(case, store_mode, codec):
+    ctrl = Controller(
+        protocol=case["proto"](), secure=case["secure"],
+        store_mode=store_mode, upload_codec=codec,
+    )
+    ctrl.set_initial_model(_INIT)
+    for i in range(case["n"]):
+        ctrl.register_learner(_make_learner(i))
+    if case["updates"]:
+        ctrl.run_async(total_updates=case["updates"])
+    else:
+        for _ in range(case["rounds"]):
+            ctrl.run_round()
+    out = np.asarray(ctrl.global_params["w"])
+    stats = ctrl.channel.stats
+    expected_uploads = case["n"] * case["rounds"] + case["updates"]
+    ctrl.shutdown()
+    return out, stats, expected_uploads
+
+
+@pytest.mark.parametrize("codec", ["raw", "int8"])
+@pytest.mark.parametrize("store_mode", ["arena", "stack"])
+@pytest.mark.parametrize("proto", list(_CASES))
+def test_conformance_matrix(proto, store_mode, codec):
+    """Global model parity vs the replay references, per grid cell."""
+    case = _CASES[proto]
+    got, stats, expected_uploads = _federation(case, store_mode, codec)
+    ref_exact = _reference(case, "exact")
+    ref_naive = _reference(case, "naive")
+
+    if codec == "raw":
+        # arena row order follows upload arrival order (thread races), so
+        # only the order-deterministic combos can demand bit-identity.
+        deterministic = (
+            case["secure"] or case["updates"] or store_mode == "stack"
+        )
+        if deterministic:
+            np.testing.assert_array_equal(got, ref_exact)
+        else:
+            np.testing.assert_allclose(got, ref_exact, rtol=1e-6, atol=1e-7)
+        if case["secure"]:
+            # the naive reference aggregates in the clear: the secure arm
+            # differs by its int32 fixed-point step (~N/(2·scale)/round)
+            np.testing.assert_allclose(got, ref_naive, rtol=1e-3, atol=5e-4)
+        else:
+            np.testing.assert_allclose(got, ref_naive, rtol=2e-5, atol=1e-5)
+    else:
+        np.testing.assert_allclose(got, ref_exact, rtol=_INT8_RTOL, atol=_INT8_ATOL)
+        np.testing.assert_allclose(got, ref_naive, rtol=_INT8_RTOL, atol=_INT8_ATOL)
+
+    # full-duplex wire contract: both directions nonzero and reconciling
+    assert stats.upload_messages == expected_uploads
+    assert stats.upload_serializations == expected_uploads
+    assert stats.upload_bytes > 0 and stats.bytes_moved > 0
+    assert stats.upload_virtual_wire_s > 0 and stats.virtual_wire_s > 0
+    per_upload = stats.upload_bytes / expected_uploads
+    assert per_upload == int(per_upload)  # identical payload size per upload
+
+
+def test_int8_uplink_actually_compresses():
+    """The int8 arm must put ~4x fewer bytes on the uplink wire than raw —
+    even at this tiny P=1024 arena row, thanks to the adaptive kernel tile
+    (`effective_block_rows`)."""
+    case = _CASES["sync"]
+    _, raw_stats, n = _federation(case, "arena", "raw")
+    _, int8_stats, _ = _federation(case, "arena", "int8")
+    assert raw_stats.upload_messages == int8_stats.upload_messages == n
+    from repro.kernels.quantize import wire_layout
+
+    _, _, payload = wire_layout(1024)
+    assert int8_stats.upload_bytes == n * payload
+    assert raw_stats.upload_bytes == n * 4 * 1024
+    assert raw_stats.upload_bytes / int8_stats.upload_bytes > 3.5
+
+
+@pytest.mark.multidevice
+def test_conformance_matrix_sharded_arena():
+    """The same grid on the mesh-sharded arena (8 forced host devices):
+    every protocol × codec must match the replay reference."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    script = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (AsyncProtocol, Controller, Learner,
+                                SemiSyncProtocol, SyncProtocol, aggregation,
+                                packing)
+        from repro.core import secure as secure_mod
+        from repro.core.server_opt import make_server_optimizer
+        from repro.launch.mesh import make_controller_mesh
+        from repro.optim import sgd
+
+        INIT = {"w": np.zeros((4, 1), np.float32)}
+
+        def make_learner(i):
+            def loss_fn(p, b):
+                return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+            rng = np.random.default_rng(i)
+            X = rng.normal(size=(64, 4)).astype(np.float32)
+            y = X @ np.ones((4, 1), np.float32)
+            def data_fn(bs):
+                j = rng.integers(0, 64, size=bs)
+                return X[j], y[j]
+            return Learner(
+                f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+                data_fn, lambda: (X, y), sgd(0.05), 64,
+            )
+
+        CASES = {
+            "sync": (lambda: SyncProtocol(local_steps=2, batch_size=16),
+                     3, 2, 0, False),
+            "semi_sync": (lambda: SemiSyncProtocol(
+                              hyperperiod_s=0.05, batch_size=16,
+                              default_steps=2), 3, 1, 0, False),
+            "async": (lambda: AsyncProtocol(local_steps=2, batch_size=16),
+                      1, 0, 3, False),
+            "secure": (lambda: SyncProtocol(local_steps=2, batch_size=16),
+                       3, 2, 0, True),
+        }
+
+        def reference(name):
+            proto_fn, n, rounds, updates, secure = CASES[name]
+            proto = proto_fn()
+            learners = [make_learner(i) for i in range(n)]
+            manifest = packing.build_manifest(INIT)
+            gbuf = packing.pack_numeric(INIT)
+            params = packing.unpack_numeric(gbuf, manifest)
+            server = make_server_optimizer("fedavg")
+            state = server.init(gbuf)
+            for r in range(rounds or updates):
+                task = proto.make_task(r, {})
+                ups = [l.fit(params, task) for l in learners]
+                ws = [float(u.num_examples) for u in ups]
+                bufs = [packing.pack_numeric(u.params) for u in ups]
+                if secure:
+                    new = secure_mod.secure_fedavg(bufs, ws, base_seed=r)
+                elif updates:
+                    new = bufs[0]
+                else:
+                    new = aggregation.weighted_average(
+                        jnp.stack(bufs), jnp.asarray(ws, jnp.float32))
+                state, gbuf = server.apply(state, gbuf, new)
+                params = packing.unpack_numeric(gbuf, manifest)
+            return np.asarray(params["w"])
+
+        assert jax.device_count() == 8
+        for name in CASES:
+            proto_fn, n, rounds, updates, secure = CASES[name]
+            ref = reference(name)
+            for codec in ("raw", "int8"):
+                ctrl = Controller(protocol=proto_fn(), secure=secure,
+                                  arena_mesh=make_controller_mesh(),
+                                  upload_codec=codec)
+                ctrl.set_initial_model(INIT)
+                for i in range(n):
+                    ctrl.register_learner(make_learner(i))
+                if updates:
+                    ctrl.run_async(total_updates=updates)
+                else:
+                    for _ in range(rounds):
+                        ctrl.run_round()
+                got = np.asarray(ctrl.global_params["w"])
+                stats = ctrl.channel.stats
+                expected = n * rounds + updates
+                assert stats.upload_messages == expected, (name, codec)
+                assert stats.upload_bytes > 0 and stats.bytes_moved > 0
+                ctrl.shutdown()
+                if codec == "raw":
+                    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-7,
+                                               err_msg=f"{name}/raw")
+                else:
+                    np.testing.assert_allclose(got, ref, rtol=0.02, atol=0.02,
+                                               err_msg=f"{name}/int8")
+        print("SHARDED-CONFORMANCE-OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "SHARDED-CONFORMANCE-OK" in out.stdout

@@ -13,7 +13,10 @@ Asserts the acceptance surface of the dispatch re-engineering
   semi-sync, async and secure protocols, in arena and stack store modes, and
   on the mesh-sharded arena under 8 forced host devices;
 * ``ChannelStats`` survives being hammered from 16 threads without losing
-  updates;
+  updates — on the downlink *and* the upload half;
+* uplink byte/message totals reconcile exactly with round counts on sync,
+  semi-sync, async and secure, in arena and stack modes, fast path and
+  legacy (controller-stand-in) path alike;
 * the empty-cohort check reads the arena's host-side row map
   (``ArenaStore.num_valid``), not the device mask.
 """
@@ -131,11 +134,12 @@ def test_pack_bytes_from_numeric_bit_identical_and_pad_oblivious():
 
 
 def test_channel_stats_threadsafe_under_16_thread_hammer():
-    """send/recv/broadcast.to from 16 threads must not lose counter updates."""
+    """send/recv/broadcast.to/upload/recv_upload from 16 threads must not
+    lose counter updates in either wire direction."""
     tree = {"w": jnp.ones((50,), jnp.float32)}
+    row = packing.pack_numeric(tree)
     ch = Channel()
-    bc = ch.broadcast(buffer=packing.pack_numeric(tree),
-                      manifest=packing.build_manifest(tree))
+    bc = ch.broadcast(buffer=row, manifest=packing.build_manifest(tree))
     n_threads, iters = 16, 25
     barrier = threading.Barrier(n_threads)
 
@@ -145,6 +149,8 @@ def test_channel_stats_threadsafe_under_16_thread_hammer():
             env = ch.send(tree)
             ch.recv(env)
             bc.to()
+            up = ch.upload(row)
+            ch.recv_upload(up)
 
     threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
     for t in threads:
@@ -158,6 +164,12 @@ def test_channel_stats_threadsafe_under_16_thread_hammer():
     assert ch.stats.bytes_moved == 2 * total * nbytes
     assert ch.stats.serializations == total + 1  # sends + the one broadcast
     assert bc.recipients == total
+    # uplink half: every upload is its own message AND serialization
+    assert ch.stats.upload_messages == total
+    assert ch.stats.upload_serializations == total
+    assert ch.stats.upload_bytes == total * nbytes
+    assert ch.stats.upload_virtual_wire_s > 0
+    assert ch.stats.total_bytes == ch.stats.bytes_moved + ch.stats.upload_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +313,92 @@ def test_driver_plumbs_flat_uploads_knob():
         drv.initialize({"w": jnp.zeros((4, 1))}, [_make_learner(0)])
         drv.run()
         assert (drv.controller.upload_fallback_packs == 0) == flat
+
+
+# ---------------------------------------------------------------------------
+# measured uplink: byte totals reconcile with round counts on every protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("flat", [True, False], ids=["flat", "legacy"])
+@pytest.mark.parametrize(
+    "proto_fn,secure",
+    [
+        (lambda: SyncProtocol(local_steps=1, batch_size=8), False),
+        (lambda: SemiSyncProtocol(hyperperiod_s=0.05, batch_size=8,
+                                  default_steps=1), False),
+        (lambda: SyncProtocol(local_steps=1, batch_size=8), True),
+    ],
+    ids=["sync", "semi_sync", "secure"],
+)
+def test_uplink_reconciles_with_round_counts(proto_fn, secure, flat):
+    """Both wire directions must report nonzero totals that reconcile
+    exactly with round counts — on the fast path and on the legacy path
+    (where the controller stands in for the learner's send half)."""
+    n, rounds = 3, 2
+    ctrl = Controller(protocol=proto_fn(), secure=secure, flat_uploads=flat)
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(n):
+        ctrl.register_learner(_make_learner(i))
+    for _ in range(rounds):
+        ctrl.run_round()
+    ctrl.shutdown()
+    stats = ctrl.channel.stats
+
+    uploads = n * rounds
+    row_bytes = 4 * ctrl.arena.padded_params  # decoded f32 row per upload
+    wire_down = ctrl.manifest.total_bytes
+    # uplink: one measured message AND serialization per upload
+    assert stats.upload_messages == uploads == stats.upload_serializations
+    assert stats.upload_bytes == uploads * row_bytes
+    assert stats.upload_virtual_wire_s > 0
+    # downlink: one train + one eval envelope per learner per round
+    assert stats.messages == 2 * n * rounds
+    assert stats.bytes_moved == stats.messages * wire_down
+    assert stats.virtual_wire_s > 0
+    # every decoded upload landed in the arena, byte for byte
+    assert ctrl.arena.bytes_ingested == uploads * row_bytes
+    assert stats.total_bytes == stats.bytes_moved + stats.upload_bytes
+    assert (ctrl.upload_fallback_packs == 0) == flat
+
+
+def test_uplink_reconciles_async_executor():
+    """The async protocol uploads from concurrent executor threads; totals
+    must still reconcile exactly with the number of arena writes."""
+    ctrl = Controller(protocol=AsyncProtocol(local_steps=1, batch_size=8))
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(3):
+        ctrl.register_learner(_make_learner(i))
+    hist = ctrl.run_async(total_updates=9)
+    ctrl.shutdown()  # barrier: in-flight completions drain before we count
+    stats = ctrl.channel.stats
+
+    assert len(hist) >= 9
+    writes = ctrl.arena.total_writes
+    row_bytes = 4 * ctrl.arena.padded_params
+    assert writes >= 9
+    assert stats.upload_messages == writes == stats.upload_serializations
+    assert stats.upload_bytes == writes * row_bytes
+    assert ctrl.arena.bytes_ingested == writes * row_bytes
+    assert stats.bytes_moved == stats.messages * ctrl.manifest.total_bytes
+    assert stats.upload_virtual_wire_s > 0 and stats.virtual_wire_s > 0
+
+
+def test_uplink_reconciles_stack_store():
+    """Stack mode: uploads are unpadded; the hash-map store's ingest bytes
+    must equal the channel's decoded uplink volume."""
+    ctrl = Controller(protocol=SyncProtocol(local_steps=1, batch_size=8),
+                      store_mode="stack")
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(2):
+        ctrl.register_learner(_make_learner(i))
+    ctrl.run_round()
+    ctrl.shutdown()
+    stats = ctrl.channel.stats
+    row_bytes = 4 * int(ctrl.global_buffer.shape[0])
+    assert stats.upload_messages == 2
+    assert stats.upload_bytes == 2 * row_bytes
+    assert ctrl.store.bytes_ingested == 2 * row_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,148 @@
+"""Property tests for the wire layer, both directions.
+
+Downlink: ``pack_bytes_from_numeric``/``unpack_bytes`` must round-trip any
+pytree — random leaf counts, shapes, dtypes and padded buffer widths —
+bit-identically to the canonical ``pack_bytes`` of the numeric-decoded tree.
+
+Uplink: the upload codecs must round-trip random flat ``(P,)`` rows — ``raw``
+bit-exactly at 4 bytes/param, ``int8`` inside the per-group quantization
+bound with the payload size pinned to ``kernels/quantize.wire_layout``.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/hypothesis_compat.py`` mini-engine (so tier-1 still collects bare).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.core import packing
+from repro.core.transport import Channel, Int8UploadCodec
+from repro.kernels.quantize import effective_block_rows, wire_layout
+
+_DTYPES = ("float32", "bfloat16", "float16", "int32", "int8")
+
+
+@st.composite
+def _trees(draw):
+    """A pytree of 1-4 leaves with random shapes/dtypes, f32-survivable values."""
+    n_leaves = draw(st.integers(1, 4))
+    tree = {}
+    for i in range(n_leaves):
+        ndim = draw(st.integers(0, 2))
+        shape = tuple(draw(st.integers(1, 7)) for _ in range(ndim))
+        dtype = draw(st.sampled_from(_DTYPES))
+        size = int(np.prod(shape)) if shape else 1
+        # small integers / 4: exactly representable in every listed dtype and
+        # in the f32 accumulation buffer, so numeric round-trips are lossless
+        vals = [draw(st.integers(-40, 40)) for _ in range(size)]
+        arr = (np.asarray(vals, np.float32) / 4.0).reshape(shape)
+        tree[f"leaf{i}"] = jnp.asarray(arr).astype(jnp.dtype(dtype))
+    return tree
+
+
+@st.composite
+def _pads(draw):
+    """A pack_numeric pad_to value (None = unpadded)."""
+    return draw(st.sampled_from((None, 8, 128, 1000)))
+
+
+@given(_trees(), _pads())
+@settings(max_examples=25, deadline=None)
+def test_pack_bytes_from_numeric_roundtrips_any_tree(tree, pad_to):
+    """Numeric-buffer wire bytes == canonical pack_bytes, pad-oblivious."""
+    manifest = packing.build_manifest(tree)
+    numeric = packing.pack_numeric(tree, pad_to=pad_to)
+    want, _ = packing.pack_bytes(
+        packing.unpack_numeric(numeric, manifest)
+    )
+    got = packing.pack_bytes_from_numeric(numeric, manifest)
+    assert got.dtype == np.uint8
+    assert want.tobytes() == got.tobytes()
+
+    # and the receiver reconstructs every leaf bit-exactly
+    out = packing.unpack_bytes(got, manifest)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype and out[k].shape == tree[k].shape
+        want_leaf = np.asarray(
+            packing.unpack_numeric(numeric, manifest)[k]
+        )
+        assert np.asarray(out[k]).tobytes() == want_leaf.tobytes()
+
+
+@st.composite
+def _rows(draw):
+    """A flat f32 row of random length (crossing pad boundaries) and scale."""
+    n = draw(st.integers(1, 3000))
+    scale = draw(st.floats(0.01, 100.0))
+    vals = [draw(st.floats(-1.0, 1.0)) for _ in range(min(n, 16))]
+    rng = np.random.default_rng(n)
+    row = rng.normal(size=(n,)).astype(np.float32) * np.float32(scale)
+    row[: len(vals)] = np.asarray(vals, np.float32) * np.float32(scale)
+    return jnp.asarray(row)
+
+
+@given(_rows())
+@settings(max_examples=25, deadline=None)
+def test_raw_upload_codec_roundtrips_bit_exact(row):
+    """raw: 4 bytes/param on the wire, decode bit-identical to the buffer."""
+    ch = Channel(upload_codec="raw")
+    env = ch.upload(row)
+    assert env.codec == "raw"
+    assert env.payload.nbytes == 4 * row.shape[0]
+    got = ch.recv_upload(env)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(row))
+
+
+@given(_rows())
+@settings(max_examples=15, deadline=None)
+def test_int8_upload_codec_bounded_and_layout_pinned(row):
+    """int8: payload size == wire_layout, error inside the per-group bound."""
+    codec = Int8UploadCodec(group=128, block_rows=8)  # small tiles: fast CI
+    ch = Channel(upload_codec=codec)
+    env = ch.upload(row)
+    n = int(row.shape[0])
+    n_pad, n_scales, payload_bytes = wire_layout(n, 128, 8)
+    assert env.codec == "int8"
+    assert env.payload.nbytes == payload_bytes
+    got = np.asarray(ch.recv_upload(env))
+    assert got.shape == (n,) and got.dtype == np.float32
+    amax = float(np.max(np.abs(np.asarray(row))))
+    assert float(np.max(np.abs(got - np.asarray(row)))) <= amax / 127 + 1e-7
+    # the envelope is self-describing: a channel with a *different* default
+    # codec reconstructs this one from codec_params and decodes identically
+    foreign = np.asarray(Channel(upload_codec="raw").recv_upload(env))
+    np.testing.assert_array_equal(foreign, got)
+
+
+@given(st.integers(1, 40000))
+@settings(max_examples=25, deadline=None)
+def test_wire_layout_invariants(n):
+    """Layout algebra: padded to the *adaptive* kernel tile, 1/group scales,
+    byte total — and compression never inverts once P reaches one group."""
+    group, block_rows = 256, 64
+    eff = effective_block_rows(n, group, block_rows)
+    tile = group * eff
+    n_pad, n_scales, payload = wire_layout(n, group, block_rows)
+    assert 1 <= eff <= block_rows
+    assert n_pad >= n and n_pad % tile == 0 and n_pad - n < tile
+    assert n_scales * group == n_pad
+    assert payload == n_pad + 4 * n_scales
+    if n >= group:
+        assert payload < 4 * n  # int8 wire never exceeds the raw wire
+    if n > group * block_rows:
+        # above one tile the adaptive block bounds pad waste to ~6.25% of
+        # rows, so compression never collapses at tile-boundary bands
+        assert 4 * n / payload > 3.5
+
+
+def test_wire_layout_no_compression_cliff_at_tile_boundaries():
+    """Row counts just past a block multiple (the old 2.0x cliff) compress."""
+    group, block_rows = 256, 64
+    tile = group * block_rows
+    for n in (tile + group, tile + 1, 4 * tile + group, 123 * group + 17):
+        n_pad, _, payload = wire_layout(n, group, block_rows)
+        assert 4 * n / payload > 3.5, n
+        # and the layout still matches what the kernel path emits
+        eff = effective_block_rows(n, group, block_rows)
+        assert (n_pad // group) % eff == 0
