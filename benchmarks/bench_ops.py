@@ -30,8 +30,8 @@ def _metis_round(size: str, n_learners: int, local_steps=1) -> dict:
     ctrl.set_initial_model(mlp_model.init_params(jax.random.key(0), cfg))
     for l in learners:
         ctrl.register_learner(l)
-    ctrl.run_round()  # warmup (jit compilation of learner steps)
-    t = ctrl.run_round()
+    ctrl.engine.run(rounds=1)  # warmup (jit compilation of learner steps)
+    t = ctrl.engine.run(rounds=1)[0]
     ctrl.shutdown()
     return t.as_row()
 

@@ -1,6 +1,6 @@
 """Table 2 reproduction: federation round time (secs) for the 10M-param model
 across federation sizes, MetisFL-arm vs naive-arm — plus the dispatch-scaling
-arm (``--dispatch``).
+arm (``--dispatch``) and the wire-aware semi-sync sizing arm (``--schedule``).
 
 Paper Table 2 (10M params): MetisFL 4.58/6.10/14.13/21.28/45.61 s for
 10/25/50/100/200 learners vs e.g. IBM FL 175->1915 s.  Our two arms
@@ -12,6 +12,13 @@ compares the scaling exponents.
 is serialized once per round and fanned out as shared envelopes — O(P + N)),
 against the legacy per-send arm that re-serializes per learner (O(N·P)).
 Defaults follow the acceptance shape: N ∈ {8, 32, 128} at P = 2^23 (≥ 2^22).
+
+``--schedule`` measures the wire-cost-aware semi-sync sizing claim: under a
+bandwidth cap, the hyper-period budget must cover *train + round-trip wire*
+time.  The naive arm (``wire_aware=False``) sizes tasks from train time only
+and overshoots the hyper-period by roughly the wire time; the wire-aware arm
+(default) subtracts each learner's modeled round-trip (broadcast down +
+upload payload up, ``Controller.wire_time_s``) and stays within budget.
 """
 
 from __future__ import annotations
@@ -48,10 +55,11 @@ def run(learner_counts=(10, 25, 50), size="10m", include_naive=True):
 def _make_null_learner(lid, upload_buffer):
     """A learner that trains instantly and uploads a pre-packed flat buffer.
 
-    Isolates the *dispatch* path: the round still runs the full controller
-    machinery (broadcast, recv, MarkTaskCompleted arena write, aggregation,
-    eval fan-out) but no local SGD, so ``train_dispatch_s`` is measured under
-    realistic envelope traffic without minutes of training per round.
+    Isolates the *dispatch* path: the round still runs the full engine
+    machinery (broadcast, recv, UploadArrived ingest + arena write,
+    aggregation, eval fan-out) but no local SGD, so ``train_dispatch_s`` is
+    measured under realistic envelope traffic without minutes of training
+    per round.
     """
     from repro.core import EvalReport, Learner, LocalUpdate
     from repro.optim import sgd
@@ -76,17 +84,15 @@ def run_dispatch(learner_counts=(8, 32, 128), p=1 << 23, rounds=3,
                  include_persend=True):
     """Per-round train-dispatch wall time vs federation size N.
 
-    The wire cache is invalidated before every measured dispatch (as if the
+    The wire cache is invalidated before every measured round (as if the
     model had just been re-published), so each dispatch pays its one
     serialization inside the timed region — the worst case; in steady state
     that single serialization is shared with the previous round's eval
-    fan-out.  Median over ``rounds`` repeats: the completion side (N recvs +
-    N arena writes) runs concurrently with the next measurement's setup and
-    adds noise on small hosts.  The ``persend`` arm is the legacy cost: one
-    full serialization per learner.
+    fan-out.  Median over ``rounds`` engine rounds: the completion side
+    (N recvs + N arena writes) runs concurrently with the next
+    measurement's setup and adds noise on small hosts.  The ``persend`` arm
+    is the legacy cost: one full serialization per learner.
     """
-    from concurrent.futures import wait as wait_futures
-
     import jax.numpy as jnp
 
     from repro.core import Channel, Controller, SyncProtocol
@@ -101,16 +107,10 @@ def run_dispatch(learner_counts=(8, 32, 128), p=1 << 23, rounds=3,
         upload = jnp.zeros((ctrl.arena.padded_params,), jnp.float32)
         for i in range(n):
             ctrl.register_learner(_make_null_learner(f"l{i}", upload))
-        ids = ctrl.learner_ids
 
         def one_dispatch():
-            with ctrl._wire_lock:
-                ctrl._wire_cache = None  # model re-published: cold cache
-            futures, dispatch_s = ctrl._dispatch_train(ids)
-            wait_futures(futures)
-            for f in futures:
-                f.result()
-            return dispatch_s
+            ctrl.invalidate_wire_cache()  # model re-published: cold cache
+            return ctrl.engine.run(rounds=1)[0].train_dispatch_s
 
         one_dispatch()  # warmup: compiles recv/arena-write programs
         dispatch = sorted(one_dispatch() for _ in range(rounds))
@@ -148,10 +148,83 @@ def run_dispatch(learner_counts=(8, 32, 128), p=1 << 23, rounds=3,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# wire-aware semi-sync sizing arm
+# ---------------------------------------------------------------------------
+
+
+def run_schedule(p=1 << 22, n=8, hyperperiod_s=0.5, bandwidth_gbps=1.0,
+                 latency_ms=2.0, sps_range=(2e-4, 2e-3)):
+    """Wire-aware vs naive semi-sync task sizing under a bandwidth cap.
+
+    Builds a bandwidth-capped controller, seeds ``n`` synthetic learner
+    profiles spanning ``sps_range`` seconds-per-step, and sizes each
+    learner's task through the real policy + wire model
+    (``SemiSyncProtocol.size_task`` fed by ``Controller.wire_time_s`` —
+    exactly what the engine's dispatch does).  The modeled round wall-clock
+    is the slowest learner's ``steps * sps + round_trip_wire``; wire time is
+    virtual by design (the channel never sleeps), so the modeled time *is*
+    the round time a bandwidth-capped deployment would see.  The wire-aware
+    arm must stay within the hyper-period; the naive arm overshoots by
+    roughly the wire time.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Channel, Controller, LearnerProfile, SemiSyncProtocol
+
+    sps = np.geomspace(sps_range[0], sps_range[1], n)
+    rows = []
+    for arm, wire_aware in (("wire_aware", True), ("naive", False)):
+        ctrl = Controller(
+            protocol=SemiSyncProtocol(hyperperiod_s=hyperperiod_s,
+                                      wire_aware=wire_aware),
+            channel=Channel(bandwidth_gbps=bandwidth_gbps,
+                            latency_ms=latency_ms),
+        )
+        ctrl.set_initial_model({"w": jnp.zeros((p,), jnp.float32)})
+        round_s = 0.0
+        max_steps = 0
+        wire_s = 0.0
+        for i, s in enumerate(sps):
+            lid = f"l{i}"
+            prof = LearnerProfile()
+            prof.observe_step_time(float(s))
+            ctrl._learner_profiles[lid] = prof
+            wire_s = ctrl.wire_time_s(lid)
+            task = ctrl.protocol.size_task(1, prof, wire_s=wire_s)
+            completion_s = task.local_steps * float(s) + wire_s
+            round_s = max(round_s, completion_s)
+            max_steps = max(max_steps, task.local_steps)
+        ctrl.shutdown()
+        row = {"bench": "schedule", "arm": arm, "params": p, "learners": n,
+               "hyperperiod_s": hyperperiod_s,
+               "bandwidth_gbps": bandwidth_gbps,
+               "round_trip_wire_s": wire_s,
+               "modeled_round_s": round_s,
+               "budget_ratio": round_s / hyperperiod_s,
+               "within_budget": bool(round_s <= hyperperiod_s),
+               "max_steps": max_steps}
+        rows.append(row)
+        print(f"schedule,{arm},P={p},N={n},bw={bandwidth_gbps}Gbps,"
+              f"wire={wire_s*1e3:.1f}ms,round={round_s*1e3:.1f}ms,"
+              f"budget={hyperperiod_s*1e3:.0f}ms,"
+              f"ratio={row['budget_ratio']:.2f}x,"
+              f"within={row['within_budget']}", flush=True)
+    aware, naive = rows[0], rows[1]
+    print(f"schedule: wire-aware {aware['budget_ratio']:.2f}x of budget "
+          f"(within={aware['within_budget']}), naive "
+          f"{naive['budget_ratio']:.2f}x (within={naive['within_budget']})",
+          flush=True)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dispatch", action="store_true",
                     help="train-dispatch scaling vs N (serialize-once claim)")
+    ap.add_argument("--schedule", action="store_true",
+                    help="bandwidth-capped semi-sync sizing: wire-aware vs naive")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -163,6 +236,11 @@ def main(argv=None):
             rows = run_dispatch(learner_counts=(4, 8, 16), p=1 << 16, rounds=1)
         else:
             rows = run_dispatch()
+    elif args.schedule:
+        if args.smoke:
+            rows = run_schedule(p=1 << 16, n=4, bandwidth_gbps=0.02)
+        else:
+            rows = run_schedule()
     else:
         rows = run(learner_counts=(10, 25) if args.smoke else (10, 25, 50))
 

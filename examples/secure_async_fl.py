@@ -4,8 +4,10 @@ composed in one workflow.
 
 Phase 1: synchronous rounds with MASKED SECURE AGGREGATION — the controller
 only ever sums fixed-point-masked uploads (pairwise pads cancel exactly).
-Phase 2: ASYNCHRONOUS federation — the controller aggregates on every
-arrival with staleness-discounted weights; no round barrier.
+Phase 2: SECURE ASYNCHRONOUS federation — the engine aggregates on every
+arrival with staleness-discounted weights inside a fresh per-epoch mask
+session (keyed by the global model version), still never seeing an
+individual model; no round barrier.
 Both phases ship models through the int8 Pallas transport codec.
 
     PYTHONPATH=src python examples/secure_async_fl.py
@@ -47,27 +49,29 @@ def main():
     print(f"  wire: {stats.bytes_moved/1e6:.1f} MB over {stats.messages} msgs "
           f"(int8 codec)")
 
-    # ---- phase 2: asynchronous continuation (a NEW task: fresh silos with a
-    # different ground truth, warm-started from the secure phase's model) ----
+    # ---- phase 2: SECURE asynchronous continuation (a NEW task: fresh silos
+    # with a different ground truth, warm-started from the secure phase's
+    # model) — every community update opens a per-epoch mask session --------
     cfg2, learners2 = build_housing_learners("100k", n_learners=4, seed=1)
     ctrl = Controller(
         protocol=AsyncProtocol(local_steps=8, batch_size=50, learning_rate=0.01,
                                staleness_alpha=0.5),
+        secure=True,
     )
     ctrl.set_initial_model(secure_params)
     start = float(mlp_model.mse_loss(secure_params, learners2[0]._eval_data_fn()))
     for l in learners2:
         ctrl.register_learner(l)
-    updates = ctrl.run_async(total_updates=20)
+    updates = ctrl.engine.run(total_updates=20)
     ctrl.shutdown()
-    print(f"async phase: {len(updates)} community updates, "
+    print(f"secure async phase: {len(updates)} community updates, "
           f"mean agg {np.mean([u.aggregation_s for u in updates])*1e3:.2f} ms")
 
     final = float(mlp_model.mse_loss(ctrl.global_params,
                                      learners2[0]._eval_data_fn()))
-    print(f"async adaptation: eval loss {start:.4f} -> {final:.4f}")
-    assert final < start, "async federation must adapt to the new task"
-    print("secure→async federation complete ✓")
+    print(f"secure async adaptation: eval loss {start:.4f} -> {final:.4f}")
+    assert final < start, "secure async federation must adapt to the new task"
+    print("secure sync → secure async federation complete ✓")
 
 
 if __name__ == "__main__":

@@ -35,11 +35,26 @@ from repro.core.aggregation import (
     weighted_average,
 )
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
-from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
+from repro.core.scheduler import (
+    AsyncProtocol,
+    LearnerProfile,
+    ProtocolPolicy,
+    SemiSyncProtocol,
+    SyncProtocol,
+    TrainTask,
+)
 from repro.core.selection import SelectionPolicy, select_learners
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.learner import EvalReport, Learner, LocalUpdate
-from repro.core.controller import Controller, RoundTimings
+from repro.core.engine import (
+    AggregateFired,
+    Dispatched,
+    Evaluated,
+    RoundEngine,
+    RoundTimings,
+    UploadArrived,
+)
+from repro.core.controller import Controller
 from repro.core.driver import Driver, FederationEnv, TerminationCriteria
 from repro.core.transport import (
     Broadcast,
@@ -62,10 +77,12 @@ __all__ = [
     "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
     "ModelRecord", "ModelStore", "ArenaStore",
     "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",
+    "ProtocolPolicy", "LearnerProfile",
     "SelectionPolicy", "select_learners",
     "ServerOptimizer", "make_server_optimizer",
     "Learner", "LocalUpdate", "EvalReport",
-    "Controller", "RoundTimings",
+    "Controller", "RoundTimings", "RoundEngine",
+    "Dispatched", "UploadArrived", "AggregateFired", "Evaluated",
     "Driver", "FederationEnv", "TerminationCriteria",
     "Broadcast", "Channel", "ChannelStats", "Envelope",
     "UploadEnvelope", "RawUploadCodec", "Int8UploadCodec", "get_upload_codec",

@@ -1,65 +1,56 @@
-"""The Federation Controller — first-class citizen of the system.
+"""The Federation Controller — model state, transport and store plumbing.
 
-Implements the full controller lifecycle of paper Figs. 1/9/10 with the
-re-engineered operations of §3:
+Implements the controller lifecycle of paper Figs. 1/9/10 with the
+re-engineered operations of §3, but — since the event-driven round engine
+landed (``core/engine.py``) — it no longer *runs* protocols itself: the
+engine's single arrival-driven loop consults the protocol policy
+(``core/scheduler.ProtocolPolicy``) and calls back into the controller's
+plumbing surface:
 
-* **async train dispatch** — RunTask is fire-and-forget through a thread-pool
-  executor; the learner's completion callback (MarkTaskCompleted) inserts the
-  local model into the :class:`ModelStore`.  The controller never blocks on a
-  single learner while dispatching.
 * **serialize-once broadcast dispatch** — the global model is serialized at
-  most **once per model version** (``Channel.broadcast`` straight off the
-  flat ``global_buffer``, manifest cached — never rebuilt per send) and
-  fanned out as shared read-only envelopes, so per-round dispatch cost is
-  O(P + N), independent of federation size at fixed payload.
-* **measured upload fast path** — learners hold the manifest and the channel
-  handle (shipped once at registration) and send the packed ``(P,)`` buffer
-  through the channel's uplink half (``Channel.upload``, codec-encoded wire
-  envelope with per-send byte/time accounting), so MarkTaskCompleted decodes
-  straight into the arena row: zero pytree flattening and zero host
-  concatenation on arrival, in both the sync round and the async
-  community-update loop — and both wire directions show up in
-  ``ChannelStats``.
-* **sync eval dispatch** — EvaluateModel keeps the call open (paper Fig. 10).
-* **packed aggregation** — local models are packed once at upload
-  (``pack_numeric``) and aggregated as a fused ``(N, P)`` reduction
-  (``core/aggregation``), optionally through the Pallas kernel or secure path.
+  most **once per model version** (:meth:`Controller._broadcast`,
+  ``Channel.broadcast`` straight off the flat ``global_buffer``), so
+  per-round dispatch cost is O(P + N), independent of federation size at
+  fixed payload.
+* **measured upload ingest** (:meth:`Controller.ingest`) — learners hold the
+  manifest and the channel handle (shipped once at registration) and send
+  packed ``(P,)`` buffers through the measured uplink; arrival is a codec
+  decode plus a straight donated arena row write, and the EWMA learner
+  profile (``core/scheduler.LearnerProfile``) absorbs the task's measured
+  seconds-per-step and wire bytes.
+* **aggregation plumbing** — :meth:`Controller.aggregate_round` (cohort
+  FedAvg / secure sum) and :meth:`Controller.aggregate_community`
+  (staleness-damped async update, in the clear or through a per-epoch
+  :class:`~repro.core.secure.MaskSession`), both committing through the
+  server optimizer and bumping the model version.
+* **wire-cost model** (:meth:`Controller.wire_time_s`) — the per-learner
+  round-trip virtual wire estimate (downlink broadcast + uplink payload)
+  the semi-sync policy subtracts from its hyper-period budget.
 * **device-resident arena** (``store_mode="arena"``, the default) — uploads
   are donated in-place row writes into a persistent ``(n_max, P)`` device
-  buffer (``core/store.ArenaStore``) and every aggregation is a single masked
-  reduction straight over that buffer: the hot path never re-stacks the
-  ``(N, P)`` array or round-trips through the host.  ``store_mode="stack"``
-  keeps the legacy per-upload-buffer + ``jnp.stack`` path for parity testing
-  (``benchmarks/bench_agg.py --compare`` measures the difference).
-* **mesh-sharded arena** (``arena_mesh=``) — the same arena column-sharded
-  over a device mesh: row writes are ``shard_map``-ed shard-local updates and
-  every protocol's reduction runs per shard with zero collectives, so the
-  controller scales past one device's HBM without touching protocol code
-  (``benchmarks/bench_agg.py --sharded`` measures it; ``docs/ARENA.md``
-  documents the layout).
-* **per-op timing** — the controller measures exactly the six operations the
-  paper's stress test reports: train dispatch, train round, aggregation,
-  eval dispatch, eval round, federation round.
+  buffer (``core/store.ArenaStore``), optionally column-sharded over a mesh
+  (``arena_mesh=``); ``store_mode="stack"`` keeps the legacy hash-map +
+  re-stack path for parity.
 
-Protocols: synchronous, semi-synchronous, asynchronous (``core/scheduler``).
+Workflow execution — cohort selection, dispatch, arrival handling,
+aggregation timing, evaluation fan-out — lives in ``engine.run``; see
+``docs/ENGINE.md``.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor, wait
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation, packing
-from repro.core.learner import EvalReport, Learner, LocalUpdate
-from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol, TrainTask
-from repro.core.selection import SelectionPolicy, select_learners
+from repro.core.engine import RoundEngine, RoundTimings
+from repro.core.learner import Learner, LocalUpdate
+from repro.core.scheduler import LearnerProfile, ProtocolPolicy, SyncProtocol
+from repro.core.selection import SelectionPolicy
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
 from repro.core.transport import Broadcast, Channel, get_upload_codec
@@ -67,42 +58,22 @@ from repro.core.transport import Broadcast, Channel, get_upload_codec
 __all__ = ["RoundTimings", "Controller"]
 
 
-@dataclasses.dataclass
-class RoundTimings:
-    """The six per-operation wall-clock measurements of the paper's Figs 5-7."""
-
-    round_id: int = -1
-    train_dispatch_s: float = 0.0
-    train_round_s: float = 0.0
-    aggregation_s: float = 0.0
-    eval_dispatch_s: float = 0.0
-    eval_round_s: float = 0.0
-    federation_round_s: float = 0.0
-    metrics: dict = dataclasses.field(default_factory=dict)
-
-    def as_row(self) -> dict:
-        """Flatten to one dict row for the CSV/JSON benchmark output."""
-        return {
-            "round": self.round_id,
-            "train_dispatch_s": self.train_dispatch_s,
-            "train_round_s": self.train_round_s,
-            "aggregation_s": self.aggregation_s,
-            "eval_dispatch_s": self.eval_dispatch_s,
-            "eval_round_s": self.eval_round_s,
-            "federation_round_s": self.federation_round_s,
-        }
-
-
 AggregateFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 class Controller:
-    """The federation controller.
+    """The federation controller: model state + transport + store plumbing.
+
+    Protocol execution is delegated to :attr:`engine`
+    (``core/engine.RoundEngine``): ``controller.engine.run(rounds=N)`` for
+    the round-based policies, ``engine.run(total_updates=N)`` for the
+    continuous (async) one.
 
     Parameters
     ----------
     protocol:
-        Sync/SemiSync/Async protocol object (``core/scheduler``).
+        A :class:`~repro.core.scheduler.ProtocolPolicy`
+        (Sync/SemiSync/Async protocol object).
     aggregate_fn:
         ``(stack (N,P), weights (N,)) -> (P,)``.  Defaults to the fused
         FedAvg; swap in the Pallas kernel op or a robust rule.
@@ -118,13 +89,16 @@ class Controller:
         rule for those).
     secure:
         If True, uploads are mask-encoded and the controller only sums
-        (``core/secure``) — it never sees an individual model.
+        (``core/secure``) — it never sees an individual model.  Composes
+        with every policy, including the continuous (async) one: each
+        community update opens a fresh per-epoch mask session keyed by the
+        global model version (``core/secure.MaskSession``).
     arena_mesh:
         Optional :class:`jax.sharding.Mesh`.  When given (arena mode only),
         the persistent ``(n_max, P)`` arena is **column-sharded** over the
         mesh's data axis (``launch/mesh.make_controller_mesh`` builds a 1-D
         one over all local devices): uploads scatter once and write
-        shard-locally, and every aggregation protocol — plain, staleness-
+        shard-locally, and every aggregation policy — plain, staleness-
         weighted async, secure sum — reduces per shard with zero collectives.
         Numerics are identical to the single-device arena
         (``tests/test_arena_sharded.py``); see ``docs/ARENA.md``.
@@ -136,10 +110,10 @@ class Controller:
         manifest (plus the arena row width and the channel handle) once at
         registration and sends its uploads through the measured uplink
         (``Channel.upload``) as codec-encoded wire envelopes, so
-        ``_mark_task_completed`` never flattens a pytree
-        (``upload_fallback_packs`` counts the times it had to).  False keeps
-        the legacy pack-on-arrival path, for parity testing — those uploads
-        still cross the measured uplink (the controller stands in for the
+        :meth:`ingest` never flattens a pytree (``upload_fallback_packs``
+        counts the times it had to).  False keeps the legacy
+        pack-on-arrival path, for parity testing — those uploads still
+        cross the measured uplink (the controller stands in for the
         learner's send half), so ``ChannelStats`` reconciles on every path.
     upload_codec:
         Uplink wire format: ``"raw"`` (default, bit-transparent f32 bytes)
@@ -148,11 +122,15 @@ class Controller:
         (default) keeps whatever the channel already uses; when set, it is
         installed on the controller's channel — including an explicitly
         passed ``channel=``, whose previous upload codec it replaces.
+    profile_decay:
+        EWMA decay for the per-learner seconds-per-step estimate
+        (``core/scheduler.LearnerProfile``); 0 reproduces the legacy
+        last-sample behaviour.
     """
 
     def __init__(
         self,
-        protocol: SyncProtocol | SemiSyncProtocol | AsyncProtocol | None = None,
+        protocol: ProtocolPolicy | None = None,
         selection: SelectionPolicy | None = None,
         aggregate_fn: AggregateFn | None = None,
         server_optimizer: ServerOptimizer | None = None,
@@ -169,6 +147,7 @@ class Controller:
         arena_axes: Any = None,
         flat_uploads: bool = True,
         upload_codec: Any = None,
+        profile_decay: float = 0.5,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -208,10 +187,10 @@ class Controller:
             self.channel.upload_codec = get_upload_codec(upload_codec)
         self.secure = secure
         self.secure_seed = secure_seed
+        self.profile_decay = profile_decay
 
         self._learners: dict[str, Learner] = {}
-        self._learner_profiles: dict[str, dict] = {}
-        self._executor = ThreadPoolExecutor(max_workers=max_dispatch_workers)
+        self._learner_profiles: dict[str, LearnerProfile] = {}
         self._store_lock = threading.Lock()
 
         self.global_params: Any = None
@@ -220,7 +199,7 @@ class Controller:
         self._server_state = None
         self.round_id = 0
         self.history: list[RoundTimings] = []
-        # async protocol state
+        # model-version state (continuous policy staleness accounting)
         self._model_version = 0
         self._learner_versions: dict[str, int] = {}
         # serialize-once dispatch state: one wire payload per model version
@@ -232,6 +211,9 @@ class Controller:
         # uploads the controller had to flatten itself (0 on the fast path)
         self.dispatch_serializations = 0
         self.upload_fallback_packs = 0
+        # The round engine owns the executor and the event loop; the
+        # controller is its plumbing surface.
+        self.engine = RoundEngine(self, max_dispatch_workers=max_dispatch_workers)
 
     # ------------------------------------------------------------------ init
     def set_initial_model(self, params: Any) -> None:
@@ -247,8 +229,7 @@ class Controller:
         self.global_buffer = packing.pack_numeric(params)
         self.global_params = packing.unpack_numeric(self.global_buffer, self.manifest)
         self._server_state = self.server_opt.init(self.global_buffer)
-        with self._wire_lock:
-            self._wire_cache = None
+        self.invalidate_wire_cache()
         if self.store_mode == "arena":
             self.arena = ArenaStore(
                 num_params=max(1, int(self.global_buffer.shape[0])),
@@ -290,7 +271,9 @@ class Controller:
     def register_learner(self, learner: Learner) -> None:
         """Admit a learner to the federation (paper Fig. 8 join)."""
         self._learners[learner.learner_id] = learner
-        self._learner_profiles[learner.learner_id] = {}
+        self._learner_profiles[learner.learner_id] = LearnerProfile(
+            decay=self.profile_decay
+        )
         self._learner_versions[learner.learner_id] = 0
         self._ship_manifest(learner)
 
@@ -322,28 +305,43 @@ class Controller:
                 self._wire_cache = (key, bc)
             return self._wire_cache[1]
 
-    def _dispatch_train(self, selected: Sequence[str]) -> tuple[list[Future], float]:
-        """Asynchronous RunTask dispatch: serialize the model **once** for the
-        whole cohort, fan out per-recipient envelopes, submit, collect Acks.
-        Returns completion futures + dispatch time."""
-        t0 = time.perf_counter()
-        broadcast = self._broadcast()
-        futures = []
-        for lid in selected:
-            task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
-            envelope = broadcast.to({"task": task})
+    def invalidate_wire_cache(self) -> None:
+        """Drop the cached broadcast, as if the model had just been re-published.
 
-            def run(lid=lid, task=task, envelope=envelope) -> LocalUpdate:
-                learner = self._learners[lid]
-                params = self.channel.recv(envelope)
-                update = learner.fit(params, task)
-                self._mark_task_completed(update)
-                return update
+        The next dispatch pays one full serialization — benchmarks use this
+        to measure the cold-cache dispatch cost deterministically.
+        """
+        with self._wire_lock:
+            self._wire_cache = None
 
-            futures.append(self._executor.submit(run))
-        dispatch_s = time.perf_counter() - t0
-        return futures, dispatch_s
+    # ------------------------------------------------------------ wire model
+    def wire_time_s(self, learner_id: str) -> float:
+        """Per-learner round-trip virtual wire estimate: downlink + uplink.
 
+        Downlink is the broadcast envelope (``manifest.total_bytes``);
+        uplink is the learner's last measured upload payload (recorded in
+        its profile at ingest) or, before the first upload, the channel
+        codec's modeled payload size for the padded row width.  The
+        semi-sync policy subtracts this from its hyper-period budget so
+        bandwidth-capped federations still finish inside the budget
+        (``SemiSyncProtocol.size_task``; math in ``docs/ENGINE.md``).
+        """
+        if self.manifest is None:
+            return 0.0
+        down = int(self.manifest.total_bytes)
+        prof = self._learner_profiles.get(learner_id)
+        up = prof.get("upload_bytes") if prof is not None else None
+        if up is None:
+            n = (
+                self.arena.padded_params
+                if self.arena is not None
+                else int(self.global_buffer.shape[0])
+            )
+            wire_nbytes = getattr(self.channel.upload_codec, "wire_nbytes", None)
+            up = wire_nbytes(n) if wire_nbytes is not None else 4 * n
+        return self.channel.round_trip_s(down, int(up))
+
+    # ---------------------------------------------------------------- ingest
     def _upload_buffer(self, update: LocalUpdate, pad_to: int | None) -> jax.Array:
         """The upload's decoded flat buffer, always off the measured uplink.
 
@@ -360,7 +358,7 @@ class Controller:
             return self.channel.recv_upload(update.upload)
         buffer = update.buffer
         if buffer is None:
-            with self._store_lock:  # completions run on concurrent executor threads
+            with self._store_lock:  # ingest may be probed from test threads
                 self.upload_fallback_packs += 1
             buffer = packing.pack_numeric(update.params, pad_to=pad_to)
         envelope = self.channel.upload(
@@ -369,17 +367,19 @@ class Controller:
         )
         return self.channel.recv_upload(envelope)
 
-    def _mark_task_completed(self, update: LocalUpdate) -> None:
-        """MarkTaskCompleted: decode the upload off the wire, insert in store.
+    def ingest(self, update: LocalUpdate) -> None:
+        """MarkTaskCompleted plumbing: decode the upload, store it, profile it.
 
-        Fast path (``flat_uploads``): the learner already packed its params
-        at the arena's padded row width and sent them through the measured
+        Called by the engine loop on every ``UploadArrived`` event.  Fast
+        path (``flat_uploads``): the learner already packed its params at
+        the arena's padded row width and sent them through the measured
         uplink, so arena mode is a codec decode plus a straight donated row
         write — zero pytree flattening, zero host concatenation on arrival.
         Otherwise the controller packs here (the legacy path, counted in
         ``upload_fallback_packs``) and routes the buffer through the same
         measured half.  Stack mode inserts the decoded buffer into the
-        hash-map store either way.
+        hash-map store either way.  The learner's EWMA profile absorbs the
+        task's measured seconds-per-step and (fast path) wire payload size.
         """
         if self.store_mode == "arena":
             buffer = self._upload_buffer(update, pad_to=self.arena.padded_params)
@@ -389,36 +389,55 @@ class Controller:
                 weight=float(update.num_examples),
                 version=float(self._learner_versions.get(update.learner_id, 0)),
             )
+        else:
+            buffer = self._upload_buffer(update, pad_to=None)
             with self._store_lock:
-                prof = self._learner_profiles[update.learner_id]
-                prof["seconds_per_step"] = update.seconds_per_step
-            return
-        buffer = self._upload_buffer(update, pad_to=None)
-        with self._store_lock:
-            self.store.insert(
-                ModelRecord(
-                    learner_id=update.learner_id,
-                    round_id=update.round_id,
-                    buffer=buffer,
-                    num_examples=update.num_examples,
-                    metadata={
-                        **update.metrics,
-                        "seconds_per_step": update.seconds_per_step,
-                        "model_version": self._learner_versions.get(update.learner_id, 0),
-                    },
+                self.store.insert(
+                    ModelRecord(
+                        learner_id=update.learner_id,
+                        round_id=update.round_id,
+                        buffer=buffer,
+                        num_examples=update.num_examples,
+                        metadata={
+                            **update.metrics,
+                            "seconds_per_step": update.seconds_per_step,
+                            "model_version": self._learner_versions.get(
+                                update.learner_id, 0
+                            ),
+                        },
+                    )
                 )
-            )
-            prof = self._learner_profiles[update.learner_id]
-            prof["seconds_per_step"] = update.seconds_per_step
+        prof = self._learner_profiles[update.learner_id]
+        prof.observe_step_time(update.seconds_per_step)
+        if update.upload is not None:
+            prof.observe_upload_bytes(update.upload.payload.nbytes)
 
     # ------------------------------------------------------------- aggregate
-    def _aggregate(self, selected: Sequence[str]) -> tuple[jax.Array, float]:
-        """Select + aggregate stored local models (paper T4-T7).
+    def _commit(self, new_buffer: jax.Array) -> None:
+        """Server-side optimization + global model swap + version bump."""
+        self._server_state, new_buffer = self.server_opt.apply(
+            self._server_state, self.global_buffer, new_buffer
+        )
+        new_buffer = jax.block_until_ready(new_buffer)
+        self.global_buffer = new_buffer
+        self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
+        self._model_version += 1
+
+    def _mask_session_seed(self, epoch: int) -> int:
+        """The per-epoch secure mask session (round id / model version key)."""
+        from repro.core import secure as secure_mod
+
+        return secure_mod.MaskSession(self.secure_seed, epoch).seed
+
+    def aggregate_round(self, selected: list[str]) -> float:
+        """Cohort aggregation for round-based policies (paper T4-T7).
 
         Arena mode: one masked reduction straight over the persistent device
         buffer — row writes already happened at arrival, so the round's
         critical path is just the reduce.  Stack mode: re-stack the stored
         buffers into an ``(N, P)`` array first (the legacy O(N·P) host copy).
+        Secure mode sums mask-encoded fixed-point rows in a per-round mask
+        session.  Commits the result; returns the aggregation seconds.
         """
         t0 = time.perf_counter()
         if self.store_mode == "arena":
@@ -435,7 +454,8 @@ class Controller:
                 buffers = [r.buffer for r in records]
                 weights = [float(r.num_examples) for r in records]
                 new_buffer = secure_mod.secure_fedavg(
-                    buffers, weights, base_seed=self.secure_seed + self.round_id
+                    buffers, weights,
+                    base_seed=self._mask_session_seed(self.round_id),
                 )
             else:
                 stack = jnp.stack([r.buffer for r in records], axis=0)
@@ -443,20 +463,10 @@ class Controller:
                     [float(r.num_examples) for r in records], jnp.float32
                 )
                 new_buffer = self.aggregate_fn(stack, weights)
+        self._commit(new_buffer)
+        return time.perf_counter() - t0
 
-        # server-side optimization on the packed buffer
-        self._server_state, new_buffer = self.server_opt.apply(
-            self._server_state, self.global_buffer, new_buffer
-        )
-        new_buffer = jax.block_until_ready(new_buffer)
-        agg_s = time.perf_counter() - t0
-
-        self.global_buffer = new_buffer
-        self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
-        self._model_version += 1
-        return new_buffer, agg_s
-
-    def _aggregate_arena(self, selected: Sequence[str]) -> jax.Array:
+    def _aggregate_arena(self, selected: list[str]) -> jax.Array:
         """Masked reduction over the arena restricted to the round's cohort."""
         arena = self.arena
         with arena.lock:
@@ -480,7 +490,7 @@ class Controller:
                 return secure_mod.secure_fedavg_arena(
                     arena.buffer, rows, weights,
                     num_params=width,
-                    base_seed=self.secure_seed + self.round_id,
+                    base_seed=self._mask_session_seed(self.round_id),
                     out_sharding=arena.row_sharding,
                 )[: arena.num_params]
             # Empty-cohort check from the arena's host-side row map: probing
@@ -497,172 +507,99 @@ class Controller:
                 out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
             return out[: arena.num_params]
 
-    # ------------------------------------------------------------ eval round
-    def _evaluate(self, selected: Sequence[str]) -> tuple[list[EvalReport], float, float]:
-        """Synchronous EvaluateModel fan-out (paper Fig. 10, T7-T9).
+    def aggregate_community(self) -> float:
+        """One staleness-weighted community update (the continuous policy).
 
-        Shares the post-aggregation model's single serialization with the
-        next round's train dispatch (both read the same version's broadcast).
+        The arrival that triggered this update was already written in place
+        by :meth:`ingest`, so there is no per-arrival stack rebuild — the
+        paper's "community update request" cost is one fused kernel
+        regardless of federation size.  With ``secure=True`` the update
+        instead sums mask-encoded fixed-point rows weighted by the
+        staleness-damped weights, inside a fresh per-epoch mask session
+        keyed by the global model version (``core/secure.MaskSession``) —
+        the controller still never sees an individual model.  Commits the
+        result; returns the aggregation seconds.
         """
+        alpha = getattr(self.protocol, "staleness_alpha", 0.5)
         t0 = time.perf_counter()
-        broadcast = self._broadcast()
-        futures = []
-        for lid in selected:
-            envelope = broadcast.to({"eval": True})
+        if self.store_mode == "arena":
+            arena = self.arena
+            with arena.lock:
+                if self.secure:
+                    new_buffer = self._secure_community_arena(alpha)
+                elif self._sharded_staleness_fn is not None:
+                    new_buffer = self._sharded_staleness_fn(
+                        arena.buffer, arena.weights, arena.versions,
+                        jnp.float32(self._model_version), arena.mask,
+                    )[: arena.num_params]
+                else:
+                    new_buffer = aggregation.masked_staleness_average(
+                        arena.buffer, arena.weights, arena.versions,
+                        jnp.float32(self._model_version), arena.mask, alpha,
+                    )[: arena.num_params]
+        else:
+            with self._store_lock:
+                records = self.store.select_latest(None)  # all known models
+            if not records:
+                raise RuntimeError("no local models available to aggregate")
+            if self.secure:
+                from repro.core import secure as secure_mod
 
-            def run(lid=lid, envelope=envelope) -> EvalReport:
-                params = self.channel.recv(envelope)
-                return self._learners[lid].evaluate(params, self.round_id)
-
-            futures.append(self._executor.submit(run))
-        dispatch_s = time.perf_counter() - t0
-        reports = [f.result() for f in futures]
-        round_s = time.perf_counter() - t0
-        return reports, dispatch_s, round_s
-
-    # -------------------------------------------------------- round drivers
-    def run_round(self) -> RoundTimings:
-        """One synchronous/semi-synchronous federation round (paper T1-T9)."""
-        if self.global_params is None:
-            raise RuntimeError("set_initial_model() before running rounds")
-        timings = RoundTimings(round_id=self.round_id)
-        t_round = time.perf_counter()
-
-        selected = select_learners(
-            self.selection,
-            self.learner_ids,
-            self.round_id,
-            {lid: l.num_examples for lid, l in self._learners.items()},
-        )
-        for lid in selected:
-            self._learner_versions[lid] = self._model_version
-
-        # training round: async dispatch, barrier on completion callbacks
-        t_train = time.perf_counter()
-        futures, timings.train_dispatch_s = self._dispatch_train(selected)
-        wait(futures)
-        for f in futures:
-            f.result()  # surface learner exceptions
-        timings.train_round_s = time.perf_counter() - t_train
-
-        # aggregation
-        _, timings.aggregation_s = self._aggregate(selected)
-
-        # evaluation round
-        reports, timings.eval_dispatch_s, timings.eval_round_s = self._evaluate(selected)
-        timings.metrics = self._reduce_eval(reports)
-
-        timings.federation_round_s = time.perf_counter() - t_round
-        self.history.append(timings)
-        self.round_id += 1
-        return timings
-
-    def run_async(self, total_updates: int) -> list[RoundTimings]:
-        """Asynchronous protocol: aggregate on every arrival, staleness-weighted.
-
-        Every completed local task immediately triggers a community update
-        (the paper's asynchronous 'community update request'); dispatch of the
-        next task to that learner follows at once.
-        """
-        if not isinstance(self.protocol, AsyncProtocol):
-            raise TypeError("run_async requires AsyncProtocol")
-        if self.global_params is None:
-            raise RuntimeError("set_initial_model() before running rounds")
-
-        alpha = self.protocol.staleness_alpha
-        done = threading.Event()
-        completed = 0
-        completed_lock = threading.Lock()
-        out: list[RoundTimings] = []
-
-        def community_update(update: LocalUpdate) -> None:
-            nonlocal completed
-            timings = RoundTimings(round_id=self.round_id)
-            t0 = time.perf_counter()
-            if self.store_mode == "arena":
-                # Staleness-weighted masked reduction straight off the arena:
-                # the arrival that triggered this update was already written
-                # in place by _mark_task_completed, so there is no per-arrival
-                # stack rebuild — the paper's "community update request" cost
-                # is one fused kernel regardless of federation size.
-                arena = self.arena
-                with arena.lock:
-                    if self._sharded_staleness_fn is not None:
-                        new_buffer = self._sharded_staleness_fn(
-                            arena.buffer, arena.weights, arena.versions,
-                            jnp.float32(self._model_version), arena.mask,
-                        )[: arena.num_params]
-                    else:
-                        new_buffer = aggregation.masked_staleness_average(
-                            arena.buffer, arena.weights, arena.versions,
-                            jnp.float32(self._model_version), arena.mask, alpha,
-                        )[: arena.num_params]
+                weights = [
+                    float(r.num_examples)
+                    * (1.0 + self._model_version
+                       - r.metadata.get("model_version", 0)) ** (-alpha)
+                    for r in records
+                ]
+                new_buffer = secure_mod.secure_fedavg(
+                    [r.buffer for r in records], weights,
+                    base_seed=self._mask_session_seed(self._model_version),
+                )
             else:
-                with self._store_lock:
-                    records = self.store.select_latest(None)  # all known models
-                    stal = jnp.asarray(
-                        [self._model_version - r.metadata.get("model_version", 0)
-                         for r in records],
-                        jnp.float32,
-                    )
-                    n_ex = jnp.asarray(
-                        [float(r.num_examples) for r in records], jnp.float32
-                    )
-                    stack = jnp.stack([r.buffer for r in records], axis=0)
+                stal = jnp.asarray(
+                    [self._model_version - r.metadata.get("model_version", 0)
+                     for r in records],
+                    jnp.float32,
+                )
+                n_ex = jnp.asarray(
+                    [float(r.num_examples) for r in records], jnp.float32
+                )
+                stack = jnp.stack([r.buffer for r in records], axis=0)
                 w = aggregation.staleness_weights(n_ex, stal, alpha)
                 new_buffer = self.aggregate_fn(stack, w)
-            self._server_state, new_buffer = self.server_opt.apply(
-                self._server_state, self.global_buffer, new_buffer
-            )
-            self.global_buffer = jax.block_until_ready(new_buffer)
-            self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
-            self._model_version += 1
-            timings.aggregation_s = time.perf_counter() - t0
-            timings.federation_round_s = timings.aggregation_s
-            out.append(timings)
-            self.history.append(timings)
-            self.round_id += 1
-            with completed_lock:
-                completed += 1
-                if completed >= total_updates:
-                    done.set()
+        self._commit(new_buffer)
+        return time.perf_counter() - t0
 
-        def dispatch_to(lid: str) -> None:
-            task = self.protocol.make_task(self.round_id, self._learner_profiles[lid])
-            self._learner_versions[lid] = self._model_version
-            # Learners dispatched between two community updates share one
-            # serialization (the broadcast is cached per model version).
-            envelope = self._broadcast().to({"task": task})
+    def _secure_community_arena(self, alpha: float) -> jax.Array:
+        """Secure async update off the arena: staleness-damped masked sum.
 
-            def run() -> None:
-                params = self.channel.recv(envelope)
-                update = self._learners[lid].fit(params, task)
-                self._mark_task_completed(update)
-                community_update(update)
-                with completed_lock:
-                    more = completed < total_updates
-                if more and not done.is_set():
-                    dispatch_to(lid)
+        Staleness weights are *metadata* (example counts and model-version
+        lags — the same inputs clear-text FedAvg weighting uses), so they
+        are computed host-side from the arena's mirrors and folded into the
+        fixed-point encoding learner-side, exactly like the FedAvg weights
+        of the synchronous secure path.  Mask seeds come from the per-epoch
+        session (one session per global model version).
+        """
+        from repro.core import secure as secure_mod
 
-            self._executor.submit(run)
+        arena = self.arena
+        rows, weights = [], []
+        for lid in arena.valid_ids():
+            row = arena.row_of(lid)
+            stale = float(self._model_version) - arena.version_of(lid)
+            rows.append(row)
+            weights.append(arena.weight_of(lid) * (1.0 + stale) ** (-alpha))
+        if not rows:
+            raise RuntimeError("no local models available to aggregate")
+        width = arena.padded_params if arena.sharded else arena.num_params
+        return secure_mod.secure_fedavg_arena(
+            arena.buffer, rows, weights,
+            num_params=width,
+            base_seed=self._mask_session_seed(self._model_version),
+            out_sharding=arena.row_sharding,
+        )[: arena.num_params]
 
-        for lid in self.learner_ids:
-            dispatch_to(lid)
-        done.wait()
-        return out
-
-    # -------------------------------------------------------------- helpers
-    @staticmethod
-    def _reduce_eval(reports: list[EvalReport]) -> dict:
-        if not reports:
-            return {}
-        keys = reports[0].metrics.keys()
-        total = sum(r.num_examples for r in reports)
-        return {
-            k: sum(r.metrics[k] * r.num_examples for r in reports) / max(total, 1)
-            for k in keys
-        }
-
+    # -------------------------------------------------------------- lifecycle
     def shutdown(self) -> None:
-        """Stop the dispatch executor (waits for in-flight tasks)."""
-        self._executor.shutdown(wait=True)
+        """Stop the engine's dispatch executor (waits for in-flight tasks)."""
+        self.engine.shutdown()

@@ -11,9 +11,10 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Sequence
 
-from repro.core.controller import Controller, RoundTimings
+from repro.core.controller import Controller
+from repro.core.engine import RoundTimings
 from repro.core.learner import Learner
 from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol
 from repro.core.selection import SelectionPolicy
@@ -72,24 +73,32 @@ class FederationEnv:
     # Uplink wire format for update buffers: "raw" (bit-transparent f32
     # bytes) or "int8" (blockwise quantization, ~3.9x fewer uplink bytes).
     upload_codec: str = "raw"
+    # EWMA decay for the per-learner seconds-per-step estimate (0 = legacy
+    # last-sample behaviour; see core/scheduler.LearnerProfile).
+    profile_decay: float = 0.5
+    # Semi-sync only: subtract each learner's modeled round-trip wire time
+    # from the hyper-period step budget (wire-cost-aware task sizing).
+    wire_aware: bool = True
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
     termination: TerminationCriteria = TerminationCriteria()
 
     def make_protocol(self):
-        """Instantiate the protocol object this environment describes."""
+        """Instantiate the protocol policy this environment describes."""
         if self.protocol == "sync":
-            return SyncProtocol(self.local_steps, self.batch_size, self.learning_rate)
+            return SyncProtocol(self.local_steps, self.batch_size, self.learning_rate,
+                                prox_mu=self.prox_mu)
         if self.protocol == "semi_sync":
             return SemiSyncProtocol(
                 self.hyperperiod_s, self.batch_size, self.learning_rate,
-                default_steps=self.local_steps,
+                default_steps=self.local_steps, prox_mu=self.prox_mu,
+                wire_aware=self.wire_aware,
             )
         if self.protocol == "async":
             return AsyncProtocol(
                 self.local_steps, self.batch_size, self.learning_rate,
-                self.staleness_alpha,
+                self.staleness_alpha, prox_mu=self.prox_mu,
             )
         raise ValueError(f"unknown protocol {self.protocol}")
 
@@ -133,6 +142,7 @@ class Driver:
             store_mode=store_mode,
             arena_mesh=arena_mesh,
             flat_uploads=env.flat_uploads,
+            profile_decay=env.profile_decay,
         )
         self._learners: list[Learner] = []
         self._last_heartbeat = 0.0
@@ -176,15 +186,16 @@ class Driver:
 
     # -- run ------------------------------------------------------------------
     def run(self) -> list[RoundTimings]:
-        """Run federation rounds until a termination criterion fires."""
+        """Run federation rounds (one engine loop) until termination fires."""
         t_start = time.monotonic()
         history: list[RoundTimings] = []
+        engine = self.controller.engine
         if self.env.protocol == "async":
-            history = self.controller.run_async(self.env.termination.max_rounds)
+            history = engine.run(total_updates=self.env.termination.max_rounds)
         else:
             while not self._terminated(t_start, history):
                 self._heartbeat()
-                timings = self.controller.run_round()
+                timings = engine.run(rounds=1)[0]
                 history.append(timings)
                 log.info(
                     "round %d: fed=%.3fs agg=%.4fs metrics=%s",

@@ -1,0 +1,398 @@
+"""The event-driven round engine: one arrival-driven loop for every protocol.
+
+MetisFL's core claim is that the controller *manages the execution of FL
+workflows* as a first-class citizen.  This module is where that management
+lives: instead of one hard-coded loop per protocol, a single
+:meth:`RoundEngine.run` loop consumes **typed events** and delegates every
+protocol-specific decision to the pluggable :class:`~repro.core.scheduler.
+ProtocolPolicy` hooks (``select_cohort`` / ``size_task`` /
+``should_aggregate`` / ``weighting``).  The controller shrinks to model-state
++ transport + store plumbing (``core/controller.py``); the engine owns the
+dispatch executor and the control flow.
+
+Event grammar (one loop, four workflows):
+
+* :class:`Dispatched` — a task left the controller for a learner (logged at
+  dispatch; the wire payload is the shared serialize-once broadcast).
+* :class:`UploadArrived` — a learner's ``LocalUpdate`` came off the measured
+  uplink.  Posted from executor threads via the thread-safe
+  :meth:`RoundEngine.post`; the loop ingests it (arena/store write + EWMA
+  profile update) and asks ``policy.should_aggregate``.
+* :class:`AggregateFired` — the policy said aggregate: full-cohort FedAvg
+  for round-based policies, staleness-damped community update (optionally
+  through a per-epoch secure mask session) for the continuous one.
+* :class:`Evaluated` — the post-aggregation eval fan-out reduced its
+  reports (round-based policies only).
+
+Arrival order is whatever the executor produces — the loop is the only
+consumer, so all state mutation is serialized without protocol code ever
+touching a lock.  ``tests/test_engine.py`` hammers ``post`` from 16 threads
+posting ``UploadArrived`` out of order to pin that contract.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import TYPE_CHECKING, Any
+
+from repro.core.learner import EvalReport, LocalUpdate
+from repro.core.scheduler import TrainTask
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from repro.core.controller import Controller
+
+__all__ = [
+    "RoundTimings",
+    "Dispatched",
+    "UploadArrived",
+    "AggregateFired",
+    "Evaluated",
+    "RoundEngine",
+]
+
+
+@dataclasses.dataclass
+class RoundTimings:
+    """The six per-operation wall-clock measurements of the paper's Figs 5-7."""
+
+    round_id: int = -1
+    train_dispatch_s: float = 0.0
+    train_round_s: float = 0.0
+    aggregation_s: float = 0.0
+    eval_dispatch_s: float = 0.0
+    eval_round_s: float = 0.0
+    federation_round_s: float = 0.0
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def as_row(self) -> dict:
+        """Flatten to one dict row for the CSV/JSON benchmark output."""
+        return {
+            "round": self.round_id,
+            "train_dispatch_s": self.train_dispatch_s,
+            "train_round_s": self.train_round_s,
+            "aggregation_s": self.aggregation_s,
+            "eval_dispatch_s": self.eval_dispatch_s,
+            "eval_round_s": self.eval_round_s,
+            "federation_round_s": self.federation_round_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Typed events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatched:
+    """A TrainTask left for a learner (RunTask fire-and-forget)."""
+
+    round_id: int
+    learner_id: str
+    task: TrainTask
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadArrived:
+    """A learner's completed LocalUpdate arrived off the measured uplink.
+
+    ``error`` carries a learner-side exception instead of an update; the
+    engine loop re-raises it on the caller's thread (the paper's
+    MarkTaskCompleted failure surface).
+    """
+
+    update: LocalUpdate | None
+    error: BaseException | None = None
+
+    @property
+    def learner_id(self) -> str | None:
+        """The arriving learner (None for a failed task with no update)."""
+        return self.update.learner_id if self.update is not None else None
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateFired:
+    """The policy decided to aggregate (cohort complete / every arrival)."""
+
+    round_id: int
+    n_arrived: int
+    trigger: str | None = None  # the arriving learner, for continuous re-dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Evaluated:
+    """The post-aggregation eval fan-out reduced its reports."""
+
+    round_id: int
+    metrics: dict
+
+
+@dataclasses.dataclass
+class _RoundState:
+    """Book-keeping for the in-flight round (cohort, arrivals, timings)."""
+
+    round_id: int
+    cohort: list[str]
+    timings: RoundTimings
+    t_round: float  # round start (includes cohort selection)
+    t_train: float = 0.0  # dispatch start (the T1 mark train_round_s runs from)
+    arrived: int = 0
+
+
+def reduce_eval(reports: list[EvalReport]) -> dict:
+    """Example-weighted mean of per-learner eval metrics."""
+    if not reports:
+        return {}
+    keys = reports[0].metrics.keys()
+    total = sum(r.num_examples for r in reports)
+    return {
+        k: sum(r.metrics[k] * r.num_examples for r in reports) / max(total, 1)
+        for k in keys
+    }
+
+
+class RoundEngine:
+    """One arrival-driven loop driving every federation workflow.
+
+    The engine owns the dispatch :class:`ThreadPoolExecutor` and the event
+    queue; the :class:`~repro.core.controller.Controller` owns model state,
+    transport and stores.  ``run(rounds=N)`` drives round-based policies
+    (sync / semi-sync, secure or not); ``run(total_updates=N)`` drives the
+    continuous (async) policy, secure or not — same loop, same events, the
+    policy hooks decide everything protocol-specific.
+
+    Thread contract: :meth:`post` is the only entry point for worker
+    threads; every event is *processed* on the single thread inside
+    :meth:`run`, so ingest, aggregation and round bookkeeping are serialized
+    by construction.  ``event_log`` (bounded) records events in processing
+    order for observability and tests.
+    """
+
+    def __init__(self, controller: "Controller", max_dispatch_workers: int = 32):
+        self.controller = controller
+        self._executor = ThreadPoolExecutor(max_workers=max_dispatch_workers)
+        self._events: queue.Queue = queue.Queue()
+        self.event_log: collections.deque = collections.deque(maxlen=4096)
+        self.aggregates_fired = 0  # lifetime AggregateFired count
+        self._outstanding = 0  # dispatched-but-not-arrived tasks (loop thread only)
+
+    # -- event plumbing -----------------------------------------------------
+    def post(self, event: Any) -> None:
+        """Thread-safe: enqueue an event for the engine loop (arrival order)."""
+        self._events.put(event)
+
+    def _log(self, event: Any) -> None:
+        # Processing order == log order: only the loop thread appends.
+        self.event_log.append(event)
+
+    # -- dispatch -----------------------------------------------------------
+    def _submit(self, lid: str, task: TrainTask, envelope: Any) -> None:
+        """Fire-and-forget one task: recv + fit on a worker, post the arrival."""
+        c = self.controller
+
+        def work() -> None:
+            try:
+                params = c.channel.recv(envelope)
+                update = c._learners[lid].fit(params, task)
+                self.post(UploadArrived(update=update))
+            except BaseException as exc:  # surfaced on the loop thread
+                self.post(UploadArrived(update=None, error=exc))
+
+        self._executor.submit(work)
+        # Counted only after a successful submit: a rejected submission
+        # (executor shut down) must not leave the loop waiting forever.
+        self._outstanding += 1
+
+    def _dispatch_one(self, lid: str, broadcast: Any) -> TrainTask:
+        """Size (wire-cost aware) and dispatch one learner's task."""
+        c = self.controller
+        c._learner_versions[lid] = c._model_version
+        task = c.protocol.size_task(
+            c.round_id, c._learner_profiles[lid], wire_s=c.wire_time_s(lid)
+        )
+        envelope = broadcast.to({"task": task})
+        self._submit(lid, task, envelope)
+        self._log(Dispatched(round_id=c.round_id, learner_id=lid, task=task))
+        return task
+
+    def _start_round(self) -> _RoundState:
+        """Select the cohort and fan its tasks out (paper T1-T3)."""
+        c = self.controller
+        state = _RoundState(
+            round_id=c.round_id,
+            cohort=[],
+            timings=RoundTimings(round_id=c.round_id),
+            t_round=time.perf_counter(),
+        )
+        state.cohort = c.protocol.select_cohort(
+            c.selection,
+            c.learner_ids,
+            c.round_id,
+            {lid: ln.num_examples for lid, ln in c._learners.items()},
+        )
+        if not state.cohort:
+            # An empty cohort would leave the loop waiting on arrivals that
+            # can never come — fail loudly instead (mirrors the aggregation
+            # path's empty-cohort error).
+            raise RuntimeError("no learners selected for dispatch")
+        state.t_train = time.perf_counter()
+        broadcast = c._broadcast()
+        for lid in state.cohort:
+            self._dispatch_one(lid, broadcast)
+        state.timings.train_dispatch_s = time.perf_counter() - state.t_train
+        return state
+
+    # -- evaluation ---------------------------------------------------------
+    def _evaluate(self, state: _RoundState) -> None:
+        """Synchronous EvaluateModel fan-out (paper Fig. 10, T7-T9).
+
+        Shares the post-aggregation model's single serialization with the
+        next round's train dispatch (both read the same version's broadcast).
+        """
+        c = self.controller
+        t0 = time.perf_counter()
+        broadcast = c._broadcast()
+        futures = []
+        for lid in state.cohort:
+            envelope = broadcast.to({"eval": True})
+
+            def run(lid=lid, envelope=envelope) -> EvalReport:
+                params = c.channel.recv(envelope)
+                return c._learners[lid].evaluate(params, c.round_id)
+
+            futures.append(self._executor.submit(run))
+        state.timings.eval_dispatch_s = time.perf_counter() - t0
+        reports = [f.result() for f in futures]
+        state.timings.eval_round_s = time.perf_counter() - t0
+        state.timings.metrics = reduce_eval(reports)
+        self._log(Evaluated(round_id=state.round_id, metrics=state.timings.metrics))
+
+    # -- the loop -----------------------------------------------------------
+    def run(
+        self, rounds: int | None = None, total_updates: int | None = None
+    ) -> list[RoundTimings]:
+        """Drive the federation: ``rounds=`` for round-based policies,
+        ``total_updates=`` for the continuous (async) one.
+
+        Returns one :class:`RoundTimings` per completed round / community
+        update (continuous runs may append a few extra entries: tasks still
+        in flight when the target is reached are drained and — matching the
+        paper's per-arrival semantics — still aggregated).
+        """
+        c = self.controller
+        if c.global_params is None:
+            raise RuntimeError("set_initial_model() before running rounds")
+        continuous = bool(getattr(c.protocol, "continuous", False))
+        if continuous:
+            if total_updates is None:
+                raise TypeError("continuous (async) policies need total_updates=")
+            target = int(total_updates)
+        else:
+            if rounds is None:
+                raise TypeError("round-based policies need rounds=")
+            if total_updates is not None:
+                raise TypeError("total_updates= requires a continuous (async) policy")
+            target = int(rounds)
+        if target <= 0:
+            return []
+
+        out: list[RoundTimings] = []
+        completed = 0
+        try:
+            state = self._start_round()
+            # One loop for every workflow: pop an event, mutate round state,
+            # let the policy decide what fires next.  Terminates when the
+            # target is met AND nothing is in flight or queued.
+            while (completed < target or self._outstanding > 0
+                   or not self._events.empty()):
+                event = self._events.get()
+                if isinstance(event, UploadArrived):
+                    self._log(event)
+                    self._outstanding -= 1
+                    if event.error is not None:
+                        raise event.error
+                    c.ingest(event.update)
+                    state.arrived += 1
+                    if c.protocol.should_aggregate(state.arrived, len(state.cohort)):
+                        self.post(
+                            AggregateFired(
+                                round_id=state.round_id,
+                                n_arrived=state.arrived,
+                                trigger=event.learner_id,
+                            )
+                        )
+                        if continuous:
+                            state.arrived = 0
+                elif isinstance(event, AggregateFired):
+                    self._log(event)
+                    self.aggregates_fired += 1
+                    if continuous:
+                        timings = RoundTimings(round_id=c.round_id)
+                        timings.aggregation_s = self._aggregate(state)
+                        timings.federation_round_s = timings.aggregation_s
+                        out.append(timings)
+                        c.history.append(timings)
+                        c.round_id += 1
+                        completed += 1
+                        if completed < target and event.trigger is not None:
+                            # The paper's async loop: the arriving learner
+                            # gets the fresh model at once (shared broadcast
+                            # per model version).
+                            self._dispatch_one(event.trigger, c._broadcast())
+                    else:
+                        state.timings.train_round_s = (
+                            time.perf_counter() - state.t_train
+                        )
+                        state.timings.aggregation_s = self._aggregate(state)
+                        self._evaluate(state)
+                        state.timings.federation_round_s = (
+                            time.perf_counter() - state.t_round
+                        )
+                        out.append(state.timings)
+                        c.history.append(state.timings)
+                        c.round_id += 1
+                        completed += 1
+                        if completed < target:
+                            state = self._start_round()
+                else:  # externally posted / unknown events: logged, not fatal
+                    self._log(event)
+        except BaseException:
+            self._abort()
+            raise
+        return out
+
+    def _aggregate(self, state: _RoundState) -> float:
+        """Reduce per the policy's weighting hook; returns the agg seconds.
+
+        ``"staleness"`` aggregates every valid stored model with
+        staleness-damped weights (the continuous/community semantics,
+        secure or clear); anything else is the cohort FedAvg / secure-sum
+        round reduce.
+        """
+        c = self.controller
+        if c.protocol.weighting() == "staleness":
+            return c.aggregate_community()
+        return c.aggregate_round(state.cohort)
+
+    def _abort(self) -> None:
+        """Leave the engine re-runnable after an error escapes the loop.
+
+        Blocks until every dispatched-but-unarrived task posts (exactly the
+        barrier the legacy ``wait(futures)`` error path provided), then
+        discards whatever is left in the queue — stale arrivals or pending
+        ``AggregateFired`` events must not leak into a later ``run()``'s
+        round accounting.
+        """
+        while self._outstanding > 0:
+            if isinstance(self._events.get(), UploadArrived):
+                self._outstanding -= 1
+        while not self._events.empty():
+            self._events.get_nowait()
+
+    # -- lifecycle ----------------------------------------------------------
+    def shutdown(self) -> None:
+        """Stop the dispatch executor (waits for in-flight tasks)."""
+        self._executor.shutdown(wait=True)

@@ -2,9 +2,11 @@
 
 Mirrors MetisFL's learner servicer (paper Fig. 9/10): it receives a
 ``TrainTask`` (RunTask), immediately acknowledges, trains in the background
-(the controller's executor provides the background thread), and reports
-completion with the locally trained model plus execution metadata
-(MarkTaskCompleted).  Evaluation (EvaluateModel) is a synchronous call.
+(the round engine's executor provides the background thread), and reports
+completion with the locally trained model plus execution metadata — the
+engine receives it as an ``UploadArrived`` event (the MarkTaskCompleted
+analogue; see ``core/engine.py``).  Evaluation (EvaluateModel) is a
+synchronous call.
 
 The learner owns: its private data iterator, a jit-compiled local step, and a
 local optimizer.  It never sees other learners' data or models — only packed
@@ -29,7 +31,7 @@ __all__ = ["LocalUpdate", "EvalReport", "Learner"]
 
 @dataclasses.dataclass
 class LocalUpdate:
-    """Payload of MarkTaskCompleted.
+    """Payload of MarkTaskCompleted (the engine's ``UploadArrived`` event).
 
     ``upload`` is the measured-wire fast path: when the learner holds both
     the federation's manifest and a channel handle (shipped once at
@@ -125,11 +127,7 @@ class Learner:
         self.alive = False
 
     # -- training -----------------------------------------------------------
-    def _make_step(self, prox_mu: float, global_params: Any) -> Callable:
-        loss_fn = self._loss_fn
-        if prox_mu > 0.0:
-            loss_fn = apply_fedprox(loss_fn, prox_mu, global_params)
-
+    def _build_step(self, loss_fn: Callable) -> Callable:
         opt = self._optimizer
 
         @jax.jit
@@ -138,6 +136,21 @@ class Learner:
             params, opt_state = opt.apply(params, grads, opt_state)
             return params, opt_state, loss
 
+        return step
+
+    def _make_step(self, prox_mu: float, global_params: Any) -> Callable:
+        # The prox-free step is cached across tasks: rebuilding the jitted
+        # closure per fit() would recompile every round, so the measured
+        # seconds-per-step would be compile time, not training speed — which
+        # is exactly what semi-sync task sizing consumes.  The FedProx step
+        # closes over this task's global params and cannot be reused.
+        if prox_mu > 0.0:
+            return self._build_step(
+                apply_fedprox(self._loss_fn, prox_mu, global_params)
+            )
+        step = self._step_cache.get(0.0)
+        if step is None:
+            step = self._step_cache[0.0] = self._build_step(self._loss_fn)
         return step
 
     def fit(self, params: Any, task: TrainTask) -> LocalUpdate:

@@ -1,27 +1,50 @@
-"""Federation round protocols: synchronous, semi-synchronous, asynchronous.
+"""Federation protocols as pluggable policies for the round engine.
 
 MetisFL is the only system in the paper's Table 1 supporting all three
-communication protocols.  The protocol decides (a) how many local steps each
-selected learner runs before uploading, and (b) when the controller
-aggregates:
+communication protocols.  In this reproduction a protocol is not a hard-coded
+loop: it is a **policy object** the event-driven round engine
+(``core/engine.py``) consults at four decision points:
 
-* **synchronous** — every selected learner runs the same number of local
-  epochs/steps; the controller aggregates when *all* uploads arrive
-  (paper's stress-test setting, FedAvg).
-* **semi-synchronous** (Stripelis et al. 2022b) — learners train for a fixed
-  wall-clock hyper-period; fast learners do more steps.  The controller still
-  aggregates a full cohort, but stragglers never stall the round because the
-  *time* budget, not the step budget, is fixed.
-* **asynchronous** — the controller aggregates on *every* arrival, weighting
-  by staleness (``core/aggregation.staleness_weights``); there is no round
-  barrier.
+* :meth:`ProtocolPolicy.select_cohort` — who receives a task this round;
+* :meth:`ProtocolPolicy.size_task` — how much local work each selected
+  learner is assigned (wire-cost aware for semi-sync: the hyper-period
+  budget covers *train + round-trip wire* time);
+* :meth:`ProtocolPolicy.should_aggregate` — when the engine fires an
+  aggregation (`AggregateFired`): on the full cohort for round-based
+  protocols, on **every** arrival for the asynchronous one;
+* :meth:`ProtocolPolicy.weighting` — how arena rows are weighted at the
+  reduce (plain FedAvg vs staleness-damped).
+
+The three concrete policies:
+
+* **synchronous** (:class:`SyncProtocol`) — every selected learner runs the
+  same number of local steps; aggregate when *all* uploads arrive (paper's
+  stress-test setting, FedAvg).
+* **semi-synchronous** (:class:`SemiSyncProtocol`, Stripelis et al. 2022b) —
+  learners train for a fixed wall-clock hyper-period; fast learners do more
+  steps.  With ``wire_aware=True`` (default) the per-learner step budget
+  additionally subtracts that learner's modeled round-trip wire time, so
+  bandwidth-capped federations still finish inside the hyper-period.
+* **asynchronous** (:class:`AsyncProtocol`) — the engine aggregates on
+  *every* arrival, weighting by staleness
+  (``core/aggregation.staleness_weights``); there is no round barrier.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
-__all__ = ["SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask"]
+from repro.core.selection import SelectionPolicy, select_learners
+
+__all__ = [
+    "TrainTask",
+    "LearnerProfile",
+    "ProtocolPolicy",
+    "SyncProtocol",
+    "SemiSyncProtocol",
+    "AsyncProtocol",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,71 +60,199 @@ class TrainTask:
     metadata: dict = dataclasses.field(default_factory=dict)
 
 
+class LearnerProfile(dict):
+    """Per-learner execution profile with an EWMA seconds-per-step estimate.
+
+    A plain ``dict`` (so policy code and tests read it like the legacy
+    profile: ``profile["seconds_per_step"]``, ``profile.get(...)``) whose
+    step-time entry is maintained as an exponentially weighted moving
+    average instead of the last sample, so semi-sync task sizing does not
+    thrash on noisy step timings:
+
+    ``est_new = decay * est_old + (1 - decay) * observation``
+
+    ``decay=0`` reproduces the legacy last-sample behaviour; larger decay
+    means smoother (and slower-adapting) estimates.  ``upload_bytes``
+    records the learner's most recent wire payload size, feeding the
+    per-learner round-trip wire-time estimate
+    (``Controller.wire_time_s``).
+    """
+
+    def __init__(self, decay: float = 0.5):
+        super().__init__()
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.decay = float(decay)
+        self.observations = 0
+
+    def observe_step_time(self, seconds_per_step: float) -> float:
+        """Fold one measured seconds-per-step sample into the EWMA."""
+        obs = float(seconds_per_step)
+        if self.observations == 0:
+            est = obs
+        else:
+            est = self.decay * float(self["seconds_per_step"]) + (1.0 - self.decay) * obs
+        self["seconds_per_step"] = est
+        self.observations += 1
+        return est
+
+    def observe_upload_bytes(self, nbytes: int) -> None:
+        """Record the learner's latest measured uplink payload size."""
+        self["upload_bytes"] = int(nbytes)
+
+
+class ProtocolPolicy:
+    """The pluggable policy interface the round engine drives protocols by.
+
+    The engine (``core/engine.py``) owns *one* arrival-driven loop; every
+    protocol-specific decision is delegated to these four hooks plus the
+    :attr:`continuous` flag.  Subclasses override what differs; the defaults
+    implement the round-based (synchronous-family) behaviour.
+    """
+
+    #: Round-based policies (False) barrier on a cohort and evaluate after
+    #: each aggregate; continuous policies (True) aggregate per arrival and
+    #: immediately re-dispatch the arriving learner.
+    continuous: bool = False
+
+    def select_cohort(
+        self,
+        selection: SelectionPolicy,
+        learner_ids: Sequence[str],
+        round_id: int,
+        num_examples: dict[str, int] | None = None,
+    ) -> list[str]:
+        """Pick this round's cohort (defaults to the selection policy)."""
+        return select_learners(selection, list(learner_ids), round_id, num_examples)
+
+    def size_task(
+        self, round_id: int, learner_profile: dict | None = None, wire_s: float = 0.0
+    ) -> TrainTask:
+        """Size one learner's task; ``wire_s`` is its modeled round-trip wire time."""
+        raise NotImplementedError
+
+    def should_aggregate(self, arrived: int, cohort_size: int) -> bool:
+        """True when the engine should fire an aggregation event."""
+        return arrived >= cohort_size
+
+    def weighting(self) -> str:
+        """Arena row weighting at the reduce: ``"fedavg"`` or ``"staleness"``."""
+        return "fedavg"
+
+    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+        """Legacy alias for :meth:`size_task` with no wire-time input."""
+        return self.size_task(round_id, learner_profile)
+
+
 @dataclasses.dataclass(frozen=True)
-class SyncProtocol:
+class SyncProtocol(ProtocolPolicy):
     """Synchronous rounds: same step budget for every selected learner,
     aggregate when the whole cohort has uploaded (paper's FedAvg setting)."""
 
     local_steps: int = 1
     batch_size: int = 100
     learning_rate: float = 0.01
+    prox_mu: float = 0.0
 
-    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+    def size_task(
+        self, round_id: int, learner_profile: dict | None = None, wire_s: float = 0.0
+    ) -> TrainTask:
         """Build the fixed-step TrainTask for this round."""
         return TrainTask(
             round_id=round_id,
             local_steps=self.local_steps,
             batch_size=self.batch_size,
             learning_rate=self.learning_rate,
+            prox_mu=self.prox_mu,
         )
 
 
 @dataclasses.dataclass(frozen=True)
-class SemiSyncProtocol:
+class SemiSyncProtocol(ProtocolPolicy):
     """Fixed hyper-period: per-learner step count derived from measured speed.
 
-    ``hyperperiod_s`` is the wall-clock training budget per round.  The
-    controller keeps a moving estimate of each learner's seconds-per-step
-    (from MarkTaskCompleted metadata) and assigns
-    ``steps_i = max(1, floor(hyperperiod / spstep_i))``.
+    ``hyperperiod_s`` is the wall-clock budget per round.  The controller
+    keeps an EWMA estimate of each learner's seconds-per-step
+    (:class:`LearnerProfile`) and the policy assigns
+
+    ``steps_i = max(1, floor((hyperperiod_s - wire_i) / spstep_i))``
+
+    where ``wire_i`` is learner *i*'s modeled round-trip wire time (downlink
+    broadcast + uplink upload, from the channel's bandwidth/latency model —
+    see ``Controller.wire_time_s``).  Subtracting it makes the budget cover
+    *train + wire*: under a bandwidth cap a naively sized task would finish
+    training exactly at the hyper-period and then blow the budget by the
+    upload time.  ``wire_aware=False`` keeps the legacy train-only sizing
+    (the ``benchmarks/bench_round.py --schedule`` comparison arm).
     """
 
     hyperperiod_s: float = 1.0
     batch_size: int = 100
     learning_rate: float = 0.01
     default_steps: int = 1
+    prox_mu: float = 0.0
+    wire_aware: bool = True
 
-    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
-        """Size the task from the learner's measured seconds-per-step."""
+    def size_task(
+        self, round_id: int, learner_profile: dict | None = None, wire_s: float = 0.0
+    ) -> TrainTask:
+        """Size the task from measured seconds-per-step minus wire time."""
         steps = self.default_steps
-        if learner_profile and learner_profile.get("seconds_per_step", 0) > 0:
-            steps = max(1, int(self.hyperperiod_s / learner_profile["seconds_per_step"]))
+        sps = (learner_profile or {}).get("seconds_per_step", 0)
+        if sps and sps > 0:
+            budget = self.hyperperiod_s - (wire_s if self.wire_aware else 0.0)
+            steps = max(1, int(budget / sps))
         return TrainTask(
             round_id=round_id,
             local_steps=steps,
             batch_size=self.batch_size,
             learning_rate=self.learning_rate,
-            metadata={"semi_sync": True},
+            prox_mu=self.prox_mu,
+            metadata={"semi_sync": True, "wire_s": wire_s},
         )
 
 
 @dataclasses.dataclass(frozen=True)
-class AsyncProtocol:
-    """Asynchronous protocol: no round barrier — the controller aggregates on
-    every arrival, staleness-damped by ``staleness_alpha``
-    (``core/aggregation.staleness_weights``; semantics in docs/PROTOCOLS.md)."""
+class AsyncProtocol(ProtocolPolicy):
+    """Asynchronous policy: no round barrier — the engine aggregates on every
+    arrival, staleness-damped by ``staleness_alpha``
+    (``core/aggregation.staleness_weights``; semantics in docs/PROTOCOLS.md),
+    and immediately re-dispatches the arriving learner."""
 
     local_steps: int = 1
     batch_size: int = 100
     learning_rate: float = 0.01
     staleness_alpha: float = 0.5
+    prox_mu: float = 0.0
+    continuous = True
 
-    def make_task(self, round_id: int, learner_profile: dict | None = None) -> TrainTask:
+    def select_cohort(
+        self,
+        selection: SelectionPolicy,
+        learner_ids: Sequence[str],
+        round_id: int,
+        num_examples: dict[str, int] | None = None,
+    ) -> list[str]:
+        """Every registered learner participates (no per-round cohort)."""
+        return list(learner_ids)
+
+    def should_aggregate(self, arrived: int, cohort_size: int) -> bool:
+        """Every arrival triggers a community update."""
+        return arrived >= 1
+
+    def weighting(self) -> str:
+        """Rows are example-count weights damped by staleness."""
+        return "staleness"
+
+    def size_task(
+        self, round_id: int, learner_profile: dict | None = None, wire_s: float = 0.0
+    ) -> TrainTask:
         """Build the TrainTask for the learner's next async leg."""
         return TrainTask(
             round_id=round_id,
             local_steps=self.local_steps,
             batch_size=self.batch_size,
             learning_rate=self.learning_rate,
+            prox_mu=self.prox_mu,
             metadata={"async": True},
         )

@@ -34,6 +34,7 @@ import numpy as np
 
 __all__ = [
     "PairwiseMasker",
+    "MaskSession",
     "encode_fixed",
     "decode_fixed",
     "secure_fedavg",
@@ -42,6 +43,40 @@ __all__ = [
 ]
 
 FIXED_SCALE = float(1 << 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSession:
+    """One secure-aggregation epoch: the session every mask seed derives from.
+
+    A session is keyed by ``(base_seed, epoch)`` where ``epoch`` is the
+    synchronous round id or — on the continuous (async) path — the global
+    **model version** the community update commits: every epoch gets fresh
+    one-time pads, so an upload masked in one session can never be unmasked
+    against pads from another (the plaintext analogue of rotating the CKKS
+    session keys per round).  Both the controller and the replay references
+    in ``tests/test_conformance.py`` derive seeds through this object, so
+    the key schedule has a single source of truth.
+    """
+
+    base_seed: int
+    epoch: int
+
+    @property
+    def seed(self) -> int:
+        """The session's 31-bit mask seed (an integer hash of the key pair)."""
+        mixed = (
+            (self.base_seed * 2654435761)
+            ^ (self.epoch * 2246822519)
+            ^ 0x9E3779B9
+        )
+        return mixed % (1 << 31)
+
+    def masker(self, n_participants: int) -> PairwiseMasker:
+        """The session's pairwise mask generator over ``n_participants``."""
+        return PairwiseMasker(
+            base_seed=self.seed, participants=tuple(range(n_participants))
+        )
 
 
 def _pair_seed(base_seed: int, i: int, j: int) -> int:

@@ -285,6 +285,7 @@ class ArenaStore:
         self._rows: dict[str, int] = {}
         self._valid = np.zeros((n,), bool)
         self._weights_host = np.zeros((n,), np.float32)
+        self._versions_host = np.zeros((n,), np.float32)
         self.buffer = self._zeros((n, self.padded_params), self.dtype,
                                   self.buffer_sharding)
         self.weights = jnp.zeros((n,), jnp.float32)
@@ -326,6 +327,9 @@ class ArenaStore:
         self._valid = np.concatenate([self._valid, np.zeros((pad,), bool)])
         self._weights_host = np.concatenate(
             [self._weights_host, np.zeros((pad,), np.float32)]
+        )
+        self._versions_host = np.concatenate(
+            [self._versions_host, np.zeros((pad,), np.float32)]
         )
         self.grow_events += 1
 
@@ -370,6 +374,7 @@ class ArenaStore:
             )
             self._valid[row] = True
             self._weights_host[row] = weight
+            self._versions_host[row] = version
             self.total_writes += 1
             # Cumulative decoded-row ingest bytes: reconciles against the
             # channel's uplink message count in the dispatch tests.
@@ -395,6 +400,17 @@ class ArenaStore:
         with self.lock:
             row = self._rows[learner_id]
             return float(self._weights_host[row])
+
+    def version_of(self, learner_id: str) -> float:
+        """Host-mirrored model version a learner's current upload trained from.
+
+        Mirrors the device ``versions`` vector so staleness weights can be
+        derived host-side (the secure async path needs them *before* the
+        fixed-point masking) without a device round-trip.
+        """
+        with self.lock:
+            row = self._rows[learner_id]
+            return float(self._versions_host[row])
 
     def row_view(self, learner_id: str) -> jax.Array:
         """Device view of one learner's un-padded packed buffer."""

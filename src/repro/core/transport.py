@@ -118,6 +118,10 @@ class RawUploadCodec:
         """Codec parameters a receiver needs to decode (none for raw)."""
         return {}
 
+    def wire_nbytes(self, num_elements: int) -> int:
+        """Modeled wire payload size for a buffer of ``num_elements``."""
+        return 4 * int(num_elements)
+
     def encode(self, buffer: Any) -> np.ndarray:
         """Flat ``(P,)`` numeric buffer → its f32 wire bytes (one copy)."""
         return packing.pack_row_bytes(buffer, jnp.float32)
@@ -171,6 +175,12 @@ class Int8UploadCodec:
     def wire_params(self) -> dict:
         """Codec parameters the receiver needs to derive the wire layout."""
         return {"group": self.group, "block_rows": self.block_rows}
+
+    def wire_nbytes(self, num_elements: int) -> int:
+        """Modeled wire payload size: int8 values + f32 scales."""
+        from repro.kernels import quantize as quant
+
+        return quant.wire_layout(int(num_elements), self.group, self.block_rows)[2]
 
     def encode(self, buffer: Any) -> np.ndarray:
         """Quantize a flat ``(P,)`` buffer into int8 values + f32 scales."""
@@ -353,6 +363,18 @@ class Channel:
     # -- accounting ---------------------------------------------------------
     def _wire_time(self, nbytes: int) -> float:
         return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_gbps * 1e9)
+
+    def round_trip_s(self, down_nbytes: int, up_nbytes: int) -> float:
+        """Modeled round-trip wire time for one dispatch + one upload.
+
+        The per-learner estimate the wire-cost-aware semi-sync sizing
+        consumes (``Controller.wire_time_s``): the downlink broadcast
+        envelope and the uplink codec payload each pay the channel's
+        latency plus their serialization time at the modeled bandwidth.
+        Purely virtual — it never sleeps, exactly like the per-send
+        ``ChannelStats`` accounting it mirrors.
+        """
+        return self._wire_time(int(down_nbytes)) + self._wire_time(int(up_nbytes))
 
     def _account_send(self, nbytes: int) -> None:
         with self._stats_lock:

@@ -80,6 +80,13 @@ def push_to_replicas(
             f"virtual wire {stats.upload_virtual_wire_s*1e3:.1f}ms"
         )
         assert stats.upload_messages == n_replicas
+        # per-replica round-trip estimate — the same bandwidth-model API the
+        # federation's wire-cost-aware task sizing consumes
+        rt = ch.round_trip_s(
+            stats.bytes_moved // n_replicas, stats.upload_bytes // n_replicas
+        )
+        print(f"modeled per-replica round-trip: {rt*1e3:.1f}ms "
+              f"(push down + {replica_upload} echo up)")
 
 
 def main() -> None:

@@ -332,8 +332,7 @@ def _run_sync(store_mode, secure=False, rounds=2):
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i))
-    for _ in range(rounds):
-        ctrl.run_round()
+    ctrl.engine.run(rounds=rounds)
     out = np.asarray(ctrl.global_params["w"])
     ctrl.shutdown()
     return out, ctrl
@@ -358,7 +357,7 @@ def test_controller_async_staleness_arena_matches_manual():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(2):
         ctrl.register_learner(_make_learner(i))
-    hist = ctrl.run_async(total_updates=4)
+    hist = ctrl.engine.run(total_updates=4)
     out = np.asarray(ctrl.global_params["w"])
     ctrl.shutdown()
     assert len(hist) >= 4

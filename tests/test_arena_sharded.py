@@ -58,10 +58,9 @@ _LEARNER = """
         for i in range(n_learners):
             ctrl.register_learner(make_learner(i))
         if async_updates:
-            ctrl.run_async(total_updates=async_updates)
+            ctrl.engine.run(total_updates=async_updates)
         else:
-            for _ in range(2):
-                ctrl.run_round()
+            ctrl.engine.run(rounds=2)
         out = np.asarray(ctrl.global_params["w"])
         ctrl.shutdown()
         return out, ctrl

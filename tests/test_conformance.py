@@ -1,10 +1,11 @@
 """Protocol × store × upload-codec conformance matrix.
 
-Every future transport change runs this whole grid: {sync, semi-sync, async,
-secure} × {arena, stack, sharded arena under 8 forced host devices} ×
-{raw, int8 upload codec}, each arm compared against a learner-side *replay
-reference* that re-runs the exact fit sequence outside the controller and
-aggregates it two ways:
+Every future transport or engine change runs this whole grid: {sync,
+semi-sync, async, secure, secure async} × {arena, stack, sharded arena under
+8 forced host devices} × {raw, int8 upload codec}, each arm driven through
+the event-driven round engine (``engine.run`` — the only loop there is) and
+compared against a learner-side *replay reference* that re-runs the exact
+fit sequence outside the controller and aggregates it two ways:
 
 * **exact** — the controller's own fused pipeline (``weighted_average`` /
   ``secure_fedavg`` + the fedavg server optimizer) over the replayed uploads
@@ -89,6 +90,12 @@ _CASES = {
         proto=lambda: SyncProtocol(local_steps=2, batch_size=16),
         n=3, rounds=2, updates=0, secure=True,
     ),
+    # secure + async: every community update is a per-epoch mask session
+    # keyed by the model version (single learner keeps it deterministic)
+    "secure_async": dict(
+        proto=lambda: AsyncProtocol(local_steps=2, batch_size=16),
+        n=1, rounds=0, updates=3, secure=True,
+    ),
 }
 
 
@@ -117,7 +124,11 @@ def _reference(case, agg_mode):
                 naive.naive_aggregate([u.params for u in ups], weights)
             )
         elif case["secure"]:
-            new = secure_mod.secure_fedavg(bufs, weights, base_seed=r)
+            # Per-epoch mask session: round id (sync) / model version
+            # (async) — both advance once per loop iteration here.
+            new = secure_mod.secure_fedavg(
+                bufs, weights, base_seed=secure_mod.MaskSession(0, r).seed
+            )
         elif case["updates"]:  # async, single learner: the row IS the update
             new = bufs[0]
         else:
@@ -138,10 +149,9 @@ def _federation(case, store_mode, codec):
     for i in range(case["n"]):
         ctrl.register_learner(_make_learner(i))
     if case["updates"]:
-        ctrl.run_async(total_updates=case["updates"])
+        ctrl.engine.run(total_updates=case["updates"])
     else:
-        for _ in range(case["rounds"]):
-            ctrl.run_round()
+        ctrl.engine.run(rounds=case["rounds"])
     out = np.asarray(ctrl.global_params["w"])
     stats = ctrl.channel.stats
     expected_uploads = case["n"] * case["rounds"] + case["updates"]
@@ -247,6 +257,9 @@ def test_conformance_matrix_sharded_arena():
                       1, 0, 3, False),
             "secure": (lambda: SyncProtocol(local_steps=2, batch_size=16),
                        3, 2, 0, True),
+            "secure_async": (lambda: AsyncProtocol(local_steps=2,
+                                                   batch_size=16),
+                             1, 0, 3, True),
         }
 
         def reference(name):
@@ -264,7 +277,8 @@ def test_conformance_matrix_sharded_arena():
                 ws = [float(u.num_examples) for u in ups]
                 bufs = [packing.pack_numeric(u.params) for u in ups]
                 if secure:
-                    new = secure_mod.secure_fedavg(bufs, ws, base_seed=r)
+                    new = secure_mod.secure_fedavg(
+                        bufs, ws, base_seed=secure_mod.MaskSession(0, r).seed)
                 elif updates:
                     new = bufs[0]
                 else:
@@ -286,10 +300,9 @@ def test_conformance_matrix_sharded_arena():
                 for i in range(n):
                     ctrl.register_learner(make_learner(i))
                 if updates:
-                    ctrl.run_async(total_updates=updates)
+                    ctrl.engine.run(total_updates=updates)
                 else:
-                    for _ in range(rounds):
-                        ctrl.run_round()
+                    ctrl.engine.run(rounds=rounds)
                 got = np.asarray(ctrl.global_params["w"])
                 stats = ctrl.channel.stats
                 expected = n * rounds + updates

@@ -127,7 +127,7 @@ def test_sync_round_reports_all_six_timings():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i))
-    t = ctrl.run_round()
+    t = ctrl.engine.run(rounds=1)[0]
     ctrl.shutdown()
     row = t.as_row()
     for key in ("train_dispatch_s", "train_round_s", "aggregation_s",
@@ -143,7 +143,7 @@ def test_async_protocol_produces_updates_and_uses_staleness():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i, delay=0.002 * i))
-    hist = ctrl.run_async(total_updates=9)
+    hist = ctrl.engine.run(total_updates=9)
     ctrl.shutdown()
     assert len(hist) >= 9
     assert ctrl._model_version >= 9
@@ -157,7 +157,7 @@ def test_secure_controller_round_matches_plain():
         ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
         for i in range(3):
             ctrl.register_learner(_make_learner(i))
-        ctrl.run_round()
+        ctrl.engine.run(rounds=1)
         out = np.asarray(ctrl.global_params["w"])
         ctrl.shutdown()
         return out

@@ -183,8 +183,7 @@ def test_sync_rounds_serialize_once_per_version_and_never_flatten_uploads():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(n_learners):
         ctrl.register_learner(_make_learner(i))
-    for _ in range(rounds):
-        ctrl.run_round()
+    ctrl.engine.run(rounds=rounds)
     stats = ctrl.channel.stats
     ctrl.shutdown()
 
@@ -205,7 +204,7 @@ def test_async_shares_serialization_between_community_updates():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i))
-    hist = ctrl.run_async(total_updates=9)
+    hist = ctrl.engine.run(total_updates=9)
     stats = ctrl.channel.stats
     ctrl.shutdown()
     assert len(hist) >= 9
@@ -223,7 +222,7 @@ def test_flat_uploads_disabled_counts_fallback_packs():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i))
-    ctrl.run_round()
+    ctrl.engine.run(rounds=1)
     ctrl.shutdown()
     assert ctrl.upload_fallback_packs == 3  # controller packed every upload
 
@@ -236,10 +235,9 @@ def _global_after(protocol_fn, *, flat, secure=False, store_mode="arena",
     for i in range(n):
         ctrl.register_learner(_make_learner(i))
     if async_updates:
-        ctrl.run_async(total_updates=async_updates)
+        ctrl.engine.run(total_updates=async_updates)
     else:
-        for _ in range(rounds):
-            ctrl.run_round()
+        ctrl.engine.run(rounds=rounds)
     out = np.asarray(ctrl.global_params["w"])
     fallbacks = ctrl.upload_fallback_packs
     ctrl.shutdown()
@@ -295,9 +293,9 @@ def test_late_joining_learner_gets_manifest():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(2):
         ctrl.register_learner(_make_learner(i))
-    ctrl.run_round()
+    ctrl.engine.run(rounds=1)
     ctrl.register_learner(_make_learner(2))  # joins mid-federation
-    ctrl.run_round()
+    ctrl.engine.run(rounds=1)
     ctrl.shutdown()
     assert ctrl.upload_fallback_packs == 0
     assert ctrl.arena.total_writes == 2 + 3
@@ -340,8 +338,7 @@ def test_uplink_reconciles_with_round_counts(proto_fn, secure, flat):
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(n):
         ctrl.register_learner(_make_learner(i))
-    for _ in range(rounds):
-        ctrl.run_round()
+    ctrl.engine.run(rounds=rounds)
     ctrl.shutdown()
     stats = ctrl.channel.stats
 
@@ -369,7 +366,7 @@ def test_uplink_reconciles_async_executor():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(3):
         ctrl.register_learner(_make_learner(i))
-    hist = ctrl.run_async(total_updates=9)
+    hist = ctrl.engine.run(total_updates=9)
     ctrl.shutdown()  # barrier: in-flight completions drain before we count
     stats = ctrl.channel.stats
 
@@ -392,7 +389,7 @@ def test_uplink_reconciles_stack_store():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     for i in range(2):
         ctrl.register_learner(_make_learner(i))
-    ctrl.run_round()
+    ctrl.engine.run(rounds=1)
     ctrl.shutdown()
     stats = ctrl.channel.stats
     row_bytes = 4 * int(ctrl.global_buffer.shape[0])
@@ -423,7 +420,7 @@ def test_empty_cohort_still_raises():
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
     ctrl.register_learner(_make_learner(0))
     with pytest.raises(RuntimeError, match="no local models"):
-        ctrl._aggregate(["l0"])  # nothing uploaded yet
+        ctrl.aggregate_round(["l0"])  # nothing uploaded yet
     ctrl.shutdown()
 
 
@@ -474,9 +471,9 @@ def test_flat_upload_parity_sharded_arena():
                 for i in range(n):
                     ctrl.register_learner(make_learner(i))
                 if async_updates:
-                    ctrl.run_async(total_updates=async_updates)
+                    ctrl.engine.run(total_updates=async_updates)
                 else:
-                    ctrl.run_round(); ctrl.run_round()
+                    ctrl.engine.run(rounds=2)
                 assert (ctrl.upload_fallback_packs == 0) == flat, flat
                 outs[flat] = np.asarray(ctrl.global_params["w"])
                 ctrl.shutdown()
