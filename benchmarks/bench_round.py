@@ -115,8 +115,9 @@ def run_dispatch(learner_counts=(8, 32, 128), p=1 << 23, rounds=3,
         one_dispatch()  # warmup: compiles recv/arena-write programs
         dispatch = sorted(one_dispatch() for _ in range(rounds))
         dispatch_s = dispatch[len(dispatch) // 2]
-        serialized = ctrl.channel.stats.serializations
-        assert ctrl.upload_fallback_packs == 0, "flat upload path not engaged"
+        serialized = ctrl.telemetry.value("channel.serializations")
+        assert ctrl.telemetry.value("controller.upload_fallback_packs") == 0, \
+            "flat upload path not engaged"
         ctrl.shutdown()
 
         persend_s = None
@@ -146,6 +147,74 @@ def run_dispatch(learner_counts=(8, 32, 128), p=1 << 23, rounds=3,
     print(f"dispatch flatness: {flat:.2f}x from N={learner_counts[0]} to "
           f"N={learner_counts[-1]} ({note})", flush=True)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# flight-recorder overhead arm
+# ---------------------------------------------------------------------------
+
+
+def run_journal(p=1 << 20, n=8, rounds=12):
+    """Flight-recorder overhead: journaled rounds vs recording disabled.
+
+    Two identical null-learner federations run the same engine rounds; the
+    baseline disables recording entirely (``journal_capacity=0`` — the
+    ``record()`` early-exit), the journal arm keeps the default ring *and*
+    streams JSONL to a file sink (the worst case: serialization work plus a
+    background flusher competing for the GIL).  Reported overhead is the
+    median per-round delta; the acceptance target is < 2%.  The journal
+    arm's row also embeds the run's telemetry snapshot and journal/replay
+    accounting — the artifact shape the nightly CI archives.
+    """
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.core import Controller, SyncProtocol
+
+    def build(journal_capacity, journal_sink):
+        ctrl = Controller(protocol=SyncProtocol(local_steps=1, batch_size=1),
+                          arena_n_max=n, journal_capacity=journal_capacity,
+                          journal_sink=journal_sink)
+        ctrl.set_initial_model({"w": jnp.zeros((p,), jnp.float32)})
+        upload = jnp.zeros((ctrl.arena.padded_params,), jnp.float32)
+        for i in range(n):
+            ctrl.register_learner(_make_null_learner(f"l{i}", upload))
+        return ctrl
+
+    def median_round_s(ctrl):
+        ctrl.engine.run(rounds=2)  # warmup: compiles recv/arena-write/agg
+        t = sorted(r.federation_round_s for r in ctrl.engine.run(rounds=rounds))
+        return t[len(t) // 2]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = build(0, None)
+        base_s = median_round_s(base)
+        assert len(base.journal.records()) == 0, "baseline journal not disabled"
+        base.shutdown()
+
+        sink = os.path.join(tmp, "journal.jsonl")
+        ctrl = build(4096, sink)
+        journal_s = median_round_s(ctrl)
+        snapshot = ctrl.telemetry.snapshot()
+        summaries = ctrl.journal.replay()
+        cursor = ctrl.journal.cursor
+        ctrl.shutdown()
+        sink_records = len(ctrl.journal.read_jsonl(sink))
+
+    overhead_pct = 100.0 * (journal_s - base_s) / max(base_s, 1e-12)
+    row = {"bench": "journal", "params": p, "learners": n, "rounds": rounds,
+           "baseline_round_s": base_s, "journal_round_s": journal_s,
+           "overhead_pct": overhead_pct,
+           "journal_records": cursor, "sink_records": sink_records,
+           "rounds_replayed": len([s for s in summaries if s.aggregated]),
+           "telemetry": snapshot}
+    print(f"journal,P={p},N={n},base={base_s*1e3:.2f}ms,"
+          f"journaled={journal_s*1e3:.2f}ms,overhead={overhead_pct:+.2f}%,"
+          f"records={cursor},sink={sink_records}", flush=True)
+    assert sink_records == cursor, "flush-on-stop lost records"
+    return [row]
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +294,8 @@ def main(argv=None):
                     help="train-dispatch scaling vs N (serialize-once claim)")
     ap.add_argument("--schedule", action="store_true",
                     help="bandwidth-capped semi-sync sizing: wire-aware vs naive")
+    ap.add_argument("--journal", action="store_true",
+                    help="flight-recorder overhead: journaled vs disabled")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -236,6 +307,11 @@ def main(argv=None):
             rows = run_dispatch(learner_counts=(4, 8, 16), p=1 << 16, rounds=1)
         else:
             rows = run_dispatch()
+    elif args.journal:
+        if args.smoke:
+            rows = run_journal(p=1 << 16, n=4, rounds=6)
+        else:
+            rows = run_journal()
     elif args.schedule:
         if args.smoke:
             rows = run_schedule(p=1 << 16, n=4, bandwidth_gbps=0.02)

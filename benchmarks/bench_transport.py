@@ -154,8 +154,15 @@ def run_upload(sizes=(2**23,), iters=2):
                 amax = float(np.max(np.abs(np.asarray(buf))))
                 assert float(np.max(np.abs(got - np.asarray(buf)))) <= amax / 127
 
+            # per-upload wire bytes off the unified telemetry surface (the
+            # same counters the controller registry exposes; the honesty
+            # check below keeps them consistent with the envelope itself)
+            tm = ch.telemetry
+            per_upload = (tm.value("channel.upload_bytes")
+                          // tm.value("channel.upload_messages"))
+            assert per_upload == int(env.payload.nbytes)
             arms[codec] = (bench(roundtrip, warmup=1, iters=iters, block=False),
-                           int(env.payload.nbytes))
+                           int(per_upload))
         t_raw, b_raw = arms["raw"]
         t_int8, b_int8 = arms["int8"]
         saving = b_raw / b_int8

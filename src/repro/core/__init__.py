@@ -34,6 +34,9 @@ from repro.core.aggregation import (
     trimmed_mean,
     weighted_average,
 )
+from repro.core.config import FederationConfig
+from repro.core.journal import EventJournal, RoundSummary
+from repro.core.metrics import Counter, Gauge, Histogram, Telemetry
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
 from repro.core.scheduler import (
     AsyncProtocol,
@@ -49,6 +52,7 @@ from repro.core.learner import EvalReport, Learner, LocalUpdate
 from repro.core.engine import (
     AggregateFired,
     Dispatched,
+    EngineStopped,
     Evaluated,
     RoundEngine,
     RoundTimings,
@@ -83,7 +87,10 @@ __all__ = [
     "Learner", "LocalUpdate", "EvalReport",
     "Controller", "RoundTimings", "RoundEngine",
     "Dispatched", "UploadArrived", "AggregateFired", "Evaluated",
-    "Driver", "FederationEnv", "TerminationCriteria",
+    "EngineStopped",
+    "Telemetry", "Counter", "Gauge", "Histogram",
+    "EventJournal", "RoundSummary",
+    "Driver", "FederationEnv", "TerminationCriteria", "FederationConfig",
     "Broadcast", "Channel", "ChannelStats", "Envelope",
     "UploadEnvelope", "RawUploadCodec", "Int8UploadCodec", "get_upload_codec",
 ]

@@ -1,0 +1,143 @@
+"""Typed federation configuration: the controller/transport knob surface.
+
+The controller grew organically — store mode, arena sharding, upload codec,
+wire-aware sizing, EWMA decay, journal and checkpoint knobs all arrived as
+flat keyword arguments scattered over ``Controller`` and ``FederationEnv``.
+:class:`FederationConfig` collapses that sprawl into one frozen, validated
+dataclass:
+
+* every knob is declared once, with its default and its validity range
+  (``__post_init__`` rejects bad values at construction, not three layers
+  down inside the engine);
+* :meth:`FederationConfig.from_kwargs` builds a config from loose keyword
+  arguments and rejects unknown keys by name — the typo-proof entry point
+  for YAML/CLI front-ends;
+* ``FederationEnv(config=...)`` (``core/driver.py``) is the documented way
+  to configure a federation; the legacy flat fields remain as aliases that
+  populate (or are populated from) the config.
+
+The training-loop knobs (protocol, steps, batch size, learning rates,
+termination) stay on :class:`~repro.core.driver.FederationEnv` — they
+describe the *workflow*; this config describes the *machinery* underneath.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = ["FederationConfig"]
+
+_STORE_MODES = ("auto", "arena", "stack")
+_UPLOAD_CODECS = ("raw", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationConfig:
+    """The controller-machinery knobs, typed and validated.
+
+    Parameters
+    ----------
+    store_mode:
+        ``"auto"`` (default) picks the legacy hash-map store when its
+        exclusive features (lineage > 1, byte-capacity eviction) are
+        configured and the device-resident arena otherwise; ``"arena"`` /
+        ``"stack"`` force a backing.
+    arena_shards:
+        0 = single-device arena; N > 0 column-shards over an N-device mesh;
+        -1 shards over every visible device.
+    upload_codec:
+        Uplink wire format: ``"raw"`` (bit-transparent f32) or ``"int8"``
+        (blockwise quantization).
+    flat_uploads:
+        Ship the wire manifest at registration so uploads arrive as packed
+        flat buffers (the fast path); False keeps pack-on-arrival parity.
+    wire_aware:
+        Semi-sync only: subtract modeled round-trip wire time from the
+        hyper-period step budget.
+    profile_decay:
+        EWMA decay for the per-learner seconds-per-step estimate, in
+        ``[0, 1)``; 0 reproduces last-sample behaviour.
+    prox_mu:
+        FedProx proximal coefficient (>= 0; 0 disables the proximal term).
+    checkpoint_every / checkpoint_dir:
+        Crash-consistency cadence: every k completed rounds the engine
+        persists the federation state into ``checkpoint_dir``
+        (``Controller.save_checkpoint``); both must be set to take effect.
+    journal_sink / journal_capacity:
+        The engine flight recorder (``core/journal.EventJournal``): an
+        optional JSONL sink (path or file object) and the in-memory ring
+        bound (0 disables recording).
+    """
+
+    store_mode: str = "auto"
+    arena_shards: int = 0
+    upload_codec: str = "raw"
+    flat_uploads: bool = True
+    wire_aware: bool = True
+    profile_decay: float = 0.5
+    prox_mu: float = 0.0
+    checkpoint_every: int | None = None
+    checkpoint_dir: str | None = None
+    journal_sink: Any = None
+    journal_capacity: int = 4096
+
+    def __post_init__(self) -> None:
+        """Validate every knob at construction time."""
+        if self.store_mode not in _STORE_MODES:
+            raise ValueError(
+                f"store_mode must be one of {_STORE_MODES}, "
+                f"got {self.store_mode!r}"
+            )
+        if not isinstance(self.arena_shards, int) or self.arena_shards < -1:
+            raise ValueError(
+                f"arena_shards must be an int >= -1, got {self.arena_shards!r}"
+            )
+        if self.arena_shards and self.store_mode == "stack":
+            raise ValueError(
+                "arena_shards requires an arena store; it cannot combine "
+                "with store_mode='stack'"
+            )
+        if (
+            isinstance(self.upload_codec, str)
+            and self.upload_codec not in _UPLOAD_CODECS
+        ):
+            raise ValueError(
+                f"upload_codec must be one of {_UPLOAD_CODECS} (or a codec "
+                f"object), got {self.upload_codec!r}"
+            )
+        if not 0.0 <= float(self.profile_decay) < 1.0:
+            raise ValueError(
+                f"profile_decay must be in [0, 1), got {self.profile_decay!r}"
+            )
+        if float(self.prox_mu) < 0.0:
+            raise ValueError(f"prox_mu must be >= 0, got {self.prox_mu!r}")
+        if self.checkpoint_every is not None and int(self.checkpoint_every) < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1 (or None), "
+                f"got {self.checkpoint_every!r}"
+            )
+        if int(self.journal_capacity) < 0:
+            raise ValueError(
+                f"journal_capacity must be >= 0, got {self.journal_capacity!r}"
+            )
+
+    @classmethod
+    def from_kwargs(cls, **kwargs: Any) -> "FederationConfig":
+        """Build a config from loose keyword arguments, typo-proof.
+
+        Unknown keys raise ``TypeError`` naming the valid fields — the
+        entry point for YAML/CLI front-ends that collect knobs as dicts.
+        """
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(kwargs) - known)
+        if unknown:
+            raise TypeError(
+                f"unknown FederationConfig field(s) {unknown}; "
+                f"valid fields: {sorted(known)}"
+            )
+        return cls(**kwargs)
+
+    def replace(self, **changes: Any) -> "FederationConfig":
+        """A copy with the given fields changed (re-validated)."""
+        return dataclasses.replace(self, **changes)

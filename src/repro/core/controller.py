@@ -48,7 +48,9 @@ import jax.numpy as jnp
 
 from repro.core import aggregation, packing
 from repro.core.engine import RoundEngine, RoundTimings
+from repro.core.journal import EventJournal, jsonable
 from repro.core.learner import Learner, LocalUpdate
+from repro.core.metrics import Telemetry
 from repro.core.scheduler import LearnerProfile, ProtocolPolicy, SyncProtocol
 from repro.core.selection import SelectionPolicy
 from repro.core.server_opt import ServerOptimizer, make_server_optimizer
@@ -126,6 +128,29 @@ class Controller:
         EWMA decay for the per-learner seconds-per-step estimate
         (``core/scheduler.LearnerProfile``); 0 reproduces the legacy
         last-sample behaviour.
+    journal / journal_sink / journal_capacity:
+        The engine's flight recorder (``core/journal.EventJournal``).  Pass
+        a pre-built journal (tests inject a deterministic clock) or let the
+        controller build one: ``journal_sink`` optionally persists records
+        as JSONL (path or file object; written off the engine loop thread by
+        a background flusher) and ``journal_capacity`` bounds the in-memory
+        ring (0 disables recording).
+    checkpoint_every / checkpoint_dir:
+        Crash-consistency: every ``checkpoint_every`` completed rounds the
+        engine calls :meth:`save_checkpoint` into ``checkpoint_dir`` —
+        global model + version + learner profiles + store state + journal
+        cursor.  :meth:`restore` on a freshly constructed controller (same
+        config, learners registered) resumes mid-workflow bit-identically.
+        Both default to off; ``engine.run(checkpoint_every=..., ...)``
+        overrides per run.
+
+    All wire/store/dispatch counters live behind one
+    :class:`~repro.core.metrics.Telemetry` registry at
+    :attr:`Controller.telemetry` (``telemetry.value(name)`` /
+    ``telemetry.snapshot()``); the legacy attributes
+    (``dispatch_serializations``, ``upload_fallback_packs``,
+    ``channel.stats.*``, ``arena.bytes_ingested``...) remain as deprecated
+    read shims.  Names: ``docs/OBSERVABILITY.md``.
     """
 
     def __init__(
@@ -148,6 +173,11 @@ class Controller:
         flat_uploads: bool = True,
         upload_codec: Any = None,
         profile_decay: float = 0.5,
+        journal: EventJournal | None = None,
+        journal_sink: Any = None,
+        journal_capacity: int = 4096,
+        checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -185,9 +215,16 @@ class Controller:
         self.channel = channel or Channel()
         if upload_codec is not None:
             self.channel.upload_codec = get_upload_codec(upload_codec)
+        # The unified observability surface: the controller adopts its
+        # channel's registry, so every channel.* counter and every store/
+        # controller instrument is reachable through this one handle.
+        self.telemetry: Telemetry = self.channel.telemetry
+        self.store.bind_telemetry(self.telemetry)
         self.secure = secure
         self.secure_seed = secure_seed
         self.profile_decay = profile_decay
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_dir = checkpoint_dir
 
         self._learners: dict[str, Learner] = {}
         self._learner_profiles: dict[str, LearnerProfile] = {}
@@ -209,11 +246,36 @@ class Controller:
         # perf counters asserted by tests/test_dispatch.py: actual global-
         # model serializations triggered by dispatch, and the number of
         # uploads the controller had to flatten itself (0 on the fast path)
-        self.dispatch_serializations = 0
-        self.upload_fallback_packs = 0
+        self._c_dispatch_ser = self.telemetry.counter(
+            "controller.dispatch_serializations"
+        )
+        self._c_fallback = self.telemetry.counter(
+            "controller.upload_fallback_packs"
+        )
+        self._g_version = self.telemetry.gauge("controller.model_version")
         # The round engine owns the executor and the event loop; the
-        # controller is its plumbing surface.
-        self.engine = RoundEngine(self, max_dispatch_workers=max_dispatch_workers)
+        # controller is its plumbing surface.  The journal is the engine's
+        # flight recorder (an injected one wins over the sink/capacity knobs).
+        if journal is None:
+            journal = EventJournal(capacity=journal_capacity, sink=journal_sink)
+        self.engine = RoundEngine(
+            self, max_dispatch_workers=max_dispatch_workers, journal=journal
+        )
+
+    @property
+    def dispatch_serializations(self) -> int:
+        """Deprecated shim for ``telemetry.value('controller.dispatch_serializations')``."""
+        return self._c_dispatch_ser.value
+
+    @property
+    def upload_fallback_packs(self) -> int:
+        """Deprecated shim for ``telemetry.value('controller.upload_fallback_packs')``."""
+        return self._c_fallback.value
+
+    @property
+    def journal(self) -> EventJournal:
+        """The engine's flight recorder (``core/journal.EventJournal``)."""
+        return self.engine.journal
 
     # ------------------------------------------------------------------ init
     def set_initial_model(self, params: Any) -> None:
@@ -237,7 +299,13 @@ class Controller:
                 row_align=self._arena_row_align,
                 mesh=self.arena_mesh,
                 axes=self.arena_axes,
+                telemetry=self.telemetry,
             )
+            # Deterministic row order: rows follow *registration* order, not
+            # first-upload arrival order, so arena aggregation order — and
+            # with it the kill-and-resume parity contract — is reproducible.
+            for lid in self._learners:
+                self.arena.ensure_row(lid)
             if self.arena.sharded:
                 # Per-shard masked reductions over the column-sharded arena
                 # (zero collectives; numerically identical to single-device).
@@ -275,6 +343,8 @@ class Controller:
             decay=self.profile_decay
         )
         self._learner_versions[learner.learner_id] = 0
+        if self.arena is not None:
+            self.arena.ensure_row(learner.learner_id)
         self._ship_manifest(learner)
 
     @property
@@ -301,7 +371,7 @@ class Controller:
                     buffer=self.global_buffer,
                     manifest=self.manifest,
                 )
-                self.dispatch_serializations += 1
+                self._c_dispatch_ser.add(1)
                 self._wire_cache = (key, bc)
             return self._wire_cache[1]
 
@@ -358,8 +428,7 @@ class Controller:
             return self.channel.recv_upload(update.upload)
         buffer = update.buffer
         if buffer is None:
-            with self._store_lock:  # ingest may be probed from test threads
-                self.upload_fallback_packs += 1
+            self._c_fallback.add(1)
             buffer = packing.pack_numeric(update.params, pad_to=pad_to)
         envelope = self.channel.upload(
             buffer, metadata={"learner_id": update.learner_id,
@@ -422,6 +491,7 @@ class Controller:
         self.global_buffer = new_buffer
         self.global_params = packing.unpack_numeric(new_buffer, self.manifest)
         self._model_version += 1
+        self._g_version.set(self._model_version)
 
     def _mask_session_seed(self, epoch: int) -> int:
         """The per-epoch secure mask session (round id / model version key)."""
@@ -598,6 +668,164 @@ class Controller:
             base_seed=self._mask_session_seed(self._model_version),
             out_sharding=arena.row_sharding,
         )[: arena.num_params]
+
+    # ------------------------------------------------------------ checkpoint
+    def save_checkpoint(self, directory: str | None = None,
+                        step: int | None = None) -> str:
+        """Persist the full federation state for crash-consistent resume.
+
+        One ``.npz`` via ``repro.checkpoint``: the global model (packed
+        buffer + manifest), server-optimizer state, the store contents
+        (arena arrays or stack records), and a JSON meta block carrying the
+        round/version counters, per-learner versions and EWMA profiles, the
+        journal cursor, and a telemetry snapshot.  The journal's file sink
+        is flushed first, so the JSONL on disk covers everything up to the
+        checkpoint.  Called by ``engine.run(checkpoint_every=k)`` at round
+        boundaries; ``directory`` defaults to :attr:`checkpoint_dir`,
+        ``step`` to the current :attr:`round_id`.  Returns the file path.
+        """
+        from repro.checkpoint import checkpoint as ckpt
+
+        directory = directory if directory is not None else self.checkpoint_dir
+        if directory is None:
+            raise ValueError("save_checkpoint needs a directory "
+                             "(or Controller(checkpoint_dir=...))")
+        if self.global_params is None:
+            raise RuntimeError("set_initial_model() before save_checkpoint()")
+        self.journal.flush()
+        step = self.round_id if step is None else int(step)
+        leaves, _ = jax.tree_util.tree_flatten(self._server_state)
+        extras: dict[str, Any] = {
+            f"server_state_{i}": leaf for i, leaf in enumerate(leaves)
+        }
+        meta: dict[str, Any] = {
+            "round_id": int(self.round_id),
+            "model_version": int(self._model_version),
+            "learner_versions": {
+                k: int(v) for k, v in self._learner_versions.items()
+            },
+            "aggregates_fired": int(self.engine.aggregates_fired),
+            "profiles": {
+                lid: {
+                    "decay": prof.decay,
+                    "observations": prof.observations,
+                    "data": jsonable(dict(prof)),
+                }
+                for lid, prof in self._learner_profiles.items()
+            },
+            "journal_cursor": int(self.journal.cursor),
+            "protocol": type(self.protocol).__name__,
+            "store_mode": self.store_mode,
+            "secure": bool(self.secure),
+            "telemetry": self.telemetry.snapshot(),
+        }
+        if self.arena is not None:
+            st = self.arena.export_state()
+            extras["arena_buffer"] = st["buffer"]
+            extras["arena_weights"] = st["weights"]
+            extras["arena_versions"] = st["versions"]
+            extras["arena_valid"] = st["valid"]
+            meta["arena_rows"] = {k: int(v) for k, v in st["rows"].items()}
+        elif self.store_mode == "stack":
+            records = self.store.export_records()
+            meta["stack_records"] = [
+                {
+                    "learner_id": rec.learner_id,
+                    "round_id": int(rec.round_id),
+                    "num_examples": int(rec.num_examples),
+                    "metadata": jsonable(rec.metadata),
+                }
+                for rec in records
+            ]
+            for j, rec in enumerate(records):
+                extras[f"stackbuf_{j}"] = rec.buffer
+        return ckpt.save_checkpoint(
+            directory, step, self.global_params,
+            extra_arrays=extras, metadata=meta,
+        )
+
+    def restore(self, directory: str | None = None,
+                step: int | None = None) -> dict:
+        """Resume from a checkpoint written by :meth:`save_checkpoint`.
+
+        Call on a freshly constructed controller with the *same*
+        configuration (protocol, store mode, secure flag — validated
+        against the checkpoint) and the same learners already registered.
+        Restores the global model, server-optimizer state, round/version
+        counters, learner profiles, store contents and the journal cursor;
+        the next ``engine.run`` continues the interrupted workflow and —
+        at matching data/batch schedules — produces bit-identical global
+        models (``tests/test_checkpoint_resume.py``).  ``step=None`` picks
+        the latest checkpoint.  Returns the checkpoint's meta block.
+        """
+        from repro.checkpoint import checkpoint as ckpt
+
+        directory = directory if directory is not None else self.checkpoint_dir
+        if directory is None:
+            raise ValueError("restore needs a directory "
+                             "(or Controller(checkpoint_dir=...))")
+        params, extras, meta = ckpt.restore_checkpoint(directory, step)
+        for key, mine in (
+            ("protocol", type(self.protocol).__name__),
+            ("store_mode", self.store_mode),
+            ("secure", bool(self.secure)),
+        ):
+            if key in meta and meta[key] != mine:
+                raise ValueError(
+                    f"checkpoint was written with {key}={meta[key]!r}; "
+                    f"this controller has {key}={mine!r}"
+                )
+        self.set_initial_model(params)
+        # Server-optimizer state: graft the saved leaves onto the structure
+        # of the freshly initialized state (same optimizer config ⇒ same
+        # treedef), preserving python-scalar leaves as their native type.
+        fresh_leaves, treedef = jax.tree_util.tree_flatten(self._server_state)
+        restored_leaves = []
+        for i, fresh in enumerate(fresh_leaves):
+            saved = extras[f"server_state_{i}"]
+            if isinstance(fresh, (bool, int, float)) and not hasattr(
+                fresh, "dtype"
+            ):
+                restored_leaves.append(type(fresh)(saved.item()))
+            else:
+                restored_leaves.append(jnp.asarray(saved))
+        self._server_state = jax.tree_util.tree_unflatten(
+            treedef, restored_leaves
+        )
+        self.round_id = int(meta["round_id"])
+        self._model_version = int(meta["model_version"])
+        self._g_version.set(self._model_version)
+        self._learner_versions.update(
+            {k: int(v) for k, v in meta.get("learner_versions", {}).items()}
+        )
+        self.engine.aggregates_fired = int(meta.get("aggregates_fired", 0))
+        for lid, saved_prof in meta.get("profiles", {}).items():
+            prof = LearnerProfile(decay=float(saved_prof["decay"]))
+            prof.observations = int(saved_prof["observations"])
+            prof.update(saved_prof.get("data", {}))
+            self._learner_profiles[lid] = prof
+        if self.arena is not None and "arena_rows" in meta:
+            self.arena.restore_state(
+                buffer=extras["arena_buffer"],
+                weights=extras["arena_weights"],
+                versions=extras["arena_versions"],
+                valid=extras["arena_valid"],
+                rows=meta["arena_rows"],
+            )
+        elif self.store_mode == "stack" and "stack_records" in meta:
+            self.store.restore_records([
+                ModelRecord(
+                    learner_id=rec["learner_id"],
+                    round_id=int(rec["round_id"]),
+                    buffer=jnp.asarray(extras[f"stackbuf_{j}"]),
+                    num_examples=int(rec["num_examples"]),
+                    metadata=dict(rec.get("metadata", {})),
+                )
+                for j, rec in enumerate(meta["stack_records"])
+            ])
+        self.invalidate_wire_cache()
+        self.journal.seek(int(meta.get("journal_cursor", 0)))
+        return meta
 
     # -------------------------------------------------------------- lifecycle
     def shutdown(self) -> None:

@@ -13,6 +13,7 @@ import logging
 import time
 from typing import Any, Sequence
 
+from repro.core.config import FederationConfig
 from repro.core.controller import Controller
 from repro.core.engine import RoundTimings
 from repro.core.learner import Learner
@@ -40,7 +41,18 @@ class TerminationCriteria:
 
 @dataclasses.dataclass(frozen=True)
 class FederationEnv:
-    """The YAML-equivalent federated-environment description."""
+    """The YAML-equivalent federated-environment description.
+
+    The workflow knobs (protocol, steps, batch size, learning rates,
+    termination) live here as flat fields.  The controller-machinery knobs
+    (store mode, arena sharding, upload codec, journal, checkpointing...)
+    are collected in one validated
+    :class:`~repro.core.config.FederationConfig` at :attr:`config` — the
+    documented entry point is ``FederationEnv(config=FederationConfig(...))``.
+    The legacy flat machinery fields (``store_mode=``, ``upload_codec=``...)
+    remain as aliases: when no ``config`` is passed they populate one; when
+    a ``config`` is passed it wins and the flat fields mirror its values.
+    """
 
     protocol: str = "sync"  # sync | semi_sync | async
     local_steps: int = 1
@@ -83,6 +95,33 @@ class FederationEnv:
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
     termination: TerminationCriteria = TerminationCriteria()
+    # The typed machinery-knob surface (core/config.FederationConfig).
+    # None (default): built from the flat alias fields above.  When given,
+    # the config is authoritative and the aliases mirror it.
+    config: FederationConfig | None = None
+
+    def __post_init__(self) -> None:
+        """Reconcile the typed config with the flat alias fields."""
+        if self.config is None:
+            object.__setattr__(
+                self,
+                "config",
+                FederationConfig(
+                    store_mode=self.store_mode,
+                    arena_shards=self.arena_shards,
+                    upload_codec=self.upload_codec,
+                    flat_uploads=self.flat_uploads,
+                    wire_aware=self.wire_aware,
+                    profile_decay=self.profile_decay,
+                    prox_mu=self.prox_mu,
+                ),
+            )
+        else:
+            for field in (
+                "store_mode", "arena_shards", "upload_codec", "flat_uploads",
+                "wire_aware", "profile_decay", "prox_mu",
+            ):
+                object.__setattr__(self, field, getattr(self.config, field))
 
     def make_protocol(self):
         """Instantiate the protocol policy this environment describes."""
@@ -108,6 +147,7 @@ class Driver:
 
     def __init__(self, env: FederationEnv, aggregate_fn=None):
         self.env = env
+        cfg = env.config
         store_mode = env.store_mode
         if store_mode == "auto":
             wants_hash_map = env.lineage_length > 1 or env.store_capacity_bytes is not None
@@ -143,6 +183,10 @@ class Driver:
             arena_mesh=arena_mesh,
             flat_uploads=env.flat_uploads,
             profile_decay=env.profile_decay,
+            journal_sink=cfg.journal_sink,
+            journal_capacity=cfg.journal_capacity,
+            checkpoint_every=cfg.checkpoint_every,
+            checkpoint_dir=cfg.checkpoint_dir,
         )
         self._learners: list[Learner] = []
         self._last_heartbeat = 0.0

@@ -39,7 +39,9 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import TYPE_CHECKING, Any
 
+from repro.core.journal import EventJournal
 from repro.core.learner import EvalReport, LocalUpdate
+from repro.core.metrics import Telemetry
 from repro.core.scheduler import TrainTask
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
@@ -51,6 +53,7 @@ __all__ = [
     "UploadArrived",
     "AggregateFired",
     "Evaluated",
+    "EngineStopped",
     "RoundEngine",
 ]
 
@@ -130,6 +133,21 @@ class Evaluated:
     metrics: dict
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineStopped:
+    """A ``run()`` call ended — the journal's flush-on-stop marker.
+
+    ``completed`` counts the rounds / community updates that finished in
+    that call; ``error`` carries the repr of an escaping exception (None on
+    a clean return).  Recording this event synchronously flushes the
+    journal's file sink, so when ``run()`` returns the JSONL on disk is
+    complete.
+    """
+
+    completed: int
+    error: str | None = None
+
+
 @dataclasses.dataclass
 class _RoundState:
     """Book-keeping for the in-flight round (cohort, arrivals, timings)."""
@@ -167,15 +185,30 @@ class RoundEngine:
     Thread contract: :meth:`post` is the only entry point for worker
     threads; every event is *processed* on the single thread inside
     :meth:`run`, so ingest, aggregation and round bookkeeping are serialized
-    by construction.  ``event_log`` (bounded) records events in processing
-    order for observability and tests.
+    by construction.  ``event_log`` (bounded) records the typed event
+    objects in processing order for tests; ``journal`` (the
+    :class:`~repro.core.journal.EventJournal` flight recorder) records their
+    serialized form alongside, with optional JSONL persistence and a
+    ``replay()`` API — see ``docs/OBSERVABILITY.md``.
     """
 
-    def __init__(self, controller: "Controller", max_dispatch_workers: int = 32):
+    def __init__(
+        self,
+        controller: "Controller",
+        max_dispatch_workers: int = 32,
+        journal: EventJournal | None = None,
+    ):
         self.controller = controller
         self._executor = ThreadPoolExecutor(max_workers=max_dispatch_workers)
         self._events: queue.Queue = queue.Queue()
         self.event_log: collections.deque = collections.deque(maxlen=4096)
+        self.journal = journal if journal is not None else EventJournal()
+        self.telemetry: Telemetry = (
+            getattr(controller, "telemetry", None) or Telemetry()
+        )
+        self._h_round_s = self.telemetry.histogram("engine.round_s")
+        self._h_aggregate_s = self.telemetry.histogram("engine.aggregate_s")
+        self._g_round = self.telemetry.gauge("engine.round_id")
         self.aggregates_fired = 0  # lifetime AggregateFired count
         self._outstanding = 0  # dispatched-but-not-arrived tasks (loop thread only)
 
@@ -184,9 +217,12 @@ class RoundEngine:
         """Thread-safe: enqueue an event for the engine loop (arrival order)."""
         self._events.put(event)
 
-    def _log(self, event: Any) -> None:
-        # Processing order == log order: only the loop thread appends.
+    def _log(self, event: Any, **context: Any) -> None:
+        # Processing order == log order: only the loop thread appends.  The
+        # journal gets the same event plus engine-attached context (byte
+        # sizes, staleness, model version) in its serialized record.
         self.event_log.append(event)
+        self.journal.record(event, **context)
 
     # -- dispatch -----------------------------------------------------------
     def _submit(self, lid: str, task: TrainTask, envelope: Any) -> None:
@@ -215,7 +251,11 @@ class RoundEngine:
         )
         envelope = broadcast.to({"task": task})
         self._submit(lid, task, envelope)
-        self._log(Dispatched(round_id=c.round_id, learner_id=lid, task=task))
+        self._log(
+            Dispatched(round_id=c.round_id, learner_id=lid, task=task),
+            model_version=c._model_version,
+            down_bytes=int(envelope.buffer.nbytes),
+        )
         return task
 
     def _start_round(self) -> _RoundState:
@@ -272,7 +312,11 @@ class RoundEngine:
 
     # -- the loop -----------------------------------------------------------
     def run(
-        self, rounds: int | None = None, total_updates: int | None = None
+        self,
+        rounds: int | None = None,
+        total_updates: int | None = None,
+        checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
     ) -> list[RoundTimings]:
         """Drive the federation: ``rounds=`` for round-based policies,
         ``total_updates=`` for the continuous (async) one.
@@ -281,10 +325,23 @@ class RoundEngine:
         update (continuous runs may append a few extra entries: tasks still
         in flight when the target is reached are drained and — matching the
         paper's per-arrival semantics — still aggregated).
+
+        ``checkpoint_every=k`` persists the full federation state
+        (``Controller.save_checkpoint``: global model + version + learner
+        profiles + store contents + journal cursor) every k completed
+        rounds, *before* the next round's dispatch — so a killed run
+        restores at a round boundary and replays forward bit-identically
+        (``tests/test_checkpoint_resume.py``).  Both knobs default to the
+        controller's ``checkpoint_every``/``checkpoint_dir`` configuration.
         """
         c = self.controller
         if c.global_params is None:
             raise RuntimeError("set_initial_model() before running rounds")
+        if checkpoint_every is None:
+            checkpoint_every = getattr(c, "checkpoint_every", None)
+        if checkpoint_dir is None:
+            checkpoint_dir = getattr(c, "checkpoint_dir", None)
+        ckpt_every = int(checkpoint_every or 0)
         continuous = bool(getattr(c.protocol, "continuous", False))
         if continuous:
             if total_updates is None:
@@ -301,6 +358,13 @@ class RoundEngine:
 
         out: list[RoundTimings] = []
         completed = 0
+
+        def maybe_checkpoint() -> None:
+            # At a round boundary, before the next dispatch: the saved state
+            # has no partial-round arrivals to reconcile on restore.
+            if ckpt_every and checkpoint_dir and c.round_id % ckpt_every == 0:
+                c.save_checkpoint(checkpoint_dir)
+
         try:
             state = self._start_round()
             # One loop for every workflow: pop an event, mutate round state,
@@ -310,10 +374,21 @@ class RoundEngine:
                    or not self._events.empty()):
                 event = self._events.get()
                 if isinstance(event, UploadArrived):
-                    self._log(event)
                     self._outstanding -= 1
                     if event.error is not None:
+                        self._log(event)
                         raise event.error
+                    up = event.update.upload
+                    self._log(
+                        event,
+                        staleness=(
+                            c._model_version
+                            - c._learner_versions.get(event.learner_id, 0)
+                        ),
+                        up_bytes=(
+                            int(up.payload.nbytes) if up is not None else None
+                        ),
+                    )
                     c.ingest(event.update)
                     state.arrived += 1
                     if c.protocol.should_aggregate(state.arrived, len(state.cohort)):
@@ -327,7 +402,13 @@ class RoundEngine:
                         if continuous:
                             state.arrived = 0
                 elif isinstance(event, AggregateFired):
-                    self._log(event)
+                    self._log(
+                        event,
+                        weighting=c.protocol.weighting(),
+                        model_version=c._model_version,
+                        bytes_down=self.telemetry.value("channel.bytes_moved"),
+                        bytes_up=self.telemetry.value("channel.upload_bytes"),
+                    )
                     self.aggregates_fired += 1
                     if continuous:
                         timings = RoundTimings(round_id=c.round_id)
@@ -337,6 +418,8 @@ class RoundEngine:
                         c.history.append(timings)
                         c.round_id += 1
                         completed += 1
+                        self._observe_round(timings)
+                        maybe_checkpoint()
                         if completed < target and event.trigger is not None:
                             # The paper's async loop: the arriving learner
                             # gets the fresh model at once (shared broadcast
@@ -355,14 +438,24 @@ class RoundEngine:
                         c.history.append(state.timings)
                         c.round_id += 1
                         completed += 1
+                        self._observe_round(state.timings)
+                        maybe_checkpoint()
                         if completed < target:
                             state = self._start_round()
                 else:  # externally posted / unknown events: logged, not fatal
                     self._log(event)
-        except BaseException:
+        except BaseException as exc:
             self._abort()
+            self._log(EngineStopped(completed=completed, error=repr(exc)))
             raise
+        self._log(EngineStopped(completed=completed))
         return out
+
+    def _observe_round(self, timings: RoundTimings) -> None:
+        """Fold one completed round into the engine's telemetry instruments."""
+        self._h_round_s.observe(timings.federation_round_s)
+        self._h_aggregate_s.observe(timings.aggregation_s)
+        self._g_round.set(self.controller.round_id)
 
     def _aggregate(self, state: _RoundState) -> float:
         """Reduce per the policy's weighting hook; returns the agg seconds.
@@ -394,5 +487,7 @@ class RoundEngine:
 
     # -- lifecycle ----------------------------------------------------------
     def shutdown(self) -> None:
-        """Stop the dispatch executor (waits for in-flight tasks)."""
+        """Stop the dispatch executor (waits for in-flight tasks) and close
+        the journal (final flush; an owned sink file is closed)."""
         self._executor.shutdown(wait=True)
+        self.journal.close()

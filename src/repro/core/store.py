@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.metrics import Telemetry
 from repro.core.packing import round_up
 
 __all__ = ["ModelRecord", "ModelStore", "ArenaStore"]
@@ -73,24 +74,58 @@ class ModelStore:
     to aggregate every registered learner).
     """
 
-    def __init__(self, lineage_length: int = 1, capacity_bytes: int | None = None):
+    def __init__(
+        self,
+        lineage_length: int = 1,
+        capacity_bytes: int | None = None,
+        telemetry: Telemetry | None = None,
+    ):
         if lineage_length < 1:
             raise ValueError("lineage_length must be >= 1")
         self._lineage_length = lineage_length
         self._capacity_bytes = capacity_bytes
         self._records: OrderedDict[str, list[ModelRecord]] = OrderedDict()
-        self.total_inserts = 0
-        self.bytes_ingested = 0
+        self._telemetry = telemetry if telemetry is not None else Telemetry()
+        self._register_counters()
+
+    def _register_counters(self) -> None:
+        self._c_inserts = self._telemetry.counter("store.model.total_inserts")
+        self._c_bytes = self._telemetry.counter("store.model.bytes_ingested")
+
+    def bind_telemetry(self, telemetry: Telemetry) -> None:
+        """Re-register this store's counters in a shared registry.
+
+        The controller calls this on a user-supplied store so every counter
+        lives behind the one ``controller.telemetry`` handle; current values
+        carry over.
+        """
+        if telemetry is self._telemetry:
+            return
+        inserts, nbytes = self._c_inserts.value, self._c_bytes.value
+        self._telemetry = telemetry
+        self._register_counters()
+        self._c_inserts.add(inserts)
+        self._c_bytes.add(nbytes)
+
+    @property
+    def total_inserts(self) -> int:
+        """Deprecated shim for ``telemetry.value('store.model.total_inserts')``."""
+        return self._c_inserts.value
+
+    @property
+    def bytes_ingested(self) -> int:
+        """Deprecated shim for ``telemetry.value('store.model.bytes_ingested')``."""
+        return self._c_bytes.value
 
     # -- insertion ---------------------------------------------------------
     def insert(self, record: ModelRecord) -> None:
         """Append to the learner's lineage, trimming history and evicting."""
         lineage = self._records.setdefault(record.learner_id, [])
         lineage.append(record)
-        self.total_inserts += 1
+        self._c_inserts.add(1)
         # Cumulative ingest accounting (never decremented by eviction):
         # reconciles against the channel's uplink counters in tests.
-        self.bytes_ingested += record.nbytes
+        self._c_bytes.add(record.nbytes)
         if len(lineage) > self._lineage_length:
             del lineage[: len(lineage) - self._lineage_length]
         self._maybe_evict()
@@ -140,6 +175,21 @@ class ModelStore:
     def num_records(self) -> int:
         """Total stored records across all learners and lineages."""
         return sum(len(lin) for lin in self._records.values())
+
+    # -- checkpointing ------------------------------------------------------
+    def export_records(self) -> list[ModelRecord]:
+        """Every stored record in insertion order (checkpoint save)."""
+        return [rec for lin in self._records.values() for rec in lin]
+
+    def restore_records(self, records: Sequence[ModelRecord]) -> None:
+        """Replace the store's contents (checkpoint restore).
+
+        Rebuilds lineages in the given order without touching the cumulative
+        ingest counters — restore is not new wire traffic.
+        """
+        self._records.clear()
+        for rec in records:
+            self._records.setdefault(rec.learner_id, []).append(rec)
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +300,7 @@ class ArenaStore:
         dtype: Any = jnp.float32,
         mesh: Any = None,
         axes: Any = None,
+        telemetry: Telemetry | None = None,
     ):
         if num_params < 1:
             raise ValueError("num_params must be >= 1")
@@ -291,9 +342,25 @@ class ArenaStore:
         self.weights = jnp.zeros((n,), jnp.float32)
         self.versions = jnp.zeros((n,), jnp.float32)
         self.mask = jnp.zeros((n,), jnp.float32)
-        self.total_writes = 0
-        self.grow_events = 0
-        self.bytes_ingested = 0
+        self._telemetry = telemetry if telemetry is not None else Telemetry()
+        self._c_writes = self._telemetry.counter("store.arena.total_writes")
+        self._c_bytes = self._telemetry.counter("store.arena.bytes_ingested")
+        self._c_grows = self._telemetry.counter("store.arena.grow_events")
+
+    @property
+    def total_writes(self) -> int:
+        """Deprecated shim for ``telemetry.value('store.arena.total_writes')``."""
+        return self._c_writes.value
+
+    @property
+    def bytes_ingested(self) -> int:
+        """Deprecated shim for ``telemetry.value('store.arena.bytes_ingested')``."""
+        return self._c_bytes.value
+
+    @property
+    def grow_events(self) -> int:
+        """Deprecated shim for ``telemetry.value('store.arena.grow_events')``."""
+        return self._c_grows.value
 
     @staticmethod
     def _zeros(shape, dtype, sharding):
@@ -331,7 +398,7 @@ class ArenaStore:
         self._versions_host = np.concatenate(
             [self._versions_host, np.zeros((pad,), np.float32)]
         )
-        self.grow_events += 1
+        self._c_grows.add(1)
 
     def _assign_row(self, learner_id: str) -> int:
         row = self._rows.get(learner_id)
@@ -341,6 +408,18 @@ class ArenaStore:
                 self._grow(max(2 * self.n_max, row + 1))
             self._rows[learner_id] = row
         return row
+
+    def ensure_row(self, learner_id: str) -> int:
+        """Assign (or return) the learner's arena row without writing it.
+
+        The controller calls this at registration so row order follows
+        *registration* order, not first-upload arrival order — making
+        arena-mode aggregation order deterministic across runs (the
+        kill-and-resume parity contract; see ``docs/OBSERVABILITY.md``).
+        The row stays invalid until the first :meth:`write`.
+        """
+        with self.lock:
+            return self._assign_row(learner_id)
 
     # -- writes -------------------------------------------------------------
     def write(
@@ -375,10 +454,10 @@ class ArenaStore:
             self._valid[row] = True
             self._weights_host[row] = weight
             self._versions_host[row] = version
-            self.total_writes += 1
+            self._c_writes.add(1)
             # Cumulative decoded-row ingest bytes: reconciles against the
             # channel's uplink message count in the dispatch tests.
-            self.bytes_ingested += int(buf.nbytes)
+            self._c_bytes.add(int(buf.nbytes))
             return row
 
     def invalidate(self, learner_id: str) -> None:
@@ -477,3 +556,64 @@ class ArenaStore:
             self.buffer.nbytes + self.weights.nbytes
             + self.versions.nbytes + self.mask.nbytes
         )
+
+    # -- checkpointing ------------------------------------------------------
+    def export_state(self) -> dict:
+        """Host-side copy of the arena's full state (checkpoint save).
+
+        Returns ``buffer`` (the full ``(n_max, padded_params)`` f32 array,
+        gathered if sharded), the host ``weights``/``versions``/``valid``
+        mirrors, and the ``rows`` learner→row map.  The f32 round-trip
+        through ``.npz`` is bit-exact, so a restored arena aggregates
+        bit-identically.
+        """
+        with self.lock:
+            return {
+                "buffer": np.asarray(jax.device_get(self.buffer)),
+                "weights": self._weights_host.copy(),
+                "versions": self._versions_host.copy(),
+                "valid": self._valid.copy(),
+                "rows": dict(self._rows),
+            }
+
+    def restore_state(
+        self,
+        buffer: np.ndarray,
+        weights: np.ndarray,
+        versions: np.ndarray,
+        valid: np.ndarray,
+        rows: dict[str, int],
+    ) -> None:
+        """Reload a checkpointed arena state (inverse of :meth:`export_state`).
+
+        The arena must have been constructed with the same ``num_params``
+        and row alignment (``padded_params`` must match).  Capacity adapts:
+        the restored state is padded (or the arena grown) to cover both the
+        saved rows and any already-assigned ones.
+        """
+        buffer = np.asarray(buffer, np.float32)
+        if buffer.ndim != 2 or buffer.shape[1] != self.padded_params:
+            raise ValueError(
+                f"checkpointed arena rows hold {buffer.shape[-1]} params, "
+                f"this arena holds {self.padded_params}"
+            )
+        with self.lock:
+            n = max(self.n_max, buffer.shape[0], len(rows))
+            full = np.zeros((n, self.padded_params), np.float32)
+            full[: buffer.shape[0]] = buffer
+            self._valid = np.zeros((n,), bool)
+            self._valid[: len(valid)] = np.asarray(valid, bool)
+            self._weights_host = np.zeros((n,), np.float32)
+            self._weights_host[: len(weights)] = np.asarray(weights, np.float32)
+            self._versions_host = np.zeros((n,), np.float32)
+            self._versions_host[: len(versions)] = np.asarray(
+                versions, np.float32
+            )
+            self._rows = {str(k): int(v) for k, v in rows.items()}
+            if self.buffer_sharding is not None:
+                self.buffer = jax.device_put(full, self.buffer_sharding)
+            else:
+                self.buffer = jnp.asarray(full)
+            self.weights = jnp.asarray(self._weights_host)
+            self.versions = jnp.asarray(self._versions_host)
+            self.mask = jnp.asarray(self._valid.astype(np.float32))

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing
+from repro.core.metrics import Telemetry
 
 __all__ = [
     "ChannelStats", "Channel", "Envelope", "Broadcast",
@@ -56,9 +57,24 @@ __all__ = [
 ]
 
 
-@dataclasses.dataclass
+#: The channel's telemetry counter names (registered as ``channel.<field>``).
+_STAT_FIELDS = (
+    "messages", "bytes_moved", "serializations", "serialize_s",
+    "deserialize_s", "virtual_wire_s", "upload_messages", "upload_bytes",
+    "upload_serializations", "upload_serialize_s", "upload_deserialize_s",
+    "upload_virtual_wire_s",
+)
+
+
 class ChannelStats:
-    """Cumulative transport accounting for one channel, both directions.
+    """Transport accounting for one channel — a **view** over its telemetry.
+
+    Deprecated read shim: every field that used to be a dataclass attribute
+    is now a property reading the ``channel.<field>`` counter from the
+    channel's :class:`~repro.core.metrics.Telemetry` registry, so existing
+    call sites (``ch.stats.upload_bytes``) keep working while the registry
+    (``controller.telemetry`` / ``channel.telemetry``) is the documented
+    surface.
 
     Downlink (controller → learners): ``messages``/``bytes_moved``/
     ``virtual_wire_s`` count per *recipient* (a broadcast to N learners
@@ -72,22 +88,12 @@ class ChannelStats:
     upload is its own serialization (no fan-in sharing), so
     ``upload_messages == upload_serializations`` always.
 
-    Mutated only by :class:`Channel` under its stats lock — safe to read from
-    tests after joining worker threads.
+    Counters are mutated only by :class:`Channel` under its stats lock —
+    safe to read from tests after joining worker threads.
     """
 
-    messages: int = 0
-    bytes_moved: int = 0
-    serializations: int = 0
-    serialize_s: float = 0.0
-    deserialize_s: float = 0.0
-    virtual_wire_s: float = 0.0
-    upload_messages: int = 0
-    upload_bytes: int = 0
-    upload_serializations: int = 0
-    upload_serialize_s: float = 0.0
-    upload_deserialize_s: float = 0.0
-    upload_virtual_wire_s: float = 0.0
+    def __init__(self, telemetry: Telemetry | None = None):
+        self._telemetry = telemetry if telemetry is not None else Telemetry()
 
     @property
     def total_bytes(self) -> int:
@@ -98,6 +104,28 @@ class ChannelStats:
     def total_virtual_wire_s(self) -> float:
         """Modeled wire time across both directions."""
         return self.virtual_wire_s + self.upload_virtual_wire_s
+
+    def __repr__(self) -> str:
+        fields = ", ".join(f"{f}={getattr(self, f)!r}" for f in _STAT_FIELDS)
+        return f"ChannelStats({fields})"
+
+
+def _stats_view_property(field: str) -> property:
+    """Build one deprecated ChannelStats read property over ``channel.<field>``."""
+
+    def _get(self: ChannelStats):
+        return self._telemetry.value(f"channel.{field}", 0)
+
+    _get.__name__ = field
+    _get.__doc__ = (
+        f"Deprecated shim for ``telemetry.value('channel.{field}')``."
+    )
+    return property(_get)
+
+
+for _field in _STAT_FIELDS:
+    setattr(ChannelStats, _field, _stats_view_property(_field))
+del _field
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +372,12 @@ class Channel:
     ``kernels/quantize``); ``upload_codec`` selects the uplink wire format for
     flat ``(P,)`` update buffers (``"raw"`` default, ``"int8"`` blockwise
     quantization, or a codec object).
+
+    All wire accounting lives as ``channel.*`` counters in ``telemetry``
+    (the channel's own :class:`~repro.core.metrics.Telemetry` registry by
+    default; the controller adopts it as ``controller.telemetry``).
+    ``stats`` is the deprecated :class:`ChannelStats` read view over the
+    same counters.
     """
 
     def __init__(
@@ -352,12 +386,17 @@ class Channel:
         latency_ms: float = 0.5,
         quantize_codec: Any | None = None,
         upload_codec: Any = "raw",
+        telemetry: Telemetry | None = None,
     ):
         self.bandwidth_gbps = bandwidth_gbps
         self.latency_ms = latency_ms
         self.codec = quantize_codec
         self.upload_codec = get_upload_codec(upload_codec)
-        self.stats = ChannelStats()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._c = {
+            f: self.telemetry.counter(f"channel.{f}") for f in _STAT_FIELDS
+        }
+        self.stats = ChannelStats(self.telemetry)
         self._stats_lock = threading.Lock()
 
     # -- accounting ---------------------------------------------------------
@@ -378,14 +417,14 @@ class Channel:
 
     def _account_send(self, nbytes: int) -> None:
         with self._stats_lock:
-            self.stats.messages += 1
-            self.stats.bytes_moved += nbytes
-            self.stats.virtual_wire_s += self._wire_time(nbytes)
+            self._c["messages"].add(1)
+            self._c["bytes_moved"].add(nbytes)
+            self._c["virtual_wire_s"].add(self._wire_time(nbytes))
 
     def _account_serialize(self, dt: float) -> None:
         with self._stats_lock:
-            self.stats.serializations += 1
-            self.stats.serialize_s += dt
+            self._c["serializations"].add(1)
+            self._c["serialize_s"].add(dt)
 
     # -- send halves --------------------------------------------------------
     def send(self, params: Any, metadata: dict | None = None) -> Envelope:
@@ -437,7 +476,7 @@ class Channel:
             params = self.codec.decode(params)
         dt = time.perf_counter() - t0
         with self._stats_lock:
-            self.stats.deserialize_s += dt
+            self._c["deserialize_s"].add(dt)
         return params
 
     # -- upload half (learner -> controller) --------------------------------
@@ -476,11 +515,11 @@ class Channel:
         payload.flags.writeable = False  # wire bytes are immutable
         nbytes = int(payload.nbytes)
         with self._stats_lock:
-            self.stats.upload_serializations += 1
-            self.stats.upload_serialize_s += dt
-            self.stats.upload_messages += 1
-            self.stats.upload_bytes += nbytes
-            self.stats.upload_virtual_wire_s += self._wire_time(nbytes)
+            self._c["upload_serializations"].add(1)
+            self._c["upload_serialize_s"].add(dt)
+            self._c["upload_messages"].add(1)
+            self._c["upload_bytes"].add(nbytes)
+            self._c["upload_virtual_wire_s"].add(self._wire_time(nbytes))
         return UploadEnvelope(
             codec=c.codec_id, payload=payload, num_elements=n,
             metadata=dict(metadata or {}), codec_params=_codec_params(c),
@@ -499,5 +538,5 @@ class Channel:
         row = c.decode(envelope.payload, envelope.num_elements)
         dt = time.perf_counter() - t0
         with self._stats_lock:
-            self.stats.upload_deserialize_s += dt
+            self._c["upload_deserialize_s"].add(dt)
         return row

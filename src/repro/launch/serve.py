@@ -55,14 +55,17 @@ def push_to_replicas(
     replica_params = ch.recv(envelopes[0])  # one replica decodes as a check
     jax.block_until_ready(replica_params)
     elapsed = time.time() - t0
-    stats = ch.stats
+    tm = ch.telemetry  # the unified observability surface (docs/OBSERVABILITY.md)
     print(
-        f"push: {n_replicas} replicas, {stats.bytes_moved/1e6:.1f}MB on wire, "
-        f"{stats.serializations} serialization(s) (vs {n_replicas} per-send), "
+        f"push: {n_replicas} replicas, "
+        f"{tm.value('channel.bytes_moved')/1e6:.1f}MB on wire, "
+        f"{tm.value('channel.serializations')} serialization(s) "
+        f"(vs {n_replicas} per-send), "
         f"{elapsed:.3f}s incl. one decode, "
-        f"virtual wire {stats.virtual_wire_s*1e3:.1f}ms"
+        f"virtual wire {tm.value('channel.virtual_wire_s', 0.0)*1e3:.1f}ms"
     )
-    assert stats.serializations == 1 and stats.messages == n_replicas
+    assert tm.value("channel.serializations") == 1
+    assert tm.value("channel.messages") == n_replicas
     if replica_upload:
         buf = packing.pack_numeric(replica_params)
         jax.block_until_ready(buf)
@@ -72,19 +75,19 @@ def push_to_replicas(
         echo = ch.recv_upload(env)  # the server decodes one echo as a check
         jax.block_until_ready(echo)
         elapsed = time.time() - t0
+        down = tm.value("channel.bytes_moved")
+        up = tm.value("channel.upload_bytes")
         print(
             f"echo: {n_replicas} uploads ({replica_upload}), "
-            f"{stats.upload_bytes/1e6:.1f}MB on wire "
-            f"({stats.bytes_moved / max(stats.upload_bytes, 1):.2f}x vs downlink), "
+            f"{up/1e6:.1f}MB on wire "
+            f"({down / max(up, 1):.2f}x vs downlink), "
             f"{elapsed:.3f}s incl. one decode, "
-            f"virtual wire {stats.upload_virtual_wire_s*1e3:.1f}ms"
+            f"virtual wire {tm.value('channel.upload_virtual_wire_s', 0.0)*1e3:.1f}ms"
         )
-        assert stats.upload_messages == n_replicas
+        assert tm.value("channel.upload_messages") == n_replicas
         # per-replica round-trip estimate — the same bandwidth-model API the
         # federation's wire-cost-aware task sizing consumes
-        rt = ch.round_trip_s(
-            stats.bytes_moved // n_replicas, stats.upload_bytes // n_replicas
-        )
+        rt = ch.round_trip_s(down // n_replicas, up // n_replicas)
         print(f"modeled per-replica round-trip: {rt*1e3:.1f}ms "
               f"(push down + {replica_upload} echo up)")
 

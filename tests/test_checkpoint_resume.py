@@ -1,0 +1,261 @@
+"""Crash-consistent checkpoint/resume: kill-and-resume bit-identity.
+
+The tentpole's acceptance contract: a federation killed at a checkpointed
+round boundary and resumed on a freshly constructed controller must produce
+a **bit-identical** global model to the uninterrupted run — across the full
+protocol × store grid (sync / semi-sync / async × arena / stack).
+
+Determinism preconditions the harness supplies (and the docs document):
+
+* learners feed a *constant* data batch (call-count-independent — the
+  resumed run constructs fresh learners, so any data schedule keyed on call
+  counts would diverge);
+* learners report a fixed seconds-per-step (semi-sync sizes tasks from the
+  EWMA profile; measured wall-clock would make sizing nondeterministic);
+* async runs n=1 (multi-learner async arrival order is scheduler-dependent
+  by design);
+* arena rows follow registration order (``ArenaStore.ensure_row`` at
+  registration), so aggregation order is reproducible across processes.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncProtocol,
+    Controller,
+    Learner,
+    SemiSyncProtocol,
+    SyncProtocol,
+)
+from repro.optim import sgd
+
+
+def _make_learner(i):
+    def loss_fn(p, b):
+        return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+
+    rng = np.random.default_rng(i)
+    X = rng.normal(size=(16, 4)).astype(np.float32)
+    y = X @ np.ones((4, 1), np.float32)
+
+    class _Fixed(Learner):
+        def fit(self, params, task):
+            update = super().fit(params, task)
+            update.seconds_per_step = 1e-3
+            return update
+
+    return _Fixed(
+        f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+        lambda bs: (X, y), lambda: (X, y), sgd(0.05), 16,
+    )
+
+
+def _protocol(name):
+    if name == "sync":
+        return SyncProtocol(local_steps=2, batch_size=8)
+    if name == "semi_sync":
+        return SemiSyncProtocol(hyperperiod_s=0.05, batch_size=8,
+                                default_steps=2)
+    return AsyncProtocol(local_steps=2, batch_size=8)
+
+
+def _build(proto_name, store_mode, n, secure=False, **kwargs):
+    ctrl = Controller(protocol=_protocol(proto_name), store_mode=store_mode,
+                      secure=secure, **kwargs)
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1), jnp.float32)})
+    for i in range(n):
+        ctrl.register_learner(_make_learner(i))
+    return ctrl
+
+
+def _run(ctrl, proto_name, k):
+    if proto_name == "async":
+        return ctrl.engine.run(total_updates=k)
+    return ctrl.engine.run(rounds=k)
+
+
+GRID = [
+    ("sync", "arena", 3),
+    ("sync", "stack", 3),
+    ("semi_sync", "arena", 2),
+    ("semi_sync", "stack", 2),
+    ("async", "arena", 1),
+    ("async", "stack", 1),
+]
+
+
+@pytest.mark.parametrize("proto,store_mode,n", GRID,
+                         ids=[f"{p}-{s}" for p, s, _ in GRID])
+def test_kill_and_resume_bit_identical(proto, store_mode, n, tmp_path):
+    # golden: 4 uninterrupted rounds / community updates
+    golden = _build(proto, store_mode, n)
+    _run(golden, proto, 4)
+    want = np.asarray(golden.global_buffer)
+    want_version = golden._model_version
+    golden.shutdown()
+
+    # interrupted: checkpoint at round 2, then "kill" the process
+    ckpt = str(tmp_path / "ckpt")
+    first = _build(proto, store_mode, n,
+                   checkpoint_dir=ckpt, checkpoint_every=2)
+    _run(first, proto, 2)
+    first.shutdown()
+
+    # resume on a *fresh* controller (new stores, new learners, new engine)
+    resumed = _build(proto, store_mode, n)
+    meta = resumed.restore(ckpt)
+    assert meta["round_id"] == 2
+    assert resumed.round_id == 2
+    _run(resumed, proto, 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+
+    np.testing.assert_array_equal(got, want)  # bit-identical, not allclose
+    assert resumed._model_version == want_version
+
+
+def test_secure_sync_resume_bit_identical(tmp_path):
+    """Secure aggregation composes: mask sessions are keyed by round id /
+    model version (both checkpointed), so the resumed fixed-point sums are
+    the golden run's sums exactly."""
+    golden = _build("sync", "arena", 2, secure=True)
+    _run(golden, "sync", 4)
+    want = np.asarray(golden.global_buffer)
+    golden.shutdown()
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", "arena", 2, secure=True,
+                   checkpoint_dir=ckpt, checkpoint_every=2)
+    _run(first, "sync", 2)
+    first.shutdown()
+
+    resumed = _build("sync", "arena", 2, secure=True)
+    resumed.restore(ckpt)
+    _run(resumed, "sync", 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_cadence_writes_round_boundary_files(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    ctrl = _build("sync", "arena", 2)
+    ctrl.engine.run(rounds=4, checkpoint_every=2, checkpoint_dir=ckpt)
+    ctrl.shutdown()
+    assert sorted(os.listdir(ckpt)) == ["ckpt_00000002.npz",
+                                        "ckpt_00000004.npz"]
+
+
+def test_restore_state_carries_counters_profiles_and_journal(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", "arena", 2, checkpoint_dir=ckpt, checkpoint_every=2)
+    first.engine.run(rounds=2)
+    saved_cursor = first.journal.cursor
+    saved_profile = dict(first._learner_profiles["l0"])
+    first.shutdown()
+
+    resumed = _build("sync", "arena", 2)
+    meta = resumed.restore(ckpt)
+    assert meta["journal_cursor"] <= saved_cursor  # flushed pre-EngineStopped
+    assert resumed.journal.cursor == meta["journal_cursor"]
+    assert resumed._model_version == 2
+    assert resumed.engine.aggregates_fired == 2
+    assert resumed._learner_versions == {"l0": 1, "l1": 1}
+    prof = resumed._learner_profiles["l0"]
+    assert dict(prof) == saved_profile
+    assert prof.observations == 2 and prof.decay == first.profile_decay
+    # journal records resume the sequence numbering where the save left off
+    resumed.engine.run(rounds=1)
+    first_new = resumed.journal.records()[0]
+    assert first_new["seq"] == meta["journal_cursor"]
+    # the checkpoint carried a telemetry snapshot for offline inspection
+    assert meta["telemetry"]["channel.upload_messages"] == 4
+    resumed.shutdown()
+
+
+def test_restore_validates_configuration(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    ctrl = _build("sync", "arena", 2)
+    ctrl.engine.run(rounds=2)
+    ctrl.save_checkpoint(ckpt)
+    ctrl.shutdown()
+
+    wrong_proto = _build("async", "arena", 1)
+    with pytest.raises(ValueError, match="protocol"):
+        wrong_proto.restore(ckpt)
+    wrong_proto.shutdown()
+
+    wrong_store = _build("sync", "stack", 2)
+    with pytest.raises(ValueError, match="store_mode"):
+        wrong_store.restore(ckpt)
+    wrong_store.shutdown()
+
+    wrong_secure = _build("sync", "arena", 2, secure=True)
+    with pytest.raises(ValueError, match="secure"):
+        wrong_secure.restore(ckpt)
+    wrong_secure.shutdown()
+
+
+def test_checkpoint_requires_directory_and_model():
+    ctrl = Controller(protocol=SyncProtocol())
+    with pytest.raises(ValueError, match="directory"):
+        ctrl.save_checkpoint()
+    with pytest.raises(ValueError, match="directory"):
+        ctrl.restore()
+    ctrl.shutdown()
+
+    bare = Controller(protocol=SyncProtocol())
+    with pytest.raises(RuntimeError, match="set_initial_model"):
+        bare.save_checkpoint("/tmp/never-written")
+    bare.shutdown()
+
+
+def test_save_restore_roundtrip_preserves_arena_bitwise(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    ctrl = _build("sync", "arena", 3)
+    ctrl.engine.run(rounds=1)
+    buf = np.asarray(ctrl.arena.export_state()["buffer"])
+    rows = dict(ctrl.arena._rows)
+    ctrl.save_checkpoint(ckpt)
+    ctrl.shutdown()
+
+    resumed = _build("sync", "arena", 3)
+    resumed.restore(ckpt)
+    st = resumed.arena.export_state()
+    np.testing.assert_array_equal(np.asarray(st["buffer"]), buf)
+    assert st["rows"] == rows
+    np.testing.assert_array_equal(
+        np.asarray(resumed.global_buffer), np.asarray(ctrl.global_buffer)
+    )
+    resumed.shutdown()
+
+
+def test_stack_restore_preserves_records_without_counter_bumps(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    ctrl = _build("sync", "stack", 2)
+    ctrl.engine.run(rounds=1)
+    inserts = ctrl.store.total_inserts
+    ctrl.save_checkpoint(ckpt)
+    ctrl.shutdown()
+    assert inserts == 2
+
+    resumed = _build("sync", "stack", 2)
+    resumed.restore(ckpt)
+    recs = resumed.store.export_records()
+    assert [r.learner_id for r in recs] == [
+        r.learner_id for r in ctrl.store.export_records()
+    ]
+    assert resumed.store.num_records() == 2
+    # restore is not new wire traffic: ingest counters stay untouched
+    assert resumed.store.total_inserts == 0
+    assert recs[0].metadata["model_version"] == 0
+    resumed.shutdown()

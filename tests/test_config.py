@@ -1,0 +1,146 @@
+"""FederationConfig: validation, from_kwargs, and the FederationEnv bridge.
+
+Pins the knob-consolidation satellite: every machinery knob lives in one
+validated frozen dataclass, ``FederationEnv(config=...)`` is the documented
+entry point (legacy flat fields stay as aliases), and the Driver threads the
+journal/checkpoint knobs through to the Controller.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Driver, FederationConfig, FederationEnv, Learner
+from repro.core.driver import TerminationCriteria
+from repro.optim import sgd
+
+
+def _make_learner(i):
+    def loss_fn(p, b):
+        return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+
+    rng = np.random.default_rng(i)
+    X = rng.normal(size=(16, 4)).astype(np.float32)
+    y = X @ np.ones((4, 1), np.float32)
+    return Learner(
+        f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+        lambda bs: (X, y), lambda: (X, y), sgd(0.05), 16,
+    )
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_defaults_are_valid_and_frozen():
+    cfg = FederationConfig()
+    assert cfg.store_mode == "auto" and cfg.journal_capacity == 4096
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.store_mode = "arena"
+
+
+@pytest.mark.parametrize(
+    "kwargs,match",
+    [
+        ({"store_mode": "hashmap"}, "store_mode"),
+        ({"arena_shards": -2}, "arena_shards"),
+        ({"arena_shards": 2, "store_mode": "stack"}, "arena_shards"),
+        ({"upload_codec": "zstd"}, "upload_codec"),
+        ({"profile_decay": 1.0}, "profile_decay"),
+        ({"profile_decay": -0.1}, "profile_decay"),
+        ({"prox_mu": -0.5}, "prox_mu"),
+        ({"checkpoint_every": 0}, "checkpoint_every"),
+        ({"journal_capacity": -1}, "journal_capacity"),
+    ],
+)
+def test_bad_knobs_rejected_at_construction(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        FederationConfig(**kwargs)
+
+
+def test_from_kwargs_rejects_unknown_keys_by_name():
+    with pytest.raises(TypeError, match="store_modee"):
+        FederationConfig.from_kwargs(store_modee="arena")
+    cfg = FederationConfig.from_kwargs(store_mode="arena", journal_capacity=8)
+    assert cfg.store_mode == "arena" and cfg.journal_capacity == 8
+
+
+def test_replace_revalidates():
+    cfg = FederationConfig()
+    assert cfg.replace(profile_decay=0.9).profile_decay == 0.9
+    with pytest.raises(ValueError):
+        cfg.replace(profile_decay=2.0)
+
+
+# ---------------------------------------------------------------------------
+# the FederationEnv bridge
+# ---------------------------------------------------------------------------
+
+
+def test_env_builds_config_from_flat_aliases():
+    env = FederationEnv(store_mode="stack", upload_codec="int8",
+                        profile_decay=0.25, prox_mu=0.125)
+    assert env.config == FederationConfig(
+        store_mode="stack", upload_codec="int8",
+        profile_decay=0.25, prox_mu=0.125,
+    )
+
+
+def test_env_config_wins_and_mirrors_to_aliases():
+    cfg = FederationConfig(store_mode="arena", upload_codec="int8",
+                           wire_aware=False, profile_decay=0.0, prox_mu=0.5)
+    env = FederationEnv(protocol="semi_sync", config=cfg)
+    # aliases mirror the config so legacy reads (and make_protocol) agree
+    assert env.store_mode == "arena" and env.upload_codec == "int8"
+    assert env.wire_aware is False and env.profile_decay == 0.0
+    proto = env.make_protocol()
+    assert proto.wire_aware is False
+    assert proto.size_task(0, {}).prox_mu == 0.5
+
+
+def test_env_flat_validation_now_rejects_typos():
+    with pytest.raises(ValueError, match="store_mode"):
+        FederationEnv(store_mode="hashmap")
+    with pytest.raises(ValueError, match="upload_codec"):
+        FederationEnv(upload_codec="zstd")
+
+
+# ---------------------------------------------------------------------------
+# Driver threads the knobs through
+# ---------------------------------------------------------------------------
+
+
+def test_driver_threads_journal_and_checkpoint_knobs(tmp_path):
+    ckpt_dir = str(tmp_path / "ckpt")
+    sink = str(tmp_path / "journal.jsonl")
+    cfg = FederationConfig(journal_sink=sink, journal_capacity=16,
+                           checkpoint_every=1, checkpoint_dir=ckpt_dir)
+    env = FederationEnv(
+        config=cfg, local_steps=1, batch_size=8,
+        termination=TerminationCriteria(max_rounds=2),
+    )
+    drv = Driver(env)
+    ctrl = drv.controller
+    assert ctrl.checkpoint_every == 1 and ctrl.checkpoint_dir == ckpt_dir
+    assert ctrl.journal.capacity == 16
+    drv.initialize({"w": jnp.zeros((4, 1), jnp.float32)},
+                   [_make_learner(0), _make_learner(1)])
+    history = drv.run()
+    assert len(history) == 2
+    from repro.checkpoint.checkpoint import latest_step
+    from repro.core import EventJournal
+
+    assert latest_step(ckpt_dir) == 2  # checkpointed every completed round
+    recs = EventJournal.read_jsonl(sink)
+    assert recs and recs[-1]["kind"] == "engine_stopped"
+
+
+def test_driver_journal_disabled_via_config():
+    env = FederationEnv(config=FederationConfig(journal_capacity=0),
+                        termination=TerminationCriteria(max_rounds=1))
+    drv = Driver(env)
+    assert not drv.controller.journal.enabled
+    drv.controller.shutdown()
