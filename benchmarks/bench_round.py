@@ -218,6 +218,53 @@ def run_journal(p=1 << 20, n=8, rounds=12):
 
 
 # ---------------------------------------------------------------------------
+# fault-injecting stress arm
+# ---------------------------------------------------------------------------
+
+
+def run_stress_arm(learners=1000, rounds=5, fault_seed=7, protocols=None):
+    """Thousand-learner churn sweep: every protocol under injected faults.
+
+    Drives ``tests/stress/harness.run_stress`` — a SimLearner fleet on the
+    real engine/transport/journal with seeded dropout/rejoin churn, upload
+    loss + duplication, heavy-tailed stragglers, and per-learner bandwidth
+    caps — once per protocol, and reports uploads/sec, rounds/sec, the
+    staleness histogram, and every ``engine.faults.*`` counter as JSON
+    rows.  The same ``--fault-seed`` reproduces the identical run
+    (byte-identical journal JSONL; ``tests/stress/test_stress.py`` pins
+    that contract on small fleets).
+    """
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tests"))
+    from stress.harness import STRESS_PROTOCOLS, run_stress
+
+    from repro.core import FaultSpec
+
+    spec = FaultSpec(
+        seed=fault_seed, dropout_rate=0.05, rejoin_rate=0.5,
+        upload_loss_rate=0.02, upload_dup_rate=0.02, straggler_rate=0.1,
+        bandwidth_min_gbps=0.05, bandwidth_max_gbps=10.0,
+    )
+    rows = []
+    for name in (protocols or STRESS_PROTOCOLS):
+        row = run_stress(protocol=name, learners=learners, rounds=rounds,
+                         spec=spec)
+        row["bench"] = "stress"
+        rows.append(row)
+        f = row["faults"]
+        print(f"stress,{name},N={learners},rounds={rounds},"
+              f"uploads={row['uploads']},"
+              f"uploads_per_s={row['uploads_per_s']:.0f},"
+              f"rounds_per_s={row['rounds_per_s']:.2f},"
+              f"dropouts={f['dropouts']},rejoins={f['rejoins']},"
+              f"lost={f['uploads_lost']},dup={f['uploads_duplicated']},"
+              f"orphaned={f['orphaned']}", flush=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # wire-aware semi-sync sizing arm
 # ---------------------------------------------------------------------------
 
@@ -296,6 +343,11 @@ def main(argv=None):
                     help="bandwidth-capped semi-sync sizing: wire-aware vs naive")
     ap.add_argument("--journal", action="store_true",
                     help="flight-recorder overhead: journaled vs disabled")
+    ap.add_argument("--stress", action="store_true",
+                    help="1000-learner fault-injecting churn sweep, "
+                         "every protocol")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="stress-arm fault seed (same seed => identical run)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -312,6 +364,12 @@ def main(argv=None):
             rows = run_journal(p=1 << 16, n=4, rounds=6)
         else:
             rows = run_journal()
+    elif args.stress:
+        if args.smoke:
+            rows = run_stress_arm(learners=64, rounds=2,
+                                  fault_seed=args.fault_seed)
+        else:
+            rows = run_stress_arm(fault_seed=args.fault_seed)
     elif args.schedule:
         if args.smoke:
             rows = run_schedule(p=1 << 16, n=4, bandwidth_gbps=0.02)

@@ -40,8 +40,11 @@ from repro.core.metrics import Counter, Gauge, Histogram, Telemetry
 from repro.core.store import ArenaStore, ModelRecord, ModelStore
 from repro.core.scheduler import (
     AsyncProtocol,
+    BufferedAsyncProtocol,
+    DeadlineCohortProtocol,
     LearnerProfile,
     ProtocolPolicy,
+    ReputationProtocol,
     SemiSyncProtocol,
     SyncProtocol,
     TrainTask,
@@ -51,6 +54,7 @@ from repro.core.server_opt import ServerOptimizer, make_server_optimizer
 from repro.core.learner import EvalReport, Learner, LocalUpdate
 from repro.core.engine import (
     AggregateFired,
+    DeadlineExpired,
     Dispatched,
     EngineStopped,
     Evaluated,
@@ -58,6 +62,7 @@ from repro.core.engine import (
     RoundTimings,
     UploadArrived,
 )
+from repro.core.faults import FaultInjector, FaultSpec, FaultyChannel
 from repro.core.controller import Controller
 from repro.core.driver import Driver, FederationEnv, TerminationCriteria
 from repro.core.transport import (
@@ -81,13 +86,15 @@ __all__ = [
     "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
     "ModelRecord", "ModelStore", "ArenaStore",
     "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",
+    "BufferedAsyncProtocol", "DeadlineCohortProtocol", "ReputationProtocol",
     "ProtocolPolicy", "LearnerProfile",
     "SelectionPolicy", "select_learners",
     "ServerOptimizer", "make_server_optimizer",
     "Learner", "LocalUpdate", "EvalReport",
     "Controller", "RoundTimings", "RoundEngine",
     "Dispatched", "UploadArrived", "AggregateFired", "Evaluated",
-    "EngineStopped",
+    "EngineStopped", "DeadlineExpired",
+    "FaultSpec", "FaultInjector", "FaultyChannel",
     "Telemetry", "Counter", "Gauge", "Histogram",
     "EventJournal", "RoundSummary",
     "Driver", "FederationEnv", "TerminationCriteria", "FederationConfig",

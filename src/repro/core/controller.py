@@ -228,6 +228,12 @@ class Controller:
 
         self._learners: dict[str, Learner] = {}
         self._learner_profiles: dict[str, LearnerProfile] = {}
+        # Churn bookkeeping: lid -> round_id at dropout.  Profiles survive
+        # deregistration so a rejoining learner resumes its EWMA histories
+        # (reputation decayed over the absence).
+        self._deregistered_at: dict[str, int] = {}
+        self._c_dropouts = self.telemetry.counter("engine.faults.dropouts")
+        self._c_rejoins = self.telemetry.counter("engine.faults.rejoins")
         self._store_lock = threading.Lock()
 
         self.global_params: Any = None
@@ -337,15 +343,53 @@ class Controller:
         learner.accept_manifest(self.manifest, pad_to=pad_to, channel=self.channel)
 
     def register_learner(self, learner: Learner) -> None:
-        """Admit a learner to the federation (paper Fig. 8 join)."""
-        self._learners[learner.learner_id] = learner
-        self._learner_profiles[learner.learner_id] = LearnerProfile(
-            decay=self.profile_decay
-        )
-        self._learner_versions[learner.learner_id] = 0
+        """Admit a learner to the federation (paper Fig. 8 join).
+
+        A learner rejoining after :meth:`deregister_learner` keeps its
+        accumulated EWMA profile — with the reputation estimate
+        multiplicatively decayed over the rounds it was absent
+        (churn-aware standing; counted in ``engine.faults.rejoins``).
+        """
+        lid = learner.learner_id
+        rejoining = lid in self._deregistered_at
+        self._learners[lid] = learner
+        prof = self._learner_profiles.get(lid)
+        if prof is None:
+            self._learner_profiles[lid] = LearnerProfile(decay=self.profile_decay)
+        elif rejoining:
+            prof.decay_reputation(self.round_id - self._deregistered_at[lid])
+        if rejoining:
+            del self._deregistered_at[lid]
+            self._c_rejoins.add(1)
+        self._learner_versions[lid] = 0
         if self.arena is not None:
-            self.arena.ensure_row(learner.learner_id)
+            self.arena.ensure_row(lid)
         self._ship_manifest(learner)
+
+    def deregister_learner(self, learner_id: str) -> None:
+        """Remove a learner mid-federation (dropout; paper Fig. 8 leave).
+
+        Its store row is invalidated/discarded (a pending contribution
+        leaves the aggregation set), its EWMA profile is *kept* so a rejoin
+        resumes where it left off, and any upload still in flight lands as
+        a tolerated, counted orphan (``engine.uploads.orphaned``) instead
+        of crashing the engine loop.  Unknown ids are a no-op.
+        """
+        if learner_id not in self._learners:
+            return
+        del self._learners[learner_id]
+        self._deregistered_at[learner_id] = int(self.round_id)
+        if self.arena is not None:
+            if learner_id in self.arena._rows:
+                self.arena.invalidate(learner_id)
+        elif self.store_mode == "stack":
+            with self._store_lock:
+                self.store.discard(learner_id)
+        # A buffered (ingested-but-unaggregated) FedBuff member can no
+        # longer contribute: drop it from the pending buffer too.
+        if learner_id in self.engine._buffer:
+            self.engine._buffer.remove(learner_id)
+        self._c_dropouts.add(1)
 
     @property
     def learner_ids(self) -> list[str]:
@@ -409,7 +453,7 @@ class Controller:
             )
             wire_nbytes = getattr(self.channel.upload_codec, "wire_nbytes", None)
             up = wire_nbytes(n) if wire_nbytes is not None else 4 * n
-        return self.channel.round_trip_s(down, int(up))
+        return self.channel.round_trip_s(down, int(up), learner_id=learner_id)
 
     # ---------------------------------------------------------------- ingest
     def _upload_buffer(self, update: LocalUpdate, pad_to: int | None) -> jax.Array:
@@ -640,7 +684,83 @@ class Controller:
         self._commit(new_buffer)
         return time.perf_counter() - t0
 
-    def _secure_community_arena(self, alpha: float) -> jax.Array:
+    def aggregate_buffer(self, members: list[str]) -> float:
+        """One FedBuff community update over exactly the buffered members.
+
+        The continuous buffered-async policy
+        (``BufferedAsyncProtocol``, ``aggregate_scope == "buffer"``) fires
+        this with the K learner ids the engine drained from its arrival
+        buffer: the reduce is restricted to those members' stored rows —
+        staleness-damped like :meth:`aggregate_community`, but *not* over
+        every valid row.  Members are folded in **registration order**
+        (not arrival order), so the reduce is deterministic under any
+        executor interleaving.  Commits the result; returns the seconds.
+        """
+        alpha = getattr(self.protocol, "staleness_alpha", 0.5)
+        wanted = set(members)
+        ordered = [lid for lid in self._learners if lid in wanted]
+        t0 = time.perf_counter()
+        if not ordered:
+            raise RuntimeError("no local models available to aggregate")
+        if self.store_mode == "arena":
+            arena = self.arena
+            with arena.lock:
+                if self.secure:
+                    new_buffer = self._secure_community_arena(
+                        alpha, members=ordered
+                    )
+                else:
+                    if arena.num_valid(ordered) == 0:
+                        raise RuntimeError(
+                            "no local models available to aggregate"
+                        )
+                    mask = arena.round_mask(ordered)
+                    if self._sharded_staleness_fn is not None:
+                        new_buffer = self._sharded_staleness_fn(
+                            arena.buffer, arena.weights, arena.versions,
+                            jnp.float32(self._model_version), mask,
+                        )[: arena.num_params]
+                    else:
+                        new_buffer = aggregation.masked_staleness_average(
+                            arena.buffer, arena.weights, arena.versions,
+                            jnp.float32(self._model_version), mask, alpha,
+                        )[: arena.num_params]
+        else:
+            with self._store_lock:
+                records = self.store.select_latest(ordered)
+            if not records:
+                raise RuntimeError("no local models available to aggregate")
+            if self.secure:
+                from repro.core import secure as secure_mod
+
+                weights = [
+                    float(r.num_examples)
+                    * (1.0 + self._model_version
+                       - r.metadata.get("model_version", 0)) ** (-alpha)
+                    for r in records
+                ]
+                new_buffer = secure_mod.secure_fedavg(
+                    [r.buffer for r in records], weights,
+                    base_seed=self._mask_session_seed(self._model_version),
+                )
+            else:
+                stal = jnp.asarray(
+                    [self._model_version - r.metadata.get("model_version", 0)
+                     for r in records],
+                    jnp.float32,
+                )
+                n_ex = jnp.asarray(
+                    [float(r.num_examples) for r in records], jnp.float32
+                )
+                stack = jnp.stack([r.buffer for r in records], axis=0)
+                w = aggregation.staleness_weights(n_ex, stal, alpha)
+                new_buffer = self.aggregate_fn(stack, w)
+        self._commit(new_buffer)
+        return time.perf_counter() - t0
+
+    def _secure_community_arena(
+        self, alpha: float, members: list[str] | None = None
+    ) -> jax.Array:
         """Secure async update off the arena: staleness-damped masked sum.
 
         Staleness weights are *metadata* (example counts and model-version
@@ -648,13 +768,18 @@ class Controller:
         are computed host-side from the arena's mirrors and folded into the
         fixed-point encoding learner-side, exactly like the FedAvg weights
         of the synchronous secure path.  Mask seeds come from the per-epoch
-        session (one session per global model version).
+        session (one session per global model version).  ``members``
+        restricts the sum to those learners' valid rows (the FedBuff
+        buffered path); ``None`` keeps the community-wide default.
         """
         from repro.core import secure as secure_mod
 
         arena = self.arena
+        valid = arena.valid_ids()
+        ids = [lid for lid in members if lid in set(valid)] \
+            if members is not None else valid
         rows, weights = [], []
-        for lid in arena.valid_ids():
+        for lid in ids:
             row = arena.row_of(lid)
             stale = float(self._model_version) - arena.version_of(lid)
             rows.append(row)
@@ -709,16 +834,25 @@ class Controller:
                 lid: {
                     "decay": prof.decay,
                     "observations": prof.observations,
+                    "rep_observations": prof.rep_observations,
                     "data": jsonable(dict(prof)),
                 }
                 for lid, prof in self._learner_profiles.items()
             },
+            "deregistered_at": {
+                k: int(v) for k, v in self._deregistered_at.items()
+            },
+            "late_carry": list(self.engine._late_carry),
             "journal_cursor": int(self.journal.cursor),
             "protocol": type(self.protocol).__name__,
             "store_mode": self.store_mode,
             "secure": bool(self.secure),
             "telemetry": self.telemetry.snapshot(),
         }
+        if getattr(self.protocol, "continuous", False):
+            meta["pending_buffer"] = list(self.engine._buffer)
+        if self.engine._pending_dispatch is not None:
+            meta["pending_dispatch"] = list(self.engine._pending_dispatch)
         if self.arena is not None:
             st = self.arena.export_state()
             extras["arena_buffer"] = st["buffer"]
@@ -802,8 +936,16 @@ class Controller:
         for lid, saved_prof in meta.get("profiles", {}).items():
             prof = LearnerProfile(decay=float(saved_prof["decay"]))
             prof.observations = int(saved_prof["observations"])
+            prof.rep_observations = int(saved_prof.get("rep_observations", 0))
             prof.update(saved_prof.get("data", {}))
             self._learner_profiles[lid] = prof
+        self._deregistered_at = {
+            k: int(v) for k, v in meta.get("deregistered_at", {}).items()
+        }
+        self.engine._late_carry = list(meta.get("late_carry", []))
+        self.engine._buffer = list(meta.get("pending_buffer", []))
+        if "pending_dispatch" in meta:
+            self.engine._resume_dispatch = list(meta["pending_dispatch"])
         if self.arena is not None and "arena_rows" in meta:
             self.arena.restore_state(
                 buffer=extras["arena_buffer"],

@@ -17,7 +17,14 @@ from repro.core.config import FederationConfig
 from repro.core.controller import Controller
 from repro.core.engine import RoundTimings
 from repro.core.learner import Learner
-from repro.core.scheduler import AsyncProtocol, SemiSyncProtocol, SyncProtocol
+from repro.core.scheduler import (
+    AsyncProtocol,
+    BufferedAsyncProtocol,
+    DeadlineCohortProtocol,
+    ReputationProtocol,
+    SemiSyncProtocol,
+    SyncProtocol,
+)
 from repro.core.selection import SelectionPolicy
 from repro.core.server_opt import make_server_optimizer
 from repro.core.store import ModelStore
@@ -54,7 +61,7 @@ class FederationEnv:
     a ``config`` is passed it wins and the flat fields mirror its values.
     """
 
-    protocol: str = "sync"  # sync | semi_sync | async
+    protocol: str = "sync"  # sync|semi_sync|async|buffered_async|deadline|reputation
     local_steps: int = 1
     batch_size: int = 100
     learning_rate: float = 0.01
@@ -91,6 +98,13 @@ class FederationEnv:
     # Semi-sync only: subtract each learner's modeled round-trip wire time
     # from the hyper-period step budget (wire-cost-aware task sizing).
     wire_aware: bool = True
+    # Buffered-async (FedBuff) only: aggregate every K arrivals.
+    buffer_k: int = 8
+    # Deadline-cohort only: wall-clock budget a cohort member's predicted
+    # round trip must fit inside.
+    deadline_s: float = 1.0
+    # Reputation only: top fraction of ranked learners kept per round.
+    reputation_fraction: float = 0.5
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
@@ -138,6 +152,24 @@ class FederationEnv:
             return AsyncProtocol(
                 self.local_steps, self.batch_size, self.learning_rate,
                 self.staleness_alpha, prox_mu=self.prox_mu,
+            )
+        if self.protocol == "buffered_async":
+            return BufferedAsyncProtocol(
+                buffer_k=self.buffer_k, local_steps=self.local_steps,
+                batch_size=self.batch_size, learning_rate=self.learning_rate,
+                staleness_alpha=self.staleness_alpha, prox_mu=self.prox_mu,
+            )
+        if self.protocol == "deadline":
+            return DeadlineCohortProtocol(
+                deadline_s=self.deadline_s, local_steps=self.local_steps,
+                batch_size=self.batch_size, learning_rate=self.learning_rate,
+                prox_mu=self.prox_mu,
+            )
+        if self.protocol == "reputation":
+            return ReputationProtocol(
+                fraction=self.reputation_fraction,
+                local_steps=self.local_steps, batch_size=self.batch_size,
+                learning_rate=self.learning_rate, prox_mu=self.prox_mu,
             )
         raise ValueError(f"unknown protocol {self.protocol}")
 
@@ -234,7 +266,7 @@ class Driver:
         t_start = time.monotonic()
         history: list[RoundTimings] = []
         engine = self.controller.engine
-        if self.env.protocol == "async":
+        if getattr(self.controller.protocol, "continuous", False):
             history = engine.run(total_updates=self.env.termination.max_rounds)
         else:
             while not self._terminated(t_start, history):

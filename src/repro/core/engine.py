@@ -35,6 +35,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import TYPE_CHECKING, Any
@@ -52,6 +53,7 @@ __all__ = [
     "Dispatched",
     "UploadArrived",
     "AggregateFired",
+    "DeadlineExpired",
     "Evaluated",
     "EngineStopped",
     "RoundEngine",
@@ -109,6 +111,9 @@ class UploadArrived:
 
     update: LocalUpdate | None
     error: BaseException | None = None
+    #: True for the engine-requeued second delivery of a fault-injected
+    #: duplicated upload; duplicates do not consume an outstanding slot.
+    duplicate: bool = False
 
     @property
     def learner_id(self) -> str | None:
@@ -123,6 +128,21 @@ class AggregateFired:
     round_id: int
     n_arrived: int
     trigger: str | None = None  # the arriving learner, for continuous re-dispatch
+    #: Buffered-async (FedBuff) only: the exact learner ids folded into this
+    #: community update (None for round-based / plain-async aggregates).
+    members: tuple | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineExpired:
+    """A round's wall-clock deadline elapsed (DeadlineCohortProtocol).
+
+    Posted by the per-round timer; the loop fires a *partial* aggregate over
+    whatever arrived, and stragglers fold into the next round as late
+    uploads.  Ignored (logged only) when the round already aggregated.
+    """
+
+    round_id: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +178,14 @@ class _RoundState:
     t_round: float  # round start (includes cohort selection)
     t_train: float = 0.0  # dispatch start (the T1 mark train_round_s runs from)
     arrived: int = 0
+    # Cohort members whose upload landed (dispatch order preserved by
+    # iterating `cohort` at aggregation, so stack-mode reduces stay
+    # deterministic); `dropped` holds members that can no longer arrive
+    # (deregistered mid-round / upload lost) — the quorum shrinks to match.
+    arrived_ids: set = dataclasses.field(default_factory=set)
+    dropped: set = dataclasses.field(default_factory=set)
+    aggregated: bool = False
+    deadline_timer: Any = None
 
 
 def reduce_eval(reports: list[EvalReport]) -> dict:
@@ -209,8 +237,26 @@ class RoundEngine:
         self._h_round_s = self.telemetry.histogram("engine.round_s")
         self._h_aggregate_s = self.telemetry.histogram("engine.aggregate_s")
         self._g_round = self.telemetry.gauge("engine.round_id")
+        self._c_orphaned = self.telemetry.counter("engine.uploads.orphaned")
+        self._c_lost = self.telemetry.counter("engine.faults.uploads_lost")
+        self._c_dup = self.telemetry.counter("engine.faults.uploads_duplicated")
+        self._c_late = self.telemetry.counter("engine.faults.uploads_late")
+        self._c_deadline = self.telemetry.counter("engine.faults.deadline_fires")
         self.aggregates_fired = 0  # lifetime AggregateFired count
         self._outstanding = 0  # dispatched-but-not-arrived tasks (loop thread only)
+        # Continuous-policy state that outlives a single run() call (and is
+        # checkpointed): the FedBuff arrival buffer, stragglers owed to the
+        # next round-based aggregate, and the dispatch list a restored
+        # checkpoint owes its first round.
+        self._buffer: list[str] = []
+        self._late_carry: list[str] = []
+        self._resume_dispatch: list[str] | None = None
+        self._pending_dispatch: list[str] | None = None  # set around save_checkpoint
+        # Loop-thread mirror of channel.upload_bytes: advanced as arrivals
+        # are *processed*, so aggregate records carry a deterministic
+        # cumulative uplink total (the raw counter is bumped by executor
+        # workers mid-flight — reading it at fire time would be racy).
+        self._up_bytes_seen = 0
 
     # -- event plumbing -----------------------------------------------------
     def post(self, event: Any) -> None:
@@ -228,11 +274,16 @@ class RoundEngine:
     def _submit(self, lid: str, task: TrainTask, envelope: Any) -> None:
         """Fire-and-forget one task: recv + fit on a worker, post the arrival."""
         c = self.controller
+        # Captured now, not looked up at execution time: a learner
+        # deregistered while its task is in flight still finishes the fit
+        # and its arrival takes the orphaned-upload path, instead of a
+        # KeyError surfacing from the worker.
+        learner = c._learners[lid]
 
         def work() -> None:
             try:
                 params = c.channel.recv(envelope)
-                update = c._learners[lid].fit(params, task)
+                update = learner.fit(params, task)
                 self.post(UploadArrived(update=update))
             except BaseException as exc:  # surfaced on the loop thread
                 self.post(UploadArrived(update=None, error=exc))
@@ -249,7 +300,7 @@ class RoundEngine:
         task = c.protocol.size_task(
             c.round_id, c._learner_profiles[lid], wire_s=c.wire_time_s(lid)
         )
-        envelope = broadcast.to({"task": task})
+        envelope = broadcast.to({"task": task, "learner_id": lid})
         self._submit(lid, task, envelope)
         self._log(
             Dispatched(round_id=c.round_id, learner_id=lid, task=task),
@@ -261,28 +312,60 @@ class RoundEngine:
     def _start_round(self) -> _RoundState:
         """Select the cohort and fan its tasks out (paper T1-T3)."""
         c = self.controller
+        continuous = bool(getattr(c.protocol, "continuous", False))
         state = _RoundState(
             round_id=c.round_id,
             cohort=[],
             timings=RoundTimings(round_id=c.round_id),
             t_round=time.perf_counter(),
         )
+        kwargs: dict[str, Any] = {}
+        if getattr(c.protocol, "needs_profiles", False):
+            # Ranking/predicting policies additionally see the EWMA profiles
+            # and each learner's modeled round-trip wire time.
+            kwargs["profiles"] = c._learner_profiles
+            kwargs["wire_s"] = {lid: c.wire_time_s(lid) for lid in c.learner_ids}
         state.cohort = c.protocol.select_cohort(
             c.selection,
             c.learner_ids,
             c.round_id,
             {lid: ln.num_examples for lid, ln in c._learners.items()},
+            **kwargs,
         )
-        if not state.cohort:
+        if continuous:
+            if self._resume_dispatch is not None:
+                # A restored checkpoint owes exactly the dispatches that were
+                # about to leave when the state was saved.
+                state.cohort = [
+                    lid for lid in self._resume_dispatch if lid in c._learners
+                ]
+                self._resume_dispatch = None
+            else:
+                # Learners already sitting in the FedBuff buffer have an
+                # ingested-but-unaggregated row; re-dispatching them would
+                # overwrite it before it is reduced.
+                buffered = set(self._buffer)
+                state.cohort = [lid for lid in state.cohort if lid not in buffered]
+        if not state.cohort and not self._buffer:
             # An empty cohort would leave the loop waiting on arrivals that
             # can never come — fail loudly instead (mirrors the aggregation
             # path's empty-cohort error).
             raise RuntimeError("no learners selected for dispatch")
         state.t_train = time.perf_counter()
-        broadcast = c._broadcast()
+        broadcast = c._broadcast() if state.cohort else None
         for lid in state.cohort:
             self._dispatch_one(lid, broadcast)
         state.timings.train_dispatch_s = time.perf_counter() - state.t_train
+        deadline = getattr(c.protocol, "deadline_s", None)
+        if (not continuous and deadline is not None
+                and getattr(c.protocol, "enforce_wall_clock", False)):
+            timer = threading.Timer(
+                float(deadline),
+                lambda rid=state.round_id: self.post(DeadlineExpired(round_id=rid)),
+            )
+            timer.daemon = True
+            timer.start()
+            state.deadline_timer = timer
         return state
 
     # -- evaluation ---------------------------------------------------------
@@ -296,7 +379,8 @@ class RoundEngine:
         t0 = time.perf_counter()
         broadcast = c._broadcast()
         futures = []
-        for lid in state.cohort:
+        # Members that deregistered mid-round are skipped, not fatal.
+        for lid in [x for x in state.cohort if x in c._learners]:
             envelope = broadcast.to({"eval": True})
 
             def run(lid=lid, envelope=envelope) -> EvalReport:
@@ -358,15 +442,228 @@ class RoundEngine:
 
         out: list[RoundTimings] = []
         completed = 0
+        state: _RoundState | None = None
 
-        def maybe_checkpoint() -> None:
+        def drain_outstanding() -> None:
+            # Absorb every in-flight arrival into engine state (buffer /
+            # arrived set / late carry) WITHOUT firing aggregates, so the
+            # state written by a checkpoint is quiescent: nothing the golden
+            # run will later fold in depends on an unsaved model version.
+            while self._outstanding > 0:
+                ev = self._events.get()
+                if isinstance(ev, UploadArrived):
+                    handle_upload(ev, fire=False)
+                else:
+                    self._log(ev)
+
+        def maybe_checkpoint(pending: list[str] | None = None) -> None:
             # At a round boundary, before the next dispatch: the saved state
             # has no partial-round arrivals to reconcile on restore.
             if ckpt_every and checkpoint_dir and c.round_id % ckpt_every == 0:
-                c.save_checkpoint(checkpoint_dir)
+                drain_outstanding()
+                self._pending_dispatch = list(pending) if pending is not None else None
+                try:
+                    c.save_checkpoint(checkpoint_dir)
+                finally:
+                    self._pending_dispatch = None
+
+        def fire_round(trigger: str | None, partial: bool = False) -> None:
+            # Round-based aggregate: reduce what arrived (plus carried-over
+            # stragglers), evaluate, advance the round.
+            nonlocal state, completed
+            if state.deadline_timer is not None:
+                state.deadline_timer.cancel()
+                state.deadline_timer = None
+            ctx: dict[str, Any] = dict(
+                weighting=c.protocol.weighting(),
+                model_version=c._model_version,
+                bytes_down=self.telemetry.value("channel.bytes_moved"),
+                bytes_up=self._up_bytes_seen,
+            )
+            if partial:
+                ctx["partial"] = True
+            self._log(
+                AggregateFired(
+                    round_id=state.round_id,
+                    n_arrived=state.arrived,
+                    trigger=trigger,
+                ),
+                **ctx,
+            )
+            self.aggregates_fired += 1
+            state.timings.train_round_s = time.perf_counter() - state.t_train
+            state.timings.aggregation_s = self._aggregate(state)
+            state.aggregated = True
+            self._evaluate(state)
+            state.timings.federation_round_s = time.perf_counter() - state.t_round
+            out.append(state.timings)
+            c.history.append(state.timings)
+            c.round_id += 1
+            completed += 1
+            self._observe_round(state.timings)
+            maybe_checkpoint()
+            if completed < target:
+                state = self._start_round()
+
+        def check_round_progress(trigger: str | None) -> None:
+            # Quorum check for round-based policies after any arrival /
+            # dropout: the effective cohort excludes members that can no
+            # longer deliver, so a shrunken round still completes.
+            if state.aggregated:
+                return
+            effective = len(state.cohort) - len(state.dropped)
+            if effective <= 0:
+                if state.arrived > 0:
+                    fire_round(trigger, partial=True)
+                elif self._outstanding == 0 and self._events.empty():
+                    raise RuntimeError(
+                        "every learner in the cohort dropped out mid-round"
+                    )
+                return
+            if c.protocol.should_aggregate(state.arrived, effective):
+                fire_round(trigger)
+
+        def pump_continuous() -> None:
+            # Continuous aggregate pump: fire while the buffer satisfies the
+            # policy (a post-checkpoint drain may have refilled it).  Plain
+            # async keeps its aggregate-per-arrival semantics (buffer of 1);
+            # FedBuff drains K members into one staleness-weighted update.
+            nonlocal completed
+            while self._buffer and c.protocol.should_aggregate(
+                len(self._buffer), max(1, len(c._learners))
+            ):
+                members = tuple(self._buffer)
+                self._buffer.clear()
+                self._log(
+                    AggregateFired(
+                        round_id=state.round_id,
+                        n_arrived=len(members),
+                        trigger=members[-1],
+                        members=members,
+                    ),
+                    weighting=c.protocol.weighting(),
+                    model_version=c._model_version,
+                    bytes_down=self.telemetry.value("channel.bytes_moved"),
+                    bytes_up=self._up_bytes_seen,
+                )
+                self.aggregates_fired += 1
+                timings = RoundTimings(round_id=c.round_id)
+                timings.aggregation_s = self._aggregate(state, members)
+                timings.federation_round_s = timings.aggregation_s
+                out.append(timings)
+                c.history.append(timings)
+                c.round_id += 1
+                completed += 1
+                self._observe_round(timings)
+                # The members get the fresh model at once (shared broadcast
+                # per model version); checkpointed first so a restored run
+                # owes exactly these dispatches.
+                redisp = [lid for lid in members if lid in c._learners]
+                maybe_checkpoint(pending=redisp)
+                if completed < target:
+                    for lid in redisp:
+                        self._dispatch_one(lid, c._broadcast())
+
+        def handle_upload(event: UploadArrived, fire: bool = True) -> None:
+            nonlocal completed
+            if not event.duplicate:
+                self._outstanding -= 1
+            if event.error is not None:
+                self._log(event)
+                raise event.error
+            lid = event.learner_id
+            up = event.update.upload
+            staleness = c._model_version - c._learner_versions.get(lid, 0)
+            up_bytes = int(up.payload.nbytes) if up is not None else None
+            fault = up.metadata.get("fault") if up is not None else None
+            if up_bytes is not None and not event.duplicate:
+                # A duplicate delivery re-uses the envelope: one wire send.
+                self._up_bytes_seen += up_bytes
+            if lid not in c._learners:
+                # Orphaned: the learner deregistered (dropped out) while its
+                # task was in flight.  Tolerated and counted, never fatal.
+                self._c_orphaned.add(1)
+                self._log(event, staleness=staleness, up_bytes=up_bytes,
+                          orphaned=True)
+                prof = c._learner_profiles.get(lid)
+                if prof is not None:
+                    prof.observe_contribution(0.0)
+                if not continuous and not state.aggregated:
+                    if lid in state.cohort and lid not in state.arrived_ids:
+                        state.dropped.add(lid)
+                    if fire:
+                        check_round_progress(lid)
+                return
+            if fault == "lost":
+                # The uplink dropped the payload: nothing to ingest.
+                self._c_lost.add(1)
+                self._log(event, staleness=staleness, up_bytes=up_bytes,
+                          lost=True)
+                prof = c._learner_profiles.get(lid)
+                if prof is not None:
+                    prof.observe_contribution(0.0)
+                if continuous:
+                    if fire and completed < target:
+                        self._dispatch_one(lid, c._broadcast())  # retry a leg
+                elif not state.aggregated:
+                    if lid in state.cohort and lid not in state.arrived_ids:
+                        state.dropped.add(lid)
+                    if fire:
+                        check_round_progress(lid)
+                return
+            ctx: dict[str, Any] = {"staleness": staleness, "up_bytes": up_bytes}
+            if event.duplicate:
+                ctx["duplicate"] = True
+            self._log(event, **ctx)
+            if up is None and not event.duplicate:
+                # Legacy envelope-less update: ingest runs the measured
+                # upload half itself, on this thread — mirror its bytes.
+                before = self.telemetry.value("channel.upload_bytes")
+                c.ingest(event.update)
+                self._up_bytes_seen += int(
+                    self.telemetry.value("channel.upload_bytes") - before
+                )
+            else:
+                c.ingest(event.update)
+            if not event.duplicate:
+                prof = c._learner_profiles.get(lid)
+                if prof is not None:
+                    prof.observe_contribution(1.0)
+            if fault == "dup" and not event.duplicate:
+                # The uplink delivered twice: the second copy is handled
+                # inline, right after the first — posting it through the
+                # queue would interleave with worker arrivals and make
+                # journal order timing-dependent.
+                self._c_dup.add(1)
+                handle_upload(
+                    dataclasses.replace(event, duplicate=True), fire=fire
+                )
+            if continuous:
+                if lid not in self._buffer:
+                    self._buffer.append(lid)
+                if fire:
+                    pump_continuous()
+                return
+            if int(event.update.round_id) < c.round_id or state.aggregated:
+                # Straggler from an already-aggregated round (deadline fired
+                # without it): folded into the next round's reduce.
+                self._c_late.add(1)
+                if lid not in self._late_carry:
+                    self._late_carry.append(lid)
+                if fire and not state.aggregated:
+                    check_round_progress(lid)  # deadlock check, never a count
+                return
+            if lid in state.cohort and lid not in state.arrived_ids:
+                state.arrived_ids.add(lid)
+                state.arrived += 1
+            if fire:
+                check_round_progress(lid)
 
         try:
             state = self._start_round()
+            if continuous:
+                # A restored FedBuff buffer may already satisfy the policy.
+                pump_continuous()
             # One loop for every workflow: pop an event, mutate round state,
             # let the policy decide what fires next.  Terminates when the
             # target is met AND nothing is in flight or queued.
@@ -374,80 +671,26 @@ class RoundEngine:
                    or not self._events.empty()):
                 event = self._events.get()
                 if isinstance(event, UploadArrived):
-                    self._outstanding -= 1
-                    if event.error is not None:
+                    handle_upload(event)
+                elif isinstance(event, DeadlineExpired):
+                    if (not continuous and not state.aggregated
+                            and event.round_id == state.round_id
+                            and state.arrived > 0):
+                        self._c_deadline.add(1)
                         self._log(event)
-                        raise event.error
-                    up = event.update.upload
-                    self._log(
-                        event,
-                        staleness=(
-                            c._model_version
-                            - c._learner_versions.get(event.learner_id, 0)
-                        ),
-                        up_bytes=(
-                            int(up.payload.nbytes) if up is not None else None
-                        ),
-                    )
-                    c.ingest(event.update)
-                    state.arrived += 1
-                    if c.protocol.should_aggregate(state.arrived, len(state.cohort)):
-                        self.post(
-                            AggregateFired(
-                                round_id=state.round_id,
-                                n_arrived=state.arrived,
-                                trigger=event.learner_id,
-                            )
-                        )
-                        if continuous:
-                            state.arrived = 0
-                elif isinstance(event, AggregateFired):
-                    self._log(
-                        event,
-                        weighting=c.protocol.weighting(),
-                        model_version=c._model_version,
-                        bytes_down=self.telemetry.value("channel.bytes_moved"),
-                        bytes_up=self.telemetry.value("channel.upload_bytes"),
-                    )
-                    self.aggregates_fired += 1
-                    if continuous:
-                        timings = RoundTimings(round_id=c.round_id)
-                        timings.aggregation_s = self._aggregate(state)
-                        timings.federation_round_s = timings.aggregation_s
-                        out.append(timings)
-                        c.history.append(timings)
-                        c.round_id += 1
-                        completed += 1
-                        self._observe_round(timings)
-                        maybe_checkpoint()
-                        if completed < target and event.trigger is not None:
-                            # The paper's async loop: the arriving learner
-                            # gets the fresh model at once (shared broadcast
-                            # per model version).
-                            self._dispatch_one(event.trigger, c._broadcast())
-                    else:
-                        state.timings.train_round_s = (
-                            time.perf_counter() - state.t_train
-                        )
-                        state.timings.aggregation_s = self._aggregate(state)
-                        self._evaluate(state)
-                        state.timings.federation_round_s = (
-                            time.perf_counter() - state.t_round
-                        )
-                        out.append(state.timings)
-                        c.history.append(state.timings)
-                        c.round_id += 1
-                        completed += 1
-                        self._observe_round(state.timings)
-                        maybe_checkpoint()
-                        if completed < target:
-                            state = self._start_round()
+                        fire_round(trigger=None, partial=True)
+                    else:  # stale timer (round already aggregated): log only
+                        self._log(event)
                 else:  # externally posted / unknown events: logged, not fatal
                     self._log(event)
         except BaseException as exc:
+            if state is not None and state.deadline_timer is not None:
+                state.deadline_timer.cancel()
             self._abort()
             self._log(EngineStopped(completed=completed, error=repr(exc)))
             raise
+        if state is not None and state.deadline_timer is not None:
+            state.deadline_timer.cancel()
         self._log(EngineStopped(completed=completed))
         return out
 
@@ -457,18 +700,33 @@ class RoundEngine:
         self._h_aggregate_s.observe(timings.aggregation_s)
         self._g_round.set(self.controller.round_id)
 
-    def _aggregate(self, state: _RoundState) -> float:
+    def _take_late(self) -> list[str]:
+        """Consume the stragglers owed to the next round-based aggregate."""
+        late, self._late_carry = self._late_carry, []
+        return late
+
+    def _aggregate(self, state: _RoundState, members: tuple | None = None) -> float:
         """Reduce per the policy's weighting hook; returns the agg seconds.
 
-        ``"staleness"`` aggregates every valid stored model with
-        staleness-damped weights (the continuous/community semantics,
-        secure or clear); anything else is the cohort FedAvg / secure-sum
-        round reduce.
+        ``aggregate_scope == "buffer"`` (FedBuff) reduces exactly the
+        buffered ``members``; ``"staleness"`` aggregates every valid stored
+        model with staleness-damped weights (the continuous/community
+        semantics, secure or clear); anything else is the cohort FedAvg /
+        secure-sum round reduce over the members that actually arrived,
+        plus any stragglers carried over from a deadline-expired round.
         """
         c = self.controller
+        if getattr(c.protocol, "aggregate_scope", None) == "buffer":
+            return c.aggregate_buffer(list(members or ()))
         if c.protocol.weighting() == "staleness":
             return c.aggregate_community()
-        return c.aggregate_round(state.cohort)
+        live = [lid for lid in state.cohort if lid in state.arrived_ids]
+        seen = set(live)
+        extras = [
+            lid for lid in self._take_late()
+            if lid not in seen and lid in c._learners
+        ]
+        return c.aggregate_round(live + extras)
 
     def _abort(self) -> None:
         """Leave the engine re-runnable after an error escapes the loop.
@@ -476,11 +734,12 @@ class RoundEngine:
         Blocks until every dispatched-but-unarrived task posts (exactly the
         barrier the legacy ``wait(futures)`` error path provided), then
         discards whatever is left in the queue — stale arrivals or pending
-        ``AggregateFired`` events must not leak into a later ``run()``'s
-        round accounting.
+        duplicate deliveries must not leak into a later ``run()``'s round
+        accounting.
         """
         while self._outstanding > 0:
-            if isinstance(self._events.get(), UploadArrived):
+            ev = self._events.get()
+            if isinstance(ev, UploadArrived) and not ev.duplicate:
                 self._outstanding -= 1
         while not self._events.empty():
             self._events.get_nowait()

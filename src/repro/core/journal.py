@@ -330,12 +330,17 @@ def _serialize_event(event: Any) -> dict:
             "num_examples": int(u.num_examples),
         }
     if name == "AggregateFired":
-        return {
+        out = {
             "kind": "aggregate",
             "round": int(event.round_id),
             "n_arrived": int(event.n_arrived),
             "trigger": event.trigger,
         }
+        if getattr(event, "members", None):
+            out["members"] = list(event.members)
+        return out
+    if name == "DeadlineExpired":
+        return {"kind": "deadline", "round": int(event.round_id)}
     if name == "Evaluated":
         return {
             "kind": "evaluate",

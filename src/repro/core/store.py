@@ -153,6 +153,10 @@ class ModelStore:
         """Oldest-to-newest stored history for one learner (may be empty)."""
         return list(self._records.get(learner_id, []))
 
+    def discard(self, learner_id: str) -> None:
+        """Drop a learner's entire stored lineage (no-op if unknown)."""
+        self._records.pop(learner_id, None)
+
     def select_latest(self, learner_ids: list[str] | None = None) -> list[ModelRecord]:
         """The controller's 'model selection' step before aggregation."""
         ids = learner_ids if learner_ids is not None else list(self._records)

@@ -357,7 +357,9 @@ class Broadcast:
         md = dict(self._metadata)
         if metadata:
             md.update(metadata)
-        self._channel._account_send(int(self.buffer.nbytes))
+        self._channel._account_send(
+            int(self.buffer.nbytes), md.get("learner_id")
+        )
         with self._lock:
             self.recipients += 1
         return Envelope(buffer=self.buffer, manifest=self.manifest, metadata=md)
@@ -390,6 +392,7 @@ class Channel:
     ):
         self.bandwidth_gbps = bandwidth_gbps
         self.latency_ms = latency_ms
+        self.learner_bandwidth_gbps: dict[str, float] = {}
         self.codec = quantize_codec
         self.upload_codec = get_upload_codec(upload_codec)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
@@ -399,11 +402,27 @@ class Channel:
         self.stats = ChannelStats(self.telemetry)
         self._stats_lock = threading.Lock()
 
-    # -- accounting ---------------------------------------------------------
-    def _wire_time(self, nbytes: int) -> float:
-        return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_gbps * 1e9)
+    def set_learner_bandwidth(self, learner_id: str, gbps: float) -> None:
+        """Cap one learner's modeled bandwidth (both wire halves).
 
-    def round_trip_s(self, down_nbytes: int, up_nbytes: int) -> float:
+        Sends and uploads stamped with that ``learner_id`` charge virtual
+        wire time against the per-learner cap instead of the channel-wide
+        ``bandwidth_gbps``; the stress harness uses this to model
+        heterogeneous last-mile links.  Idempotent; purely virtual.
+        """
+        if gbps <= 0:
+            raise ValueError(f"bandwidth cap must be positive, got {gbps}")
+        self.learner_bandwidth_gbps[learner_id] = float(gbps)
+
+    # -- accounting ---------------------------------------------------------
+    def _wire_time(self, nbytes: int, learner_id: str | None = None) -> float:
+        gbps = self.learner_bandwidth_gbps.get(learner_id, self.bandwidth_gbps)
+        return self.latency_ms / 1e3 + nbytes * 8 / (gbps * 1e9)
+
+    def round_trip_s(
+        self, down_nbytes: int, up_nbytes: int,
+        learner_id: str | None = None,
+    ) -> float:
         """Modeled round-trip wire time for one dispatch + one upload.
 
         The per-learner estimate the wire-cost-aware semi-sync sizing
@@ -413,13 +432,14 @@ class Channel:
         Purely virtual — it never sleeps, exactly like the per-send
         ``ChannelStats`` accounting it mirrors.
         """
-        return self._wire_time(int(down_nbytes)) + self._wire_time(int(up_nbytes))
+        return (self._wire_time(int(down_nbytes), learner_id)
+                + self._wire_time(int(up_nbytes), learner_id))
 
-    def _account_send(self, nbytes: int) -> None:
+    def _account_send(self, nbytes: int, learner_id: str | None = None) -> None:
         with self._stats_lock:
             self._c["messages"].add(1)
             self._c["bytes_moved"].add(nbytes)
-            self._c["virtual_wire_s"].add(self._wire_time(nbytes))
+            self._c["virtual_wire_s"].add(self._wire_time(nbytes, learner_id))
 
     def _account_serialize(self, dt: float) -> None:
         with self._stats_lock:
@@ -519,7 +539,9 @@ class Channel:
             self._c["upload_serialize_s"].add(dt)
             self._c["upload_messages"].add(1)
             self._c["upload_bytes"].add(nbytes)
-            self._c["upload_virtual_wire_s"].add(self._wire_time(nbytes))
+            self._c["upload_virtual_wire_s"].add(
+                self._wire_time(nbytes, (metadata or {}).get("learner_id"))
+            )
         return UploadEnvelope(
             codec=c.codec_id, payload=payload, num_elements=n,
             metadata=dict(metadata or {}), codec_params=_codec_params(c),

@@ -1,0 +1,1 @@
+"""Scale-out stress harness package (``from stress.harness import ...``)."""

@@ -1,0 +1,235 @@
+"""Thousand-learner stress harness: a SimLearner fleet under injected faults.
+
+``run_stress`` drives one real ``RoundEngine.run`` federation — real
+controller, real measured transport, real journal — with simulated
+learners that never train: ``SimLearner.fit`` fabricates a deterministic
+update row and a fault-injected step time instead of running an optimizer,
+so a single process pushes 1000+ learners through churn, upload loss /
+duplication, stragglers, and per-learner bandwidth caps in seconds.
+
+Determinism contract (``--fault-seed``): every stochastic choice comes
+from ``core/faults.FaultInjector`` (seeded per decision), the engine runs
+one dispatch worker, and the journal gets a counter clock — so two runs
+with the same spec emit **byte-identical** journal JSONL
+(``tests/stress/test_stress.py`` pins this; ``docs/STRESS.md`` documents
+the knobs and the emitted JSON row).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+import math
+import time
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AsyncProtocol,
+    BufferedAsyncProtocol,
+    Controller,
+    DeadlineCohortProtocol,
+    EvalReport,
+    EventJournal,
+    FaultInjector,
+    FaultSpec,
+    FaultyChannel,
+    Learner,
+    LocalUpdate,
+    ReputationProtocol,
+    SemiSyncProtocol,
+    SyncProtocol,
+    Telemetry,
+)
+
+__all__ = ["SimLearner", "run_stress", "STRESS_PROTOCOLS"]
+
+# The protocols the nightly --stress arm sweeps.
+STRESS_PROTOCOLS = (
+    "sync", "semi_sync", "async", "buffered_async", "deadline", "reputation",
+)
+
+_FAULT_COUNTERS = (
+    "orphaned", "uploads_lost", "uploads_duplicated", "uploads_late",
+    "deadline_fires", "dropouts", "rejoins", "stragglers",
+)
+
+
+class SimLearner(Learner):
+    """A learner that fabricates updates instead of training.
+
+    ``fit`` ignores the received params entirely: it reports a
+    fault-injected seconds-per-step (virtual — it never sleeps), builds a
+    deterministic update row keyed on ``(learner_id, round_id)``, and
+    ships it through the measured channel uplink like a real learner —
+    so transport accounting, ingest, aggregation, and the journal all see
+    authentic traffic at zero training cost.
+    """
+
+    def __init__(self, learner_id: str, injector: FaultInjector,
+                 num_examples: int = 16):
+        """A simulated learner bound to one fault injector."""
+        super().__init__(
+            learner_id, loss_fn=None, eval_fn=None, data_fn=None,
+            eval_data_fn=None, optimizer=None, num_examples=num_examples,
+        )
+        self._injector = injector
+
+    def fit(self, params, task) -> LocalUpdate:
+        """Fabricate one deterministic update for this (learner, round)."""
+        rid = int(task.round_id)
+        sps = self._injector.step_time(self.learner_id, rid)
+        value = (
+            zlib.crc32(f"{self.learner_id}:{rid}".encode()) % 100_000
+        ) / 100_000.0
+        width = self._upload_pad
+        row = np.full((width,), np.float32(value), dtype=np.float32)
+        upload = self._channel.upload(
+            row,
+            metadata={"learner_id": self.learner_id, "round_id": rid},
+        )
+        return LocalUpdate(
+            learner_id=self.learner_id,
+            round_id=rid,
+            params=None,
+            num_examples=self.num_examples,
+            metrics={"train_loss": value, "local_steps": task.local_steps},
+            seconds_per_step=sps,
+            upload=upload,
+        )
+
+    def evaluate(self, params, round_id: int) -> EvalReport:
+        """A constant eval report (evaluation cost is not under test)."""
+        return EvalReport(
+            learner_id=self.learner_id, round_id=int(round_id),
+            metrics={"eval_loss": 0.0}, num_examples=self.num_examples,
+        )
+
+
+def _make_protocol(name: str, learners: int, buffer_k: int | None,
+                   deadline_s: float):
+    """The policy instance one stress arm runs (deterministic variants)."""
+    if name == "sync":
+        return SyncProtocol(local_steps=1, batch_size=8)
+    if name == "semi_sync":
+        return SemiSyncProtocol(hyperperiod_s=0.05, batch_size=8,
+                                default_steps=1)
+    if name == "async":
+        return AsyncProtocol(local_steps=1, batch_size=8)
+    if name == "buffered_async":
+        # Default K stays strictly below the fleet: upload fates are
+        # per-(learner, round), so a buffer that needs *every* learner can
+        # never fill once one upload is deterministically lost that round.
+        k = buffer_k if buffer_k is not None else max(1, min(16, learners - 1))
+        return BufferedAsyncProtocol(buffer_k=k, local_steps=1, batch_size=8)
+    if name == "deadline":
+        # Wall-clock timers are real time — the one nondeterminism the
+        # byte-identity contract cannot absorb — so the stress arm runs
+        # the deadline policy on predicted cohorts only.
+        return DeadlineCohortProtocol(deadline_s=deadline_s, local_steps=1,
+                                      batch_size=8, enforce_wall_clock=False)
+    if name == "reputation":
+        return ReputationProtocol(fraction=0.5, local_steps=1, batch_size=8)
+    raise ValueError(f"unknown stress protocol {name!r}")
+
+
+def run_stress(
+    protocol: str = "sync",
+    learners: int = 64,
+    rounds: int = 3,
+    spec: FaultSpec | None = None,
+    journal_path: str | None = None,
+    model_params: int = 64,
+    buffer_k: int | None = None,
+    deadline_s: float = 0.05,
+) -> dict:
+    """One deterministic stress run; returns the bench JSON row.
+
+    Builds a ``learners``-sized SimLearner fleet on a fault-stamping
+    channel, applies per-round churn from ``spec`` between engine runs,
+    and drives ``rounds`` federation rounds (round-based policies) or the
+    equivalent number of community-update batches (continuous policies).
+    The returned row carries uploads/sec, rounds/sec, the staleness
+    histogram, every ``engine.faults.*`` counter, and — when
+    ``journal_path`` is given — the journal JSONL's sha256.
+    """
+    spec = spec if spec is not None else FaultSpec()
+    if journal_path is not None:
+        # The journal sink appends (flight-recorder semantics); a stress
+        # row's JSONL must cover exactly this run, so start clean.
+        open(journal_path, "w", encoding="utf-8").close()
+    telemetry = Telemetry()
+    injector = FaultInjector(spec, telemetry=telemetry)
+    channel = FaultyChannel(injector, telemetry=telemetry)
+    counter = itertools.count()
+    journal = EventJournal(
+        capacity=1 << 17, sink=journal_path,
+        clock=lambda: float(next(counter)),
+    )
+    proto = _make_protocol(protocol, learners, buffer_k, deadline_s)
+    ctrl = Controller(
+        protocol=proto, channel=channel, store_mode="arena",
+        arena_n_max=learners, max_dispatch_workers=1, journal=journal,
+    )
+    ctrl.set_initial_model(
+        {"w": jnp.zeros((model_params,), jnp.float32)}
+    )
+    fleet = {
+        f"l{i:04d}": SimLearner(f"l{i:04d}", injector)
+        for i in range(learners)
+    }
+    for lid, learner in fleet.items():
+        cap = injector.bandwidth_cap(lid)
+        if cap is not None:
+            channel.set_learner_bandwidth(lid, cap)
+        ctrl.register_learner(learner)
+
+    continuous = bool(getattr(proto, "continuous", False))
+    k = getattr(proto, "buffer_k", 1)
+    updates_per_round = max(1, math.ceil(learners / max(1, k)))
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        if r > 0:
+            leave, rejoin = injector.churn(r, sorted(ctrl._learners))
+            for lid in leave:
+                ctrl.deregister_learner(lid)
+            for lid in rejoin:
+                ctrl.register_learner(fleet[lid])
+        if continuous:
+            ctrl.engine.run(total_updates=updates_per_round)
+        else:
+            ctrl.engine.run(rounds=1)
+    wall_s = time.perf_counter() - t0
+    ctrl.shutdown()
+
+    staleness_hist: dict[str, int] = {}
+    for rec in journal.records():
+        if rec.get("kind") == "upload" and "staleness" in rec:
+            key = str(int(rec["staleness"]))
+            staleness_hist[key] = staleness_hist.get(key, 0) + 1
+    uploads = int(telemetry.value("channel.upload_messages"))
+    aggregates = int(ctrl.engine.aggregates_fired)
+    row = {
+        "protocol": protocol,
+        "learners": learners,
+        "rounds": rounds,
+        "fault_seed": spec.seed,
+        "wall_s": wall_s,
+        "uploads": uploads,
+        "uploads_per_s": uploads / wall_s if wall_s > 0 else 0.0,
+        "aggregates": aggregates,
+        "rounds_per_s": aggregates / wall_s if wall_s > 0 else 0.0,
+        "staleness_hist": dict(sorted(staleness_hist.items())),
+        "faults": {
+            name: int(telemetry.value(f"engine.faults.{name}"))
+            if name != "orphaned"
+            else int(telemetry.value("engine.uploads.orphaned"))
+            for name in _FAULT_COUNTERS
+        },
+    }
+    if journal_path is not None:
+        with open(journal_path, "rb") as fh:
+            row["journal_sha256"] = hashlib.sha256(fh.read()).hexdigest()
+    return row

@@ -1,0 +1,78 @@
+"""Stress-harness fast lane: small fleets, churn on, determinism pinned.
+
+``pytest -m stress_smoke`` runs these in seconds; the 1000-learner sweep
+is the nightly ``bench_round.py --stress`` arm.  The determinism test is
+the seeding contract's acceptance pin: two runs with the same fault seed
+emit **byte-identical** journal JSONL.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import FaultSpec
+
+from stress.harness import STRESS_PROTOCOLS, run_stress
+
+CHAOS = FaultSpec(
+    seed=7,
+    dropout_rate=0.1,
+    rejoin_rate=0.5,
+    upload_loss_rate=0.05,
+    upload_dup_rate=0.05,
+    straggler_rate=0.2,
+    bandwidth_min_gbps=0.05,
+    bandwidth_max_gbps=10.0,
+)
+
+
+@pytest.mark.stress_smoke
+@pytest.mark.parametrize("protocol", STRESS_PROTOCOLS)
+def test_smoke_fleet_survives_churn(protocol, tmp_path):
+    row = run_stress(
+        protocol=protocol, learners=48, rounds=3, spec=CHAOS,
+        journal_path=str(tmp_path / "journal.jsonl"),
+    )
+    assert row["protocol"] == protocol
+    assert row["uploads"] > 0 and row["uploads_per_s"] > 0
+    assert row["aggregates"] > 0 and row["rounds_per_s"] > 0
+    assert row["staleness_hist"], "upload records must carry staleness"
+    faults = row["faults"]
+    assert faults["dropouts"] > 0, "churn was configured on"
+    assert faults["uploads_lost"] + faults["uploads_duplicated"] > 0
+    assert len(row["journal_sha256"]) == 64
+
+
+@pytest.mark.stress_smoke
+@pytest.mark.parametrize("protocol", ["sync", "async", "buffered_async"])
+def test_same_fault_seed_is_byte_identical(protocol, tmp_path):
+    a_path = str(tmp_path / "a.jsonl")
+    b_path = str(tmp_path / "b.jsonl")
+    a = run_stress(protocol=protocol, learners=24, rounds=3, spec=CHAOS,
+                   journal_path=a_path)
+    b = run_stress(protocol=protocol, learners=24, rounds=3, spec=CHAOS,
+                   journal_path=b_path)
+    with open(a_path, "rb") as fa, open(b_path, "rb") as fb:
+        assert fa.read() == fb.read()
+    assert a["journal_sha256"] == b["journal_sha256"]
+    assert a["uploads"] == b["uploads"]
+    assert a["staleness_hist"] == b["staleness_hist"]
+
+
+@pytest.mark.stress_smoke
+def test_different_fault_seeds_diverge(tmp_path):
+    a = run_stress(protocol="sync", learners=24, rounds=3, spec=CHAOS,
+                   journal_path=str(tmp_path / "a.jsonl"))
+    other = dataclasses.replace(CHAOS, seed=8)
+    b = run_stress(protocol="sync", learners=24, rounds=3, spec=other,
+                   journal_path=str(tmp_path / "b.jsonl"))
+    assert a["journal_sha256"] != b["journal_sha256"]
+
+
+@pytest.mark.stress_smoke
+def test_faultless_spec_runs_clean(tmp_path):
+    row = run_stress(protocol="sync", learners=16, rounds=2,
+                     spec=FaultSpec(seed=0),
+                     journal_path=str(tmp_path / "journal.jsonl"))
+    assert row["uploads"] == 32  # every learner, every round, no faults
+    assert all(v == 0 for v in row["faults"].values())

@@ -3,7 +3,11 @@
 The tentpole's acceptance contract: a federation killed at a checkpointed
 round boundary and resumed on a freshly constructed controller must produce
 a **bit-identical** global model to the uninterrupted run — across the full
-protocol × store grid (sync / semi-sync / async × arena / stack).
+protocol × store grid (sync / semi-sync / async / buffered-async FedBuff /
+deadline cohorts / reputation × arena / stack).  The FedBuff rows resume
+through a *partially filled* arrival buffer: the checkpoint carries
+``pending_buffer`` (drained in-flight arrivals) and ``pending_dispatch``
+(learners to re-dispatch), which the fresh engine replays.
 
 Determinism preconditions the harness supplies (and the docs document):
 
@@ -26,8 +30,11 @@ import pytest
 
 from repro.core import (
     AsyncProtocol,
+    BufferedAsyncProtocol,
     Controller,
+    DeadlineCohortProtocol,
     Learner,
+    ReputationProtocol,
     SemiSyncProtocol,
     SyncProtocol,
 )
@@ -60,7 +67,28 @@ def _protocol(name):
     if name == "semi_sync":
         return SemiSyncProtocol(hyperperiod_s=0.05, batch_size=8,
                                 default_steps=2)
+    if name == "buffered_async":
+        return BufferedAsyncProtocol(buffer_k=2, local_steps=2, batch_size=8)
+    if name == "deadline":
+        # wall-clock deadline timers off: predicted cohorts only, so the
+        # resumed run sees the same cohorts as the golden run
+        return DeadlineCohortProtocol(deadline_s=1e6, local_steps=2,
+                                      batch_size=8, enforce_wall_clock=False)
+    if name == "reputation":
+        return ReputationProtocol(fraction=1.0, local_steps=2, batch_size=8)
     return AsyncProtocol(local_steps=2, batch_size=8)
+
+
+# FedBuff interleaving (which K arrivals fill the buffer) is arrival-order
+# dependent: pin one dispatch worker so golden and resumed runs interleave
+# identically.
+_CONTINUOUS = ("async", "buffered_async")
+
+
+def _extra(proto_name):
+    if proto_name == "buffered_async":
+        return {"max_dispatch_workers": 1}
+    return {}
 
 
 def _build(proto_name, store_mode, n, secure=False, **kwargs):
@@ -73,7 +101,7 @@ def _build(proto_name, store_mode, n, secure=False, **kwargs):
 
 
 def _run(ctrl, proto_name, k):
-    if proto_name == "async":
+    if proto_name in _CONTINUOUS:
         return ctrl.engine.run(total_updates=k)
     return ctrl.engine.run(rounds=k)
 
@@ -85,6 +113,11 @@ GRID = [
     ("semi_sync", "stack", 2),
     ("async", "arena", 1),
     ("async", "stack", 1),
+    ("buffered_async", "arena", 3),
+    ("buffered_async", "stack", 3),
+    ("deadline", "arena", 3),
+    ("deadline", "stack", 3),
+    ("reputation", "arena", 3),
 ]
 
 
@@ -92,7 +125,7 @@ GRID = [
                          ids=[f"{p}-{s}" for p, s, _ in GRID])
 def test_kill_and_resume_bit_identical(proto, store_mode, n, tmp_path):
     # golden: 4 uninterrupted rounds / community updates
-    golden = _build(proto, store_mode, n)
+    golden = _build(proto, store_mode, n, **_extra(proto))
     _run(golden, proto, 4)
     want = np.asarray(golden.global_buffer)
     want_version = golden._model_version
@@ -101,12 +134,12 @@ def test_kill_and_resume_bit_identical(proto, store_mode, n, tmp_path):
     # interrupted: checkpoint at round 2, then "kill" the process
     ckpt = str(tmp_path / "ckpt")
     first = _build(proto, store_mode, n,
-                   checkpoint_dir=ckpt, checkpoint_every=2)
+                   checkpoint_dir=ckpt, checkpoint_every=2, **_extra(proto))
     _run(first, proto, 2)
     first.shutdown()
 
     # resume on a *fresh* controller (new stores, new learners, new engine)
-    resumed = _build(proto, store_mode, n)
+    resumed = _build(proto, store_mode, n, **_extra(proto))
     meta = resumed.restore(ckpt)
     assert meta["round_id"] == 2
     assert resumed.round_id == 2
@@ -136,6 +169,42 @@ def test_secure_sync_resume_bit_identical(tmp_path):
     resumed = _build("sync", "arena", 2, secure=True)
     resumed.restore(ckpt)
     _run(resumed, "sync", 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fedbuff_mid_buffer_kill_and_resume(tmp_path):
+    """Kill with a partially filled FedBuff buffer; resume must replay it.
+
+    n=3, K=2, one dispatch worker: community update #1 aggregates the first
+    two arrivals while the third learner's upload is still in flight and
+    the first two have been re-dispatched.  A checkpoint taken there must
+    carry that exact intermediate state — the drained in-flight arrival in
+    ``pending_buffer`` and the re-dispatched learners in
+    ``pending_dispatch`` — and a fresh controller resuming from it must
+    finish bit-identically to the uninterrupted run.
+    """
+    proto, store_mode, n = "buffered_async", "arena", 3
+
+    golden = _build(proto, store_mode, n, max_dispatch_workers=1)
+    _run(golden, proto, 4)
+    want = np.asarray(golden.global_buffer)
+    golden.shutdown()
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build(proto, store_mode, n, checkpoint_dir=ckpt,
+                   checkpoint_every=1, max_dispatch_workers=1)
+    _run(first, proto, 1)
+    first.shutdown()
+
+    resumed = _build(proto, store_mode, n, max_dispatch_workers=1)
+    meta = resumed.restore(ckpt)
+    # the kill point: agg #1 took (l0, l1); l2's arrival was drained into
+    # the buffer and l0, l1 were already re-dispatched
+    assert meta["pending_buffer"] == ["l2"]
+    assert meta["pending_dispatch"] == ["l0", "l1"]
+    _run(resumed, proto, 3)
     got = np.asarray(resumed.global_buffer)
     resumed.shutdown()
     np.testing.assert_array_equal(got, want)

@@ -101,6 +101,22 @@ def test_env_config_wins_and_mirrors_to_aliases():
     assert proto.size_task(0, {}).prox_mu == 0.5
 
 
+def test_env_make_protocol_reaches_every_policy():
+    from repro.core import (
+        BufferedAsyncProtocol,
+        DeadlineCohortProtocol,
+        ReputationProtocol,
+    )
+
+    proto = FederationEnv(protocol="buffered_async", buffer_k=5).make_protocol()
+    assert isinstance(proto, BufferedAsyncProtocol) and proto.buffer_k == 5
+    proto = FederationEnv(protocol="deadline", deadline_s=2.5).make_protocol()
+    assert isinstance(proto, DeadlineCohortProtocol) and proto.deadline_s == 2.5
+    proto = FederationEnv(
+        protocol="reputation", reputation_fraction=0.25).make_protocol()
+    assert isinstance(proto, ReputationProtocol) and proto.fraction == 0.25
+
+
 def test_env_flat_validation_now_rejects_typos():
     with pytest.raises(ValueError, match="store_mode"):
         FederationEnv(store_mode="hashmap")

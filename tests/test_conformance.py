@@ -1,7 +1,8 @@
 """Protocol × store × upload-codec conformance matrix.
 
 Every future transport or engine change runs this whole grid: {sync,
-semi-sync, async, secure, secure async} × {arena, stack, sharded arena under
+semi-sync, async, secure, secure async, buffered async (FedBuff), deadline
+cohorts, reputation} × {arena, stack, sharded arena under
 8 forced host devices} × {raw, int8 upload codec}, each arm driven through
 the event-driven round engine (``engine.run`` — the only loop there is) and
 compared against a learner-side *replay reference* that re-runs the exact
@@ -34,7 +35,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AsyncProtocol, Controller, Learner, SemiSyncProtocol, SyncProtocol,
+    AsyncProtocol, BufferedAsyncProtocol, Controller, DeadlineCohortProtocol,
+    Learner, ReputationProtocol, SemiSyncProtocol, SyncProtocol,
     aggregation, naive, packing,
 )
 from repro.core import secure as secure_mod
@@ -96,6 +98,29 @@ _CASES = {
         proto=lambda: AsyncProtocol(local_steps=2, batch_size=16),
         n=1, rounds=0, updates=3, secure=True,
     ),
+    # FedBuff with K == n and one community update: every buffered row has
+    # staleness 0, so the staleness-damped buffered reduce degenerates to
+    # example-weighted FedAvg over the whole fleet — an exact reference.
+    "buffered_async": dict(
+        proto=lambda: BufferedAsyncProtocol(buffer_k=3, local_steps=2,
+                                            batch_size=16),
+        n=3, rounds=0, updates=1, secure=False,
+    ),
+    # deadline far beyond any predicted finish (and wall-clock timers off):
+    # every learner is predicted on-time, the policy degenerates to sync
+    "deadline": dict(
+        proto=lambda: DeadlineCohortProtocol(deadline_s=1e6, local_steps=2,
+                                             batch_size=16,
+                                             enforce_wall_clock=False),
+        n=3, rounds=2, updates=0, secure=False,
+    ),
+    # fraction=1.0 keeps the whole fleet and the ranking sort is stable, so
+    # equal default reputations select exactly sync's cohort in sync's order
+    "reputation": dict(
+        proto=lambda: ReputationProtocol(fraction=1.0, local_steps=2,
+                                         batch_size=16),
+        n=3, rounds=2, updates=0, secure=False,
+    ),
 }
 
 
@@ -129,9 +154,12 @@ def _reference(case, agg_mode):
             new = secure_mod.secure_fedavg(
                 bufs, weights, base_seed=secure_mod.MaskSession(0, r).seed
             )
-        elif case["updates"]:  # async, single learner: the row IS the update
+        elif case["updates"] and case["n"] == 1:
+            # async, single learner: the row IS the update
             new = bufs[0]
         else:
+            # sync-shaped cohorts AND the K == n buffered reduce (all
+            # staleness weights are (1+0)^-alpha): example-weighted FedAvg
             new = aggregation.weighted_average(
                 jnp.stack(bufs), jnp.asarray(weights, jnp.float32)
             )
@@ -154,7 +182,9 @@ def _federation(case, store_mode, codec):
         ctrl.engine.run(rounds=case["rounds"])
     out = np.asarray(ctrl.global_params["w"])
     stats = ctrl.channel.stats
-    expected_uploads = case["n"] * case["rounds"] + case["updates"]
+    # every learner uploads once per round AND once per community update
+    # (the buffered arm dispatches the whole K == n cohort per update)
+    expected_uploads = case["n"] * (case["rounds"] + case["updates"])
     ctrl.shutdown()
     return out, stats, expected_uploads
 
@@ -223,9 +253,10 @@ def test_conformance_matrix_sharded_arena():
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
     script = """
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import (AsyncProtocol, Controller, Learner,
-                                SemiSyncProtocol, SyncProtocol, aggregation,
-                                packing)
+        from repro.core import (AsyncProtocol, BufferedAsyncProtocol,
+                                Controller, DeadlineCohortProtocol, Learner,
+                                ReputationProtocol, SemiSyncProtocol,
+                                SyncProtocol, aggregation, packing)
         from repro.core import secure as secure_mod
         from repro.core.server_opt import make_server_optimizer
         from repro.launch.mesh import make_controller_mesh
@@ -260,6 +291,15 @@ def test_conformance_matrix_sharded_arena():
             "secure_async": (lambda: AsyncProtocol(local_steps=2,
                                                    batch_size=16),
                              1, 0, 3, True),
+            "buffered_async": (lambda: BufferedAsyncProtocol(
+                                   buffer_k=3, local_steps=2,
+                                   batch_size=16), 3, 0, 1, False),
+            "deadline": (lambda: DeadlineCohortProtocol(
+                             deadline_s=1e6, local_steps=2, batch_size=16,
+                             enforce_wall_clock=False), 3, 2, 0, False),
+            "reputation": (lambda: ReputationProtocol(
+                               fraction=1.0, local_steps=2,
+                               batch_size=16), 3, 2, 0, False),
         }
 
         def reference(name):
@@ -279,9 +319,9 @@ def test_conformance_matrix_sharded_arena():
                 if secure:
                     new = secure_mod.secure_fedavg(
                         bufs, ws, base_seed=secure_mod.MaskSession(0, r).seed)
-                elif updates:
+                elif updates and n == 1:
                     new = bufs[0]
-                else:
+                else:  # sync cohorts and the K == n zero-staleness buffer
                     new = aggregation.weighted_average(
                         jnp.stack(bufs), jnp.asarray(ws, jnp.float32))
                 state, gbuf = server.apply(state, gbuf, new)
@@ -305,7 +345,7 @@ def test_conformance_matrix_sharded_arena():
                     ctrl.engine.run(rounds=rounds)
                 got = np.asarray(ctrl.global_params["w"])
                 stats = ctrl.channel.stats
-                expected = n * rounds + updates
+                expected = n * (rounds + updates)
                 assert stats.upload_messages == expected, (name, codec)
                 assert stats.upload_bytes > 0 and stats.bytes_moved > 0
                 ctrl.shutdown()

@@ -509,3 +509,80 @@ def test_secure_async_single_learner_matches_plain_quantized():
         return out
 
     np.testing.assert_allclose(run(True), run(False), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mid-round dropout: orphaned uploads are tolerated, never fatal
+# ---------------------------------------------------------------------------
+
+
+class _DroppingLearner(Learner):
+    """A learner whose fit() deregisters it from the controller mid-round,
+    so its upload lands *after* it left the federation (the orphan path)."""
+
+    def __init__(self, inner, controller):
+        self.__dict__.update(inner.__dict__)
+        self._ctrl = controller
+
+    def fit(self, params, task):
+        update = super().fit(params, task)
+        self._ctrl.deregister_learner(self.learner_id)
+        return update
+
+
+@pytest.mark.parametrize("store_mode", ["arena", "stack"])
+def test_mid_round_dropout_upload_is_orphaned_not_fatal(store_mode):
+    ctrl = Controller(protocol=SyncProtocol(local_steps=2, batch_size=16),
+                      store_mode=store_mode, max_dispatch_workers=1)
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    ctrl.register_learner(_make_learner(0))
+    ctrl.register_learner(_DroppingLearner(_make_learner(1), ctrl))
+    ctrl.register_learner(_make_learner(2))
+
+    hist = ctrl.engine.run(rounds=1)  # must not raise
+
+    assert len(hist) == 1
+    assert ctrl.telemetry.value("engine.uploads.orphaned") == 1
+    assert ctrl.telemetry.value("engine.faults.dropouts") == 1
+    assert "l1" not in ctrl._learners
+    assert np.isfinite(np.asarray(ctrl.global_params["w"])).all()
+    # the survivors keep federating
+    hist2 = ctrl.engine.run(rounds=1)
+    assert len(hist2) == 1
+    ctrl.shutdown()
+
+
+def test_every_learner_dropping_mid_round_raises():
+    ctrl = Controller(protocol=SyncProtocol(local_steps=2, batch_size=16),
+                      max_dispatch_workers=1)
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    ctrl.register_learner(_DroppingLearner(_make_learner(0), ctrl))
+    with pytest.raises(RuntimeError, match="dropped out"):
+        ctrl.engine.run(rounds=1)
+    ctrl.shutdown()
+
+
+def test_rejoin_preserves_profile_and_decays_reputation():
+    ctrl = Controller(protocol=SyncProtocol(local_steps=2, batch_size=16))
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(2):
+        ctrl.register_learner(_make_learner(i))
+    ctrl.engine.run(rounds=1)
+    prof = ctrl._learner_profiles["l0"]
+    rep_before = prof.reputation()
+    obs_before = prof.observations
+    assert rep_before > 0
+
+    ctrl.deregister_learner("l0")
+    assert "l0" in ctrl._deregistered_at
+    ctrl.engine.run(rounds=2)  # two rounds absent
+    ctrl.register_learner(_make_learner(0))
+
+    prof2 = ctrl._learner_profiles["l0"]
+    assert prof2 is prof  # profile survives churn
+    assert prof2.observations == obs_before
+    assert prof2.reputation() == pytest.approx(rep_before * 0.9**2)
+    assert ctrl.telemetry.value("engine.faults.rejoins") == 1
+    assert "l0" not in ctrl._deregistered_at
+    ctrl.engine.run(rounds=1)  # the rejoined learner participates again
+    ctrl.shutdown()

@@ -1,0 +1,113 @@
+"""Property tests for the LearnerProfile reputation / EWMA algebra.
+
+The reputation-weighted selection policy (``ReputationProtocol``) ranks
+learners by ``LearnerProfile.observe_contribution``'s EWMA estimate and
+churn decays it (``decay_reputation``); these properties pin the algebra
+the policy stands on: bounded estimates, monotone convergence toward a
+repeated observation, decay=0 legacy last-sample equivalence, and no NaN
+under degenerate zero-valued observations.
+"""
+
+import math
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import LearnerProfile
+
+
+@settings(max_examples=50)
+@given(
+    decay=st.floats(min_value=0.0, max_value=0.99),
+    scores=st.lists(
+        st.floats(min_value=0.0, max_value=1.0), min_size=1, max_size=20
+    ),
+)
+def test_reputation_stays_inside_observed_range(decay, scores):
+    prof = LearnerProfile(decay=decay)
+    for s in scores:
+        est = prof.observe_contribution(s)
+        assert min(scores) - 1e-9 <= est <= max(scores) + 1e-9
+    assert prof.rep_observations == len(scores)
+
+
+@settings(max_examples=50)
+@given(
+    decay=st.floats(min_value=0.0, max_value=0.99),
+    start=st.floats(min_value=0.0, max_value=1.0),
+    target=st.floats(min_value=0.0, max_value=1.0),
+    n=st.integers(min_value=1, max_value=30),
+)
+def test_repeated_observation_converges_monotonically(decay, start, target, n):
+    prof = LearnerProfile(decay=decay)
+    prof.observe_contribution(start)
+    gap = abs(prof.reputation() - target)
+    for _ in range(n):
+        prof.observe_contribution(target)
+        new_gap = abs(prof.reputation() - target)
+        assert new_gap <= gap + 1e-9  # never moves away from the target
+        gap = new_gap
+    assert gap <= abs(start - target) * decay**n + 1e-6
+
+
+@settings(max_examples=50)
+@given(
+    scores=st.lists(
+        st.floats(min_value=0.0, max_value=1.0), min_size=1, max_size=20
+    )
+)
+def test_decay_zero_is_legacy_last_sample(scores):
+    prof = LearnerProfile(decay=0.0)
+    for s in scores:
+        prof.observe_contribution(s)
+        assert prof.reputation() == pytest.approx(s)
+
+
+@settings(max_examples=50)
+@given(n=st.integers(min_value=1, max_value=10),
+       decay=st.floats(min_value=0.0, max_value=0.99))
+def test_zero_observations_never_produce_nan(n, decay):
+    prof = LearnerProfile(decay=decay)
+    for _ in range(n):
+        prof.observe_step_time(0.0)
+        prof.observe_contribution(0.0)
+    assert math.isfinite(prof.reputation())
+    assert prof.reputation() == 0.0
+    assert math.isfinite(float(prof["seconds_per_step"]))
+
+
+@settings(max_examples=50)
+@given(
+    rep=st.floats(min_value=0.0, max_value=1.0),
+    absent=st.integers(min_value=0, max_value=20),
+    rate=st.floats(min_value=0.1, max_value=0.99),
+)
+def test_decay_reputation_algebra(rep, absent, rate):
+    prof = LearnerProfile(decay=0.5)
+    prof.observe_contribution(rep)
+    out = prof.decay_reputation(absent, rate=rate)
+    assert out == pytest.approx(rep * rate**absent)
+    assert math.isfinite(out)
+    # zero rounds absent is the identity
+    assert prof.decay_reputation(0, rate=rate) == pytest.approx(out)
+
+
+def test_decay_reputation_on_unobserved_profile_is_default():
+    prof = LearnerProfile(decay=0.5)
+    assert prof.decay_reputation(5) == 1.0  # default reputation, undecayed
+    assert prof.reputation() == 1.0
+    assert prof.rep_observations == 0
+
+
+@settings(max_examples=30)
+@given(
+    a=st.floats(min_value=0.0, max_value=1.0),
+    b=st.floats(min_value=0.0, max_value=1.0),
+    decay=st.floats(min_value=0.0, max_value=0.99),
+)
+def test_first_observation_seeds_the_estimate(a, b, decay):
+    """The first observation is taken whole (no bias toward an implicit 0)."""
+    prof = LearnerProfile(decay=decay)
+    assert prof.observe_contribution(a) == pytest.approx(a)
+    expected = decay * a + (1.0 - decay) * b
+    assert prof.observe_contribution(b) == pytest.approx(expected)
