@@ -349,6 +349,14 @@ class Controller:
         accumulated EWMA profile — with the reputation estimate
         multiplicatively decayed over the rounds it was absent
         (churn-aware standing; counted in ``engine.faults.rejoins``).
+
+        Thread contract: membership mutations are **not** synchronized
+        with the engine loop — call :meth:`register_learner` /
+        :meth:`deregister_learner` only while the engine loop is idle
+        (between ``engine.run`` calls, as the stress harness does), or
+        from within the loop thread itself.  Calling them from another
+        thread while ``RoundEngine.run`` is executing races with arrival
+        handling and dispatch.
         """
         lid = learner.learner_id
         rejoining = lid in self._deregistered_at
@@ -374,6 +382,11 @@ class Controller:
         resumes where it left off, and any upload still in flight lands as
         a tolerated, counted orphan (``engine.uploads.orphaned``) instead
         of crashing the engine loop.  Unknown ids are a no-op.
+
+        Thread contract: this mutates engine-loop-owned state
+        (``_learners``, the FedBuff buffer) without synchronization — see
+        :meth:`register_learner`: only call it while the engine loop is
+        idle (between ``engine.run`` calls) or from the loop thread.
         """
         if learner_id not in self._learners:
             return

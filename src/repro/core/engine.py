@@ -252,6 +252,14 @@ class RoundEngine:
         self._late_carry: list[str] = []
         self._resume_dispatch: list[str] | None = None
         self._pending_dispatch: list[str] | None = None  # set around save_checkpoint
+        # Continuous-mode learners whose upload was lost while a
+        # pre-checkpoint drain was absorbing arrivals (fire=False, so the
+        # usual immediate retry leg must not run): they are owed a
+        # re-dispatch once the checkpoint completes, and are folded into
+        # the checkpointed pending-dispatch list so a restored run owes
+        # them too.  Without this they would silently leave the rotation
+        # and a buffer_k == fleet-size policy could never fill its buffer.
+        self._retry_pending: list[str] = []
         # Loop-thread mirror of channel.upload_bytes: advanced as arrivals
         # are *processed*, so aggregate records carry a deterministic
         # cumulative uplink total (the raw counter is bumped by executor
@@ -461,7 +469,14 @@ class RoundEngine:
             # has no partial-round arrivals to reconcile on restore.
             if ckpt_every and checkpoint_dir and c.round_id % ckpt_every == 0:
                 drain_outstanding()
-                self._pending_dispatch = list(pending) if pending is not None else None
+                pend = list(pending) if pending is not None else None
+                if self._retry_pending:
+                    # The drain may have absorbed lost uploads: those
+                    # learners' retry legs are part of the dispatches a
+                    # restored run owes, alongside the buffer members.
+                    pend = pend if pend is not None else []
+                    pend += [x for x in self._retry_pending if x not in pend]
+                self._pending_dispatch = pend
                 try:
                     c.save_checkpoint(checkpoint_dir)
                 finally:
@@ -561,8 +576,16 @@ class RoundEngine:
                 redisp = [lid for lid in members if lid in c._learners]
                 maybe_checkpoint(pending=redisp)
                 if completed < target:
+                    # Lost-during-drain learners rejoin the rotation with
+                    # the buffer members, all off one shared broadcast.
+                    redisp += [
+                        lid for lid in self._retry_pending
+                        if lid in c._learners and lid not in redisp
+                    ]
+                    b = c._broadcast()
                     for lid in redisp:
-                        self._dispatch_one(lid, c._broadcast())
+                        self._dispatch_one(lid, b)
+                self._retry_pending = []
 
         def handle_upload(event: UploadArrived, fire: bool = True) -> None:
             nonlocal completed
@@ -603,8 +626,14 @@ class RoundEngine:
                 if prof is not None:
                     prof.observe_contribution(0.0)
                 if continuous:
-                    if fire and completed < target:
-                        self._dispatch_one(lid, c._broadcast())  # retry a leg
+                    if fire:
+                        if completed < target:
+                            self._dispatch_one(lid, c._broadcast())  # retry a leg
+                    elif lid not in self._retry_pending:
+                        # Lost during the pre-checkpoint drain: dispatching
+                        # now would un-quiesce the state being saved, so
+                        # the retry leg is owed after the checkpoint.
+                        self._retry_pending.append(lid)
                 elif not state.aggregated:
                     if lid in state.cohort and lid not in state.arrived_ids:
                         state.dropped.add(lid)
@@ -633,11 +662,18 @@ class RoundEngine:
                 # The uplink delivered twice: the second copy is handled
                 # inline, right after the first — posting it through the
                 # queue would interleave with worker arrivals and make
-                # journal order timing-dependent.
+                # journal order timing-dependent.  The recursion performs
+                # the buffer/arrived bookkeeping for this learner (same
+                # id, same update) and may fire an aggregate that
+                # advances the round and clears the buffer — so this
+                # frame must not fall through, or it would re-register
+                # an already-aggregated arrival (phantom buffer member /
+                # spurious late carry).
                 self._c_dup.add(1)
                 handle_upload(
                     dataclasses.replace(event, duplicate=True), fire=fire
                 )
+                return
             if continuous:
                 if lid not in self._buffer:
                     self._buffer.append(lid)

@@ -562,6 +562,105 @@ def test_every_learner_dropping_mid_round_raises():
     ctrl.shutdown()
 
 
+# ---------------------------------------------------------------------------
+# fault fates: dup must not double-register, lost-during-drain must retry
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedInjector:
+    """A FaultInjector stand-in with scripted upload fates: keys are
+    ``(learner_id, round_id)`` or bare ``learner_id`` (every round)."""
+
+    def __init__(self, fates):
+        self.fates = dict(fates)
+
+    def upload_fate(self, lid, rid):
+        return self.fates.get((lid, int(rid))) or self.fates.get(lid, "ok")
+
+
+def _faulty_controller(protocol, fates, **kwargs):
+    from repro.core import FaultyChannel
+
+    ctrl = Controller(
+        protocol=protocol, channel=FaultyChannel(_ScriptedInjector(fates)),
+        max_dispatch_workers=1, **kwargs,
+    )
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(2):
+        ctrl.register_learner(_make_learner(i))
+    return ctrl
+
+
+def test_dup_completing_quorum_is_not_counted_late():
+    """A duplicated upload whose second copy completes the sync quorum must
+    not leave the original frame re-registering it as a late straggler."""
+    ctrl = _faulty_controller(
+        SyncProtocol(local_steps=1, batch_size=16), {"l1": "dup"}
+    )
+    # one worker: l1 (dup-fated) is always the quorum-completing arrival
+    hist = ctrl.engine.run(rounds=2)
+    assert len(hist) == 2
+    assert ctrl.telemetry.value("engine.faults.uploads_duplicated") == 2
+    assert ctrl.telemetry.value("engine.faults.uploads_late") == 0
+    assert ctrl.engine._late_carry == []
+    ctrl.shutdown()
+
+
+def test_dup_completing_buffer_leaves_no_phantom_member():
+    """A duplicated upload whose second copy fills the FedBuff buffer fires
+    the aggregate inside the recursion; the original frame must not re-append
+    the learner to the freshly cleared buffer."""
+    from repro.core import BufferedAsyncProtocol
+
+    ctrl = _faulty_controller(
+        BufferedAsyncProtocol(buffer_k=2, local_steps=1, batch_size=16),
+        {"l1": "dup"},
+    )
+    ctrl.engine.run(total_updates=2)
+    assert ctrl.engine._buffer == []  # no phantom carry-over
+    fired = [e for e in ctrl.engine.event_log if isinstance(e, AggregateFired)]
+    assert len(fired) == 2
+    assert all(e.members == ("l0", "l1") for e in fired)
+    assert ctrl.telemetry.value("engine.faults.uploads_duplicated") == 2
+    ctrl.shutdown()
+
+
+def test_lost_during_checkpoint_drain_rejoins_rotation(tmp_path):
+    """An upload lost while the pre-checkpoint drain is absorbing arrivals
+    (no immediate retry leg) must be re-dispatched after the checkpoint —
+    and recorded in the checkpoint's pending dispatches — instead of
+    silently leaving the rotation for the rest of the run."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.core import BufferedAsyncProtocol
+
+    ctrl = _faulty_controller(
+        BufferedAsyncProtocol(buffer_k=1, local_steps=1, batch_size=16),
+        {("l1", 0): "lost"},
+    )
+    # checkpoint after every community update: l0's first arrival fires,
+    # the drain then absorbs l1's lost upload with fire=False
+    ctrl.engine.run(
+        total_updates=3, checkpoint_every=1, checkpoint_dir=str(tmp_path)
+    )
+    assert ctrl.telemetry.value("engine.faults.uploads_lost") == 1
+    dispatched_l1 = [
+        e for e in ctrl.engine.event_log
+        if isinstance(e, Dispatched) and e.learner_id == "l1"
+    ]
+    assert len(dispatched_l1) >= 2  # the owed retry leg actually left
+    # the checkpoint written around the drain owes l1's retry on restore
+    _, _, meta = ckpt.restore_checkpoint(str(tmp_path), step=1)
+    assert meta["pending_dispatch"] == ["l0", "l1"]
+    ctrl.shutdown()
+
+    ctrl2 = _faulty_controller(
+        BufferedAsyncProtocol(buffer_k=1, local_steps=1, batch_size=16), {}
+    )
+    ctrl2.restore(str(tmp_path), step=1)
+    assert ctrl2.engine._resume_dispatch == ["l0", "l1"]
+    ctrl2.shutdown()
+
+
 def test_rejoin_preserves_profile_and_decays_reputation():
     ctrl = Controller(protocol=SyncProtocol(local_steps=2, batch_size=16))
     ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
