@@ -20,6 +20,12 @@ round's aggregation is just one masked reduction).  Also reports the arena's
 per-upload row-write cost, which the stack path pays *again* as part of every
 aggregation.  JSON output via ``--json`` for the CI nightly artifact.
 
+Robust-rule arm (``run_robust``, ``--robust``): fedavg vs coordinate median
+vs trimmed mean as masked reductions straight off the arena, plus the blocked
+Pallas trimmed-mean kernel (interpret mode on CPU) with an allclose parity
+check against the jnp rule — tracks the sort-vs-sum "robustness premium" a
+byzantine-tolerant controller pays per round.
+
 Sharded-vs-single-device arena (``run_sharded``, ``--sharded``): the same
 masked reduction and row write on a mesh-sharded arena
 (``ArenaStore(mesh=...)``, every visible device) against the single-device
@@ -163,6 +169,90 @@ def run_compare(learner_counts=(8, 32, 64), param_counts=(1 << 20, 1 << 22),
     return rows
 
 
+def run_robust(learner_counts=(8, 32, 64), param_counts=(1 << 20, 1 << 22),
+               iters=10, trim_k=2):
+    """Robust-rule aggregation latency off the arena (``--robust``).
+
+    The same masked-reduction shape as ``run_compare``'s arena arm, across
+    the three aggregation rules a controller can run: fedavg (the weighted
+    mean baseline), coordinate median, and trimmed mean — all straight off
+    the device-resident arena, no re-stack — plus the blocked Pallas
+    trimmed-mean kernel (interpret mode on CPU: correctness-representative,
+    not timing-representative; reported separately).  A per-shape allclose
+    parity check between the jnp rule and the kernel keeps the bench
+    honest.  The robust premium (sort vs sum) is the price of byzantine
+    tolerance; docs/STRESS.md shows what it buys.
+    """
+    import numpy as np
+
+    from repro.kernels import ops as kops
+
+    rows = []
+    for p in param_counts:
+        for n in learner_counts:
+            arena = ArenaStore(num_params=p, n_max=n, row_align=1024)
+            for i in range(n):
+                arena.write(
+                    f"l{i}",
+                    jax.random.normal(jax.random.key(i), (p,), jnp.float32),
+                    weight=float(10 * (i + 1)),
+                )
+
+            def fedavg_round():
+                with arena.lock:
+                    return aggregation.masked_weighted_average(
+                        arena.buffer, arena.weights, arena.mask
+                    )[: arena.num_params]
+
+            def median_round():
+                with arena.lock:
+                    return aggregation.masked_coordinate_median(
+                        arena.buffer, arena.weights, arena.mask
+                    )[: arena.num_params]
+
+            def trimmed_round():
+                with arena.lock:
+                    return aggregation.masked_trimmed_mean(
+                        arena.buffer, arena.weights, arena.mask, trim_k
+                    )[: arena.num_params]
+
+            def kernel_round():
+                with arena.lock:
+                    return kops.masked_trimmed_mean(
+                        arena.buffer, arena.weights, arena.mask, trim_k=trim_k
+                    )[: arena.num_params]
+
+            np.testing.assert_allclose(
+                np.asarray(trimmed_round()), np.asarray(kernel_round()),
+                rtol=1e-5, atol=1e-6,
+            )
+            t_fedavg = bench(fedavg_round, warmup=2, iters=iters)
+            t_median = bench(median_round, warmup=2, iters=iters)
+            t_trimmed = bench(trimmed_round, warmup=2, iters=iters)
+            t_kernel = bench(kernel_round, warmup=1, iters=2)
+
+            row = {
+                "bench": "robust_rules", "params": p, "learners": n,
+                "trim_k": trim_k,
+                "fedavg_s": t_fedavg, "median_s": t_median,
+                "trimmed_mean_s": t_trimmed,
+                "kernel_interpret_s": t_kernel,
+                "robust_premium_median": t_median / t_fedavg,
+                "robust_premium_trimmed": t_trimmed / t_fedavg,
+            }
+            rows.append(row)
+            print(
+                f"robust,P={p},N={n},fedavg={t_fedavg*1e3:.2f}ms,"
+                f"median={t_median*1e3:.2f}ms,"
+                f"trimmed={t_trimmed*1e3:.2f}ms,"
+                f"kernel(interp)={t_kernel*1e3:.2f}ms,"
+                f"premium={t_trimmed/t_fedavg:.2f}x",
+                flush=True,
+            )
+            del arena
+    return rows
+
+
 def run_sharded(learner_counts=(8, 32), param_counts=(1 << 20, 1 << 22),
                 iters=10):
     """Sharded-vs-single-device arena: masked reduction + row-write latency.
@@ -255,6 +345,9 @@ def main(argv=None):
                     help="arena-vs-stack per-round aggregation latency")
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-sharded vs single-device arena aggregation")
+    ap.add_argument("--robust", action="store_true",
+                    help="robust rules (median / trimmed mean) vs fedavg "
+                         "off the arena, incl. the Pallas kernel")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -267,6 +360,12 @@ def main(argv=None):
                                iters=3)
         else:
             rows = run_sharded()
+    elif args.robust:
+        if args.smoke:
+            rows = run_robust(learner_counts=(4, 8), param_counts=(1 << 16,),
+                              iters=3, trim_k=1)
+        else:
+            rows = run_robust()
     elif args.compare:
         if args.smoke:
             rows = run_compare(learner_counts=(4, 8), param_counts=(1 << 16,),

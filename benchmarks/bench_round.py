@@ -264,6 +264,69 @@ def run_stress_arm(learners=1000, rounds=5, fault_seed=7, protocols=None):
     return rows
 
 
+def run_adversarial_arm(learners=1000, rounds=3, fault_seed=7,
+                        adversarial_fraction=0.15):
+    """Byzantine sweep (``--stress --adversarial-fraction``): rule shoot-out.
+
+    Four sync-protocol arms on a ``value_mode="target"`` SimLearner fleet —
+    a faultless FedAvg baseline, then FedAvg / coordinate median / trimmed
+    mean under ``adversarial_fraction`` scale + sign-flip adversaries
+    (admission screen and quarantine on).  Each row carries the per-fate
+    ``adversarial`` counters, the ``admission`` block (rejected / clipped /
+    quarantined) and ``final_eval_loss`` against the consensus target, so
+    the nightly artifact tracks the headline claim directly: the robust
+    rules stay at the baseline's epsilon while FedAvg diverges.
+    """
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tests"))
+    from stress.harness import run_stress
+
+    from repro.core import FaultSpec
+
+    spec = FaultSpec(seed=fault_seed,
+                     adversarial_fraction=adversarial_fraction)
+    # Trim deep enough to cover the adversarial minority with headroom,
+    # while keeping 2 * trim_k strictly below the fleet size.
+    trim_k = max(1, min(int(learners * adversarial_fraction * 1.5),
+                        (learners - 1) // 2))
+    arms = [
+        ("faultless_fedavg", None, "fedavg", 1),
+        ("fedavg", spec, "fedavg", 1),
+        ("median", spec, "median", 1),
+        ("trimmed_mean", spec, "trimmed_mean", trim_k),
+    ]
+    rows = []
+    for arm, arm_spec, rule, tk in arms:
+        row = run_stress(protocol="sync", learners=learners, rounds=rounds,
+                         spec=arm_spec, aggregation_rule=rule, trim_k=tk,
+                         value_mode="target")
+        row["bench"] = "adversarial"
+        row["arm"] = arm
+        row["adversarial_fraction"] = (
+            0.0 if arm_spec is None else adversarial_fraction
+        )
+        rows.append(row)
+        adv = row["adversarial"]
+        adm = row["admission"]
+        print(f"adversarial,{arm},N={learners},rounds={rounds},"
+              f"loss={row['final_eval_loss']:.3e},"
+              f"scale={adv['scale']},sign_flip={adv['sign_flip']},"
+              f"clipped={adm['clipped']},"
+              f"quarantined={adm['quarantine_entered']},"
+              f"uploads_per_s={row['uploads_per_s']:.0f}", flush=True)
+    base = rows[0]["final_eval_loss"]
+    fed = rows[1]["final_eval_loss"]
+    tm = rows[3]["final_eval_loss"]
+    print(f"adversarial headline: baseline={base:.3e}, "
+          f"fedavg-under-attack={fed:.3e} "
+          f"({fed / max(base, 1e-12):.1e}x worse), "
+          f"trimmed_mean-under-attack={tm:.3e} (tracks baseline)",
+          flush=True)
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # wire-aware semi-sync sizing arm
 # ---------------------------------------------------------------------------
@@ -348,6 +411,10 @@ def main(argv=None):
                          "every protocol")
     ap.add_argument("--fault-seed", type=int, default=7,
                     help="stress-arm fault seed (same seed => identical run)")
+    ap.add_argument("--adversarial-fraction", type=float, default=0.0,
+                    help="with --stress: byzantine rule shoot-out (faultless"
+                         " / fedavg / median / trimmed_mean) at this "
+                         "adversary rate instead of the churn sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -365,7 +432,16 @@ def main(argv=None):
         else:
             rows = run_journal()
     elif args.stress:
-        if args.smoke:
+        if args.adversarial_fraction > 0:
+            if args.smoke:
+                rows = run_adversarial_arm(
+                    learners=64, rounds=2, fault_seed=args.fault_seed,
+                    adversarial_fraction=args.adversarial_fraction)
+            else:
+                rows = run_adversarial_arm(
+                    fault_seed=args.fault_seed,
+                    adversarial_fraction=args.adversarial_fraction)
+        elif args.smoke:
             rows = run_stress_arm(learners=64, rounds=2,
                                   fault_seed=args.fault_seed)
         else:

@@ -25,10 +25,14 @@ from repro.core.aggregation import (
     fedavg,
     fedavg_sharded,
     hierarchical_fedavg,
+    masked_coordinate_median,
     masked_fedavg,
     masked_fedavg_sharded,
+    masked_median_sharded,
     masked_staleness_average,
     masked_staleness_sharded,
+    masked_trimmed_mean,
+    masked_trimmed_mean_sharded,
     masked_weighted_average,
     staleness_weights,
     trimmed_mean,
@@ -58,11 +62,20 @@ from repro.core.engine import (
     Dispatched,
     EngineStopped,
     Evaluated,
+    LearnerQuarantined,
     RoundEngine,
     RoundTimings,
     UploadArrived,
+    UploadClipped,
+    UploadRejected,
+    UploadRejectedError,
 )
-from repro.core.faults import FaultInjector, FaultSpec, FaultyChannel
+from repro.core.faults import (
+    ADVERSARIAL_FATES,
+    FaultInjector,
+    FaultSpec,
+    FaultyChannel,
+)
 from repro.core.controller import Controller
 from repro.core.driver import Driver, FederationEnv, TerminationCriteria
 from repro.core.transport import (
@@ -83,6 +96,8 @@ __all__ = [
     "fedavg", "weighted_average", "coordinate_median", "trimmed_mean",
     "masked_fedavg", "masked_staleness_average", "masked_weighted_average",
     "masked_fedavg_sharded", "masked_staleness_sharded",
+    "masked_coordinate_median", "masked_trimmed_mean",
+    "masked_median_sharded", "masked_trimmed_mean_sharded",
     "staleness_weights", "fedavg_sharded", "hierarchical_fedavg",
     "ModelRecord", "ModelStore", "ArenaStore",
     "SyncProtocol", "SemiSyncProtocol", "AsyncProtocol", "TrainTask",
@@ -94,7 +109,9 @@ __all__ = [
     "Controller", "RoundTimings", "RoundEngine",
     "Dispatched", "UploadArrived", "AggregateFired", "Evaluated",
     "EngineStopped", "DeadlineExpired",
-    "FaultSpec", "FaultInjector", "FaultyChannel",
+    "UploadRejected", "UploadClipped", "LearnerQuarantined",
+    "UploadRejectedError",
+    "FaultSpec", "FaultInjector", "FaultyChannel", "ADVERSARIAL_FATES",
     "Telemetry", "Counter", "Gauge", "Histogram",
     "EventJournal", "RoundSummary",
     "Driver", "FederationEnv", "TerminationCriteria", "FederationConfig",

@@ -41,11 +41,15 @@ __all__ = [
     "masked_staleness_average",
     "coordinate_median",
     "trimmed_mean",
+    "masked_coordinate_median",
+    "masked_trimmed_mean",
     "staleness_weights",
     "fedavg_sharded",
     "hierarchical_fedavg",
     "masked_fedavg_sharded",
     "masked_staleness_sharded",
+    "masked_median_sharded",
+    "masked_trimmed_mean_sharded",
     "arena_axes",
 ]
 
@@ -133,10 +137,24 @@ def masked_staleness_average(
     return jnp.einsum("n,np->p", w, rows)
 
 
+def _robust_out_dtype(stack: jax.Array) -> jnp.dtype:
+    """The dtype a robust rule returns: the input's, if it is a float.
+
+    Order statistics are computed in float32 for a stable sort/mean, but the
+    result is cast back so a bf16 arena aggregates to a bf16 model instead of
+    silently widening every round.  Integer stacks (e.g. quantized codecs
+    aggregated pre-dequantize in tests) still come back float32 because their
+    mean is not representable in the input dtype.
+    """
+    dt = jnp.asarray(stack).dtype
+    return dt if jnp.issubdtype(dt, jnp.floating) else jnp.dtype(jnp.float32)
+
+
 @jax.jit
 def coordinate_median(stack: jax.Array) -> jax.Array:
     """Coordinate-wise median — a byzantine-robust aggregation rule."""
-    return jnp.median(stack.astype(jnp.float32), axis=0)
+    out = jnp.median(stack.astype(jnp.float32), axis=0)
+    return out.astype(_robust_out_dtype(stack))
 
 
 @functools.partial(jax.jit, static_argnames=("trim_k",))
@@ -146,7 +164,74 @@ def trimmed_mean(stack: jax.Array, trim_k: int) -> jax.Array:
     if 2 * trim_k >= n:
         raise ValueError(f"trim_k={trim_k} too large for N={n}")
     s = jnp.sort(stack.astype(jnp.float32), axis=0)
-    return jnp.mean(s[trim_k : n - trim_k], axis=0)
+    out = jnp.mean(s[trim_k : n - trim_k], axis=0)
+    return out.astype(_robust_out_dtype(stack))
+
+
+@jax.jit
+def masked_coordinate_median(
+    arena: jax.Array, weights: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """``(N, P) × (N,) × (N,) -> (P,)`` coordinate median over valid rows.
+
+    The arena-store statement of :func:`coordinate_median`: invalid rows are
+    pushed to ``+inf`` and a single column-wise sort floats every valid value
+    to the top ``n_valid`` positions, so the median is one dynamic gather of
+    the two middle ranks — no re-stack, no host round-trip, and garbage
+    (even NaN) in a dead row can never reach the reduce.  ``weights`` is
+    accepted for signature parity with :func:`masked_weighted_average` but
+    ignored: order statistics are deliberately weight-blind, which is exactly
+    what makes them robust to a poisoned example count.
+    """
+    del weights  # order statistics are weight-blind by design
+    m = jnp.asarray(mask, jnp.float32)
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), jnp.inf)
+    s = jnp.sort(rows, axis=0)
+    n_valid = jnp.sum(m).astype(jnp.int32)
+    lo = jnp.maximum((n_valid - 1) // 2, 0)
+    hi = jnp.maximum(n_valid // 2, 0)
+    med = (jnp.take(s, lo, axis=0) + jnp.take(s, hi, axis=0)) * 0.5
+    out = jnp.where(n_valid > 0, med, 0.0)
+    return out.astype(_robust_out_dtype(arena))
+
+
+@functools.partial(jax.jit, static_argnames=("trim_k",))
+def masked_trimmed_mean(
+    arena: jax.Array, weights: jax.Array, mask: jax.Array, trim_k: int
+) -> jax.Array:
+    """``(N, P) × (N,) × (N,) -> (P,)`` trimmed mean over valid rows.
+
+    Invalid rows sort to the bottom as ``+inf``; the surviving band is rows
+    ``[trim_k, n_valid - trim_k)`` of the sorted arena, selected with a rank
+    mask so the whole rule stays one fused sort + masked mean regardless of
+    how many arena rows are live.  ``trim_k`` is static: an impossible trim
+    against the arena capacity is a clear trace-time ``ValueError``, while
+    a cohort that is merely *currently* too small (``n_valid <= 2*trim_k``)
+    yields an empty band and falls back to the masked mean of the valid rows
+    rather than producing inf/NaN.  ``weights`` is ignored (see
+    :func:`masked_coordinate_median`).
+    """
+    del weights  # order statistics are weight-blind by design
+    n = arena.shape[0]
+    if 2 * trim_k >= n:
+        raise ValueError(f"trim_k={trim_k} too large for N={n}")
+    m = jnp.asarray(mask, jnp.float32)
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), jnp.inf)
+    s = jnp.sort(rows, axis=0)
+    n_valid = jnp.sum(m).astype(jnp.int32)
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    band = (ranks >= trim_k) & (ranks < n_valid - trim_k)
+    count = jnp.sum(band.astype(jnp.float32))
+    safe_rows = jnp.where(band[:, None], s, 0.0)
+    trimmed = jnp.sum(safe_rows, axis=0) / jnp.maximum(count, 1.0)
+    # Degenerate cohort (n_valid <= 2*trim_k): untrimmed masked mean instead.
+    fallback_band = ranks < n_valid
+    fb_rows = jnp.where(fallback_band[:, None], s, 0.0)
+    fallback = jnp.sum(fb_rows, axis=0) / jnp.maximum(
+        jnp.sum(fallback_band.astype(jnp.float32)), 1.0
+    )
+    out = jnp.where(count > 0, trimmed, jnp.where(n_valid > 0, fallback, 0.0))
+    return out.astype(_robust_out_dtype(arena))
 
 
 def staleness_weights(
@@ -247,6 +332,44 @@ def masked_staleness_sharded(mesh: Mesh, axes=None, alpha: float = 0.5):
     return jax.jit(
         _agg,
         in_shardings=(NamedSharding(mesh, P(None, ax)), repl, repl, repl, repl),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
+
+
+def masked_median_sharded(mesh: Mesh, axes=None):
+    """Masked coordinate median over a column-sharded arena — zero collectives.
+
+    Returns a jitted ``(arena (N_max,P), weights (N_max,), mask (N_max,)) ->
+    (P,)`` with the same sharding contract as :func:`masked_fedavg_sharded`.
+    The median is coordinate-wise, so each device sorts and selects within its
+    own ``(N_max, P/n_shards)`` column slice independently; the only
+    cross-row reductions (``n_valid``) run on the replicated mask vector, so
+    the compiled HLO stays collective-free.
+    """
+    ax = arena_axes(mesh, axes)
+    repl = NamedSharding(mesh, P())
+    return jax.jit(
+        masked_coordinate_median,
+        in_shardings=(NamedSharding(mesh, P(None, ax)), repl, repl),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
+
+
+def masked_trimmed_mean_sharded(mesh: Mesh, axes=None, trim_k: int = 1):
+    """Masked trimmed mean over a column-sharded arena — zero collectives.
+
+    Same sharding contract as :func:`masked_median_sharded`; ``trim_k`` is
+    closed over (static) so the rank-band selection compiles once per trim.
+    """
+    ax = arena_axes(mesh, axes)
+
+    def _agg(arena, weights, mask):
+        return masked_trimmed_mean(arena, weights, mask, trim_k)
+
+    repl = NamedSharding(mesh, P())
+    return jax.jit(
+        _agg,
+        in_shardings=(NamedSharding(mesh, P(None, ax)), repl, repl),
         out_shardings=NamedSharding(mesh, P(ax)),
     )
 

@@ -30,6 +30,7 @@ __all__ = ["FederationConfig"]
 
 _STORE_MODES = ("auto", "arena", "stack")
 _UPLOAD_CODECS = ("raw", "int8")
+_AGGREGATION_RULES = ("fedavg", "median", "trimmed_mean")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +69,18 @@ class FederationConfig:
         The engine flight recorder (``core/journal.EventJournal``): an
         optional JSONL sink (path or file object) and the in-memory ring
         bound (0 disables recording).
+    aggregation_rule:
+        The community-model reduction: ``"fedavg"`` (weighted mean, the
+        default), ``"median"`` (coordinate-wise median) or
+        ``"trimmed_mean"`` (drop the ``trim_k`` extremes per coordinate per
+        side).  The robust rules are order statistics — weight-blind and
+        byzantine-tolerant — and are rejected by the staleness-weighted
+        protocols (async/FedBuff), whose damping has no order-statistic
+        analogue (see docs/PROTOCOLS.md support matrix).
+    trim_k:
+        Rows trimmed per side by ``"trimmed_mean"`` (>= 1; ignored by the
+        other rules).  Must satisfy ``2 * trim_k < n_live`` at aggregate
+        time; the arena capacity bound is checked at setup.
     """
 
     store_mode: str = "auto"
@@ -81,6 +94,8 @@ class FederationConfig:
     checkpoint_dir: str | None = None
     journal_sink: Any = None
     journal_capacity: int = 4096
+    aggregation_rule: str = "fedavg"
+    trim_k: int = 1
 
     def __post_init__(self) -> None:
         """Validate every knob at construction time."""
@@ -121,6 +136,13 @@ class FederationConfig:
             raise ValueError(
                 f"journal_capacity must be >= 0, got {self.journal_capacity!r}"
             )
+        if self.aggregation_rule not in _AGGREGATION_RULES:
+            raise ValueError(
+                f"aggregation_rule must be one of {_AGGREGATION_RULES}, "
+                f"got {self.aggregation_rule!r}"
+            )
+        if not isinstance(self.trim_k, int) or self.trim_k < 1:
+            raise ValueError(f"trim_k must be an int >= 1, got {self.trim_k!r}")
 
     @classmethod
     def from_kwargs(cls, **kwargs: Any) -> "FederationConfig":

@@ -39,6 +39,7 @@ aggregation timing, evaluation fan-out — lives in ``engine.run``; see
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from typing import Any, Callable
@@ -47,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, packing
-from repro.core.engine import RoundEngine, RoundTimings
+from repro.core.engine import RoundEngine, RoundTimings, UploadRejectedError
 from repro.core.journal import EventJournal, jsonable
 from repro.core.learner import Learner, LocalUpdate
 from repro.core.metrics import Telemetry
@@ -128,6 +129,36 @@ class Controller:
         EWMA decay for the per-learner seconds-per-step estimate
         (``core/scheduler.LearnerProfile``); 0 reproduces the legacy
         last-sample behaviour.
+    aggregation_rule / trim_k:
+        The community-model reduction: ``"fedavg"`` (default),
+        ``"median"`` (coordinate-wise median) or ``"trimmed_mean"`` (drop
+        the ``trim_k`` extremes per coordinate per side).  The robust
+        rules run as masked reductions straight off the arena (sharded
+        variants when ``arena_mesh`` is set), are weight-blind order
+        statistics, exclude custom aggregate functions and ``secure``,
+        and are rejected by the staleness-weighted protocols — see the
+        support matrix in ``docs/PROTOCOLS.md``.
+    admission_control / admission_clip_factor / admission_ewma_decay /
+    admission_warmup:
+        The upload admission screen (:meth:`_screen_upload`): non-finite
+        buffers are rejected before they can touch the store, and — once
+        ``admission_warmup`` accepted uploads have seeded an EWMA of
+        update norms — outlier norms beyond ``admission_clip_factor``
+        times the EWMA are clipped down to the limit.  On by default;
+        forced off under ``secure`` (mask-encoded rows have meaningless
+        norms).  Counters: ``engine.uploads.rejected.nonfinite``,
+        ``engine.uploads.clipped``.
+    quarantine_threshold / quarantine_decay:
+        Repeat admission offenders are quarantined: each rejected or
+        clipped upload adds 1 to a per-learner score that decays by
+        ``quarantine_decay`` per round, and learners at or over
+        ``quarantine_threshold`` are skipped by cohort selection until
+        decay releases them (fail-open when everyone is quarantined).
+        The defaults (threshold 2.0, decay 0.75) quarantine on the third
+        consecutive offending round (scores 1.0, 1.75, 2.31...) and never
+        on a single glitch.  Composes with ``ReputationProtocol`` — offenses
+        also feed the reputation EWMA through
+        ``LearnerProfile.observe_contribution``.
     journal / journal_sink / journal_capacity:
         The engine's flight recorder (``core/journal.EventJournal``).  Pass
         a pre-built journal (tests inject a deterministic clock) or let the
@@ -178,6 +209,14 @@ class Controller:
         journal_capacity: int = 4096,
         checkpoint_every: int | None = None,
         checkpoint_dir: str | None = None,
+        aggregation_rule: str = "fedavg",
+        trim_k: int = 1,
+        admission_control: bool = True,
+        admission_clip_factor: float = 4.0,
+        admission_ewma_decay: float = 0.9,
+        admission_warmup: int = 8,
+        quarantine_threshold: float = 2.0,
+        quarantine_decay: float = 0.75,
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
@@ -190,14 +229,70 @@ class Controller:
             )
         self.protocol = protocol or SyncProtocol()
         self.selection = selection or SelectionPolicy()
-        self.aggregate_fn = aggregate_fn or aggregation.fedavg
-        if masked_aggregate_fn is not None:
+        if aggregation_rule not in ("fedavg", "median", "trimmed_mean"):
+            raise ValueError(
+                "aggregation_rule must be 'fedavg', 'median' or "
+                f"'trimmed_mean', got {aggregation_rule!r}"
+            )
+        if not isinstance(trim_k, int) or trim_k < 1:
+            raise ValueError(f"trim_k must be an int >= 1, got {trim_k!r}")
+        self.aggregation_rule = aggregation_rule
+        self.trim_k = int(trim_k)
+        if aggregation_rule != "fedavg":
+            # Robust rules are order statistics: they have no secure-sum
+            # form, no staleness-weighted form, and they replace (rather
+            # than compose with) a custom aggregate function.
+            if aggregate_fn is not None or masked_aggregate_fn is not None:
+                raise ValueError(
+                    "aggregation_rule= and a custom aggregate_fn/"
+                    "masked_aggregate_fn are mutually exclusive"
+                )
+            if secure:
+                raise ValueError(
+                    f"aggregation_rule={aggregation_rule!r} cannot run under "
+                    "secure aggregation: the controller only ever sees a "
+                    "masked sum, and order statistics need the rows"
+                )
+            if (self.protocol.weighting() == "staleness"
+                    or getattr(self.protocol, "aggregate_scope", None)
+                    == "buffer"):
+                raise ValueError(
+                    f"aggregation_rule={aggregation_rule!r} is not defined "
+                    "for staleness-weighted protocols (async / FedBuff): "
+                    "the staleness discount has no order-statistic "
+                    "analogue.  Use aggregation_rule='fedavg' there — see "
+                    "the support matrix in docs/PROTOCOLS.md"
+                )
+        # A custom masked rule (or the wrapped custom aggregate_fn) opts out
+        # of the rule-matched sharded reduction built in set_initial_model.
+        self._masked_is_default = (
+            aggregate_fn is None and masked_aggregate_fn is None
+        )
+        if aggregation_rule == "median":
+            self.aggregate_fn = lambda stack, w: aggregation.coordinate_median(
+                stack
+            )
+            self.masked_aggregate_fn = aggregation.masked_coordinate_median
+        elif aggregation_rule == "trimmed_mean":
+            _tk = self.trim_k
+            self.aggregate_fn = lambda stack, w: aggregation.trimmed_mean(
+                stack, _tk
+            )
+            self.masked_aggregate_fn = (
+                lambda arena, w, m: aggregation.masked_trimmed_mean(
+                    arena, w, m, _tk
+                )
+            )
+        elif masked_aggregate_fn is not None:
+            self.aggregate_fn = aggregate_fn or aggregation.fedavg
             self.masked_aggregate_fn = masked_aggregate_fn
         elif aggregate_fn is not None:
+            self.aggregate_fn = aggregate_fn
             self.masked_aggregate_fn = (
                 lambda arena, w, m: aggregate_fn(arena, w * m)
             )
         else:
+            self.aggregate_fn = aggregation.fedavg
             self.masked_aggregate_fn = aggregation.masked_weighted_average
         self.server_opt = server_optimizer or make_server_optimizer("fedavg")
         self.store = store or ModelStore()
@@ -225,6 +320,29 @@ class Controller:
         self.profile_decay = profile_decay
         self.checkpoint_every = checkpoint_every
         self.checkpoint_dir = checkpoint_dir
+        # Admission control: a cheap screen at ingest.  Non-finite buffers
+        # are rejected outright; once the EWMA of accepted update norms has
+        # warmed up, outlier norms are clipped down to factor * EWMA.
+        # Disabled under secure aggregation — the controller only ever sees
+        # mask-encoded rows there, whose norms are meaningless.
+        self.admission_control = bool(admission_control) and not secure
+        self.admission_clip_factor = float(admission_clip_factor)
+        self.admission_ewma_decay = float(admission_ewma_decay)
+        self.admission_warmup = int(admission_warmup)
+        self._adm_ewma: float | None = None
+        self._adm_accepted = 0
+        # Quarantine: per-learner decaying offense score.  Each rejected or
+        # clipped upload adds 1 at the current round; the score decays by
+        # quarantine_decay per round since the last offense, and a learner
+        # is excluded from cohort selection while score >= threshold —
+        # repeat offenders sit out, a single glitch does not.
+        self.quarantine_threshold = float(quarantine_threshold)
+        self.quarantine_decay = float(quarantine_decay)
+        self._offenses: dict[str, tuple[float, int]] = {}
+        # Hysteresis: entered at score >= threshold, released only once the
+        # score decays below threshold/2 — without it a learner would enter
+        # and be released by the very next round's decay tick.
+        self._quarantined: set[str] = set()
 
         self._learners: dict[str, Learner] = {}
         self._learner_profiles: dict[str, LearnerProfile] = {}
@@ -234,6 +352,13 @@ class Controller:
         self._deregistered_at: dict[str, int] = {}
         self._c_dropouts = self.telemetry.counter("engine.faults.dropouts")
         self._c_rejoins = self.telemetry.counter("engine.faults.rejoins")
+        # Admission / quarantine instrumentation (docs/OBSERVABILITY.md).
+        self._c_rejected_nonfinite = self.telemetry.counter(
+            "engine.uploads.rejected.nonfinite"
+        )
+        self._c_clipped = self.telemetry.counter("engine.uploads.clipped")
+        self._c_quarantined = self.telemetry.counter("engine.quarantine.entered")
+        self._g_quarantine = self.telemetry.gauge("engine.quarantine.active")
         self._store_lock = threading.Lock()
 
         self.global_params: Any = None
@@ -312,14 +437,40 @@ class Controller:
             # with it the kill-and-resume parity contract — is reproducible.
             for lid in self._learners:
                 self.arena.ensure_row(lid)
+            if self.aggregation_rule == "trimmed_mean" and (
+                2 * self.trim_k >= self.arena.n_max
+            ):
+                raise ValueError(
+                    f"trim_k={self.trim_k} trims 2*trim_k={2 * self.trim_k} "
+                    f"rows but the arena only holds {self.arena.n_max}; "
+                    "every cohort would fall back to the untrimmed mean"
+                )
             if self.arena.sharded:
                 # Per-shard masked reductions over the column-sharded arena
                 # (zero collectives; numerically identical to single-device).
+                # Coordinate-wise rules all shard the same way, so the
+                # reduction is matched to the configured aggregation_rule.
                 # A user-supplied masked rule is honoured as-is — it runs on
                 # the sharded buffer with whatever layout XLA infers.
-                self._sharded_masked_fn = aggregation.masked_fedavg_sharded(
-                    self.arena.mesh, self.arena.axes
-                )
+                if self._masked_is_default:
+                    if self.aggregation_rule == "median":
+                        self._sharded_masked_fn = (
+                            aggregation.masked_median_sharded(
+                                self.arena.mesh, self.arena.axes
+                            )
+                        )
+                    elif self.aggregation_rule == "trimmed_mean":
+                        self._sharded_masked_fn = (
+                            aggregation.masked_trimmed_mean_sharded(
+                                self.arena.mesh, self.arena.axes, self.trim_k
+                            )
+                        )
+                    else:
+                        self._sharded_masked_fn = (
+                            aggregation.masked_fedavg_sharded(
+                                self.arena.mesh, self.arena.axes
+                            )
+                        )
                 alpha = getattr(self.protocol, "staleness_alpha", 0.5)
                 self._sharded_staleness_fn = aggregation.masked_staleness_sharded(
                     self.arena.mesh, self.arena.axes, alpha
@@ -493,7 +644,49 @@ class Controller:
         )
         return self.channel.recv_upload(envelope)
 
-    def ingest(self, update: LocalUpdate) -> None:
+    def _screen_upload(
+        self, learner_id: str, buffer: jax.Array
+    ) -> tuple[jax.Array, dict | None]:
+        """The admission screen: reject non-finite rows, clip norm outliers.
+
+        One scalar — the f32 L2 norm of the decoded buffer — covers both
+        checks: a single NaN/inf anywhere in the row makes the norm
+        non-finite (reject with :class:`UploadRejectedError`; counted in
+        ``engine.uploads.rejected.nonfinite``), and once
+        ``admission_warmup`` uploads have seeded the EWMA of accepted
+        norms, a norm beyond ``admission_clip_factor`` times that EWMA is
+        rescaled down to the limit (counted in ``engine.uploads.clipped``).
+        Accepted (possibly clipped) norms feed the EWMA, so the envelope
+        tracks the federation's own update scale.  The norm readback is one
+        blocking device scalar per upload — the price of the screen.
+
+        Returns ``(buffer, clip_info)`` where ``clip_info`` is ``None`` or
+        ``{"norm": original, "limit": applied}``.
+        """
+        norm = float(jnp.linalg.norm(buffer.astype(jnp.float32)))
+        if not math.isfinite(norm):
+            self._c_rejected_nonfinite.add(1)
+            raise UploadRejectedError(learner_id, "nonfinite", norm)
+        clip: dict | None = None
+        if (
+            self._adm_ewma is not None
+            and self._adm_accepted >= self.admission_warmup
+        ):
+            limit = self.admission_clip_factor * self._adm_ewma
+            if norm > limit > 0.0:
+                buffer = buffer * jnp.asarray(limit / norm, buffer.dtype)
+                self._c_clipped.add(1)
+                clip = {"norm": norm, "limit": limit}
+                norm = limit
+        d = self.admission_ewma_decay
+        self._adm_ewma = (
+            norm if self._adm_ewma is None
+            else d * self._adm_ewma + (1.0 - d) * norm
+        )
+        self._adm_accepted += 1
+        return buffer, clip
+
+    def ingest(self, update: LocalUpdate) -> dict | None:
         """MarkTaskCompleted plumbing: decode the upload, store it, profile it.
 
         Called by the engine loop on every ``UploadArrived`` event.  Fast
@@ -506,9 +699,20 @@ class Controller:
         measured half.  Stack mode inserts the decoded buffer into the
         hash-map store either way.  The learner's EWMA profile absorbs the
         task's measured seconds-per-step and (fast path) wire payload size.
+
+        With :attr:`admission_control` on, the decoded buffer passes the
+        :meth:`_screen_upload` screen first: non-finite rows raise
+        :class:`~repro.core.engine.UploadRejectedError` (nothing is stored;
+        the engine journals the rejection and treats the learner as
+        dropped for the round), and norm outliers are clipped before the
+        row write.  Returns the screen's clip info (``None`` when the
+        upload was stored untouched) so the engine can journal the clip.
         """
+        clip: dict | None = None
         if self.store_mode == "arena":
             buffer = self._upload_buffer(update, pad_to=self.arena.padded_params)
+            if self.admission_control:
+                buffer, clip = self._screen_upload(update.learner_id, buffer)
             self.arena.write(
                 update.learner_id,
                 buffer,
@@ -517,6 +721,8 @@ class Controller:
             )
         else:
             buffer = self._upload_buffer(update, pad_to=None)
+            if self.admission_control:
+                buffer, clip = self._screen_upload(update.learner_id, buffer)
             with self._store_lock:
                 self.store.insert(
                     ModelRecord(
@@ -537,6 +743,68 @@ class Controller:
         prof.observe_step_time(update.seconds_per_step)
         if update.upload is not None:
             prof.observe_upload_bytes(update.upload.payload.nbytes)
+        return clip
+
+    # ------------------------------------------------------------ quarantine
+    def offense_score(self, learner_id: str) -> float:
+        """The learner's decayed offense score as of the current round.
+
+        Each rejected or clipped upload adds 1 at the round it happened;
+        the stored score decays lazily by ``quarantine_decay`` per round
+        elapsed since the last offense (no per-round sweep over the
+        federation).
+        """
+        entry = self._offenses.get(learner_id)
+        if entry is None:
+            return 0.0
+        score, last_round = entry
+        delta = max(int(self.round_id) - int(last_round), 0)
+        return score * (self.quarantine_decay ** delta)
+
+    def note_offense(self, learner_id: str) -> bool:
+        """Record one admission offense (rejected or clipped upload).
+
+        Folds the decayed prior score plus 1 back into the table, stamped
+        at the current round.  Returns True when this offense *newly*
+        pushed the learner over ``quarantine_threshold`` (the engine
+        journals a ``LearnerQuarantined`` event exactly then); counted in
+        ``engine.quarantine.entered``, with the live population on the
+        ``engine.quarantine.active`` gauge.
+        """
+        score = self.offense_score(learner_id) + 1.0
+        self._offenses[learner_id] = (score, int(self.round_id))
+        entered = (
+            score >= self.quarantine_threshold
+            and learner_id not in self._quarantined
+        )
+        if entered:
+            self._quarantined.add(learner_id)
+            self._c_quarantined.add(1)
+        self._g_quarantine.set(len(self.quarantined_ids()))
+        return entered
+
+    def is_quarantined(self, learner_id: str) -> bool:
+        """True while the learner sits inside the quarantine window.
+
+        Entered at ``offense_score >= quarantine_threshold``; released
+        (lazily, on this check) once decay drops the score below *half*
+        the threshold — the hysteresis that makes the penalty an actual
+        multi-round window instead of a single-round blip.  Quarantined
+        learners are skipped by cohort selection
+        (``RoundEngine._start_round``) — fail-open: if *every* available
+        learner is quarantined the filter is waived rather than stalling
+        the federation.
+        """
+        if learner_id not in self._quarantined:
+            return False
+        if self.offense_score(learner_id) < 0.5 * self.quarantine_threshold:
+            self._quarantined.discard(learner_id)
+            return False
+        return True
+
+    def quarantined_ids(self) -> list[str]:
+        """Currently quarantined learner ids, in offense-table order."""
+        return [lid for lid in self._offenses if self.is_quarantined(lid)]
 
     # ------------------------------------------------------------- aggregate
     def _commit(self, new_buffer: jax.Array) -> None:
@@ -626,9 +894,9 @@ class Controller:
             if arena.num_valid(list(selected)) == 0:
                 raise RuntimeError("no local models available to aggregate")
             mask = arena.round_mask(list(selected))
-            if self._sharded_masked_fn is not None and (
-                self.masked_aggregate_fn is aggregation.masked_weighted_average
-            ):
+            # Built only for the rule-matched defaults (_masked_is_default);
+            # a custom masked rule always takes the plain call below.
+            if self._sharded_masked_fn is not None:
                 out = self._sharded_masked_fn(arena.buffer, arena.weights, mask)
             else:
                 out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
@@ -860,6 +1128,16 @@ class Controller:
             "protocol": type(self.protocol).__name__,
             "store_mode": self.store_mode,
             "secure": bool(self.secure),
+            "aggregation_rule": self.aggregation_rule,
+            "admission": {
+                "ewma": self._adm_ewma,
+                "accepted": int(self._adm_accepted),
+            },
+            "offenses": {
+                lid: [float(score), int(rnd)]
+                for lid, (score, rnd) in self._offenses.items()
+            },
+            "quarantined": sorted(self._quarantined),
             "telemetry": self.telemetry.snapshot(),
         }
         if getattr(self.protocol, "continuous", False):
@@ -916,6 +1194,7 @@ class Controller:
             ("protocol", type(self.protocol).__name__),
             ("store_mode", self.store_mode),
             ("secure", bool(self.secure)),
+            ("aggregation_rule", self.aggregation_rule),
         ):
             if key in meta and meta[key] != mine:
                 raise ValueError(
@@ -955,6 +1234,16 @@ class Controller:
         self._deregistered_at = {
             k: int(v) for k, v in meta.get("deregistered_at", {}).items()
         }
+        adm = meta.get("admission") or {}
+        ewma = adm.get("ewma")
+        self._adm_ewma = None if ewma is None else float(ewma)
+        self._adm_accepted = int(adm.get("accepted", 0))
+        self._offenses = {
+            lid: (float(score), int(rnd))
+            for lid, (score, rnd) in meta.get("offenses", {}).items()
+        }
+        self._quarantined = set(meta.get("quarantined", []))
+        self._g_quarantine.set(len(self.quarantined_ids()))
         self.engine._late_carry = list(meta.get("late_carry", []))
         self.engine._buffer = list(meta.get("pending_buffer", []))
         if "pending_dispatch" in meta:

@@ -105,6 +105,12 @@ class FederationEnv:
     deadline_s: float = 1.0
     # Reputation only: top fraction of ranked learners kept per round.
     reputation_fraction: float = 0.5
+    # Community-model reduction: "fedavg" | "median" | "trimmed_mean"
+    # (robust rules reject staleness-weighted protocols — see
+    # core/config.FederationConfig and docs/PROTOCOLS.md).
+    aggregation_rule: str = "fedavg"
+    # Rows trimmed per side by "trimmed_mean" (ignored otherwise).
+    trim_k: int = 1
     bandwidth_gbps: float = 10.0
     latency_ms: float = 0.5
     heartbeat_every_s: float = 5.0
@@ -128,12 +134,15 @@ class FederationEnv:
                     wire_aware=self.wire_aware,
                     profile_decay=self.profile_decay,
                     prox_mu=self.prox_mu,
+                    aggregation_rule=self.aggregation_rule,
+                    trim_k=self.trim_k,
                 ),
             )
         else:
             for field in (
                 "store_mode", "arena_shards", "upload_codec", "flat_uploads",
                 "wire_aware", "profile_decay", "prox_mu",
+                "aggregation_rule", "trim_k",
             ):
                 object.__setattr__(self, field, getattr(self.config, field))
 
@@ -215,6 +224,8 @@ class Driver:
             arena_mesh=arena_mesh,
             flat_uploads=env.flat_uploads,
             profile_decay=env.profile_decay,
+            aggregation_rule=env.aggregation_rule,
+            trim_k=env.trim_k,
             journal_sink=cfg.journal_sink,
             journal_capacity=cfg.journal_capacity,
             checkpoint_every=cfg.checkpoint_every,

@@ -52,12 +52,32 @@ __all__ = [
     "RoundTimings",
     "Dispatched",
     "UploadArrived",
+    "UploadRejected",
+    "UploadClipped",
+    "LearnerQuarantined",
+    "UploadRejectedError",
     "AggregateFired",
     "DeadlineExpired",
     "Evaluated",
     "EngineStopped",
     "RoundEngine",
 ]
+
+
+class UploadRejectedError(Exception):
+    """Raised by ``Controller.ingest`` when admission control rejects an upload.
+
+    The engine loop catches it and treats the arrival like a lost upload
+    (quorum shrinks, reputation penalized, typed journal record) — the
+    buffer never touches the arena or the store.
+    """
+
+    def __init__(self, learner_id: str, reason: str, norm: float):
+        super().__init__(f"upload from {learner_id!r} rejected: {reason} "
+                         f"(norm={norm!r})")
+        self.learner_id = learner_id
+        self.reason = reason
+        self.norm = norm
 
 
 @dataclasses.dataclass
@@ -119,6 +139,49 @@ class UploadArrived:
     def learner_id(self) -> str | None:
         """The arriving learner (None for a failed task with no update)."""
         return self.update.learner_id if self.update is not None else None
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadRejected:
+    """Admission control refused an arrived upload (it never reached a store).
+
+    ``reason`` is the screen that fired (``"nonfinite"``); ``norm`` is the
+    L2 norm the screen measured (NaN/inf for the non-finite screen).  The
+    journal serializes this as its own typed record, so ``replay()`` can
+    say *why* a learner's row is missing from the round's reduce.
+    """
+
+    round_id: int
+    learner_id: str
+    reason: str
+    norm: float
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadClipped:
+    """Admission control norm-clipped an outlier upload before ingest.
+
+    The row *was* ingested, rescaled from ``norm`` down to ``limit`` (the
+    clip ceiling derived from the EWMA of accepted update norms).
+    """
+
+    round_id: int
+    learner_id: str
+    norm: float
+    limit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnerQuarantined:
+    """A repeat offender crossed the quarantine threshold.
+
+    The learner is excluded from cohort selection until its decaying
+    offense score (``score`` at entry) falls back below the threshold.
+    """
+
+    round_id: int
+    learner_id: str
+    score: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,17 +390,26 @@ class RoundEngine:
             timings=RoundTimings(round_id=c.round_id),
             t_round=time.perf_counter(),
         )
+        # Quarantined repeat offenders (rejected/clipped uploads, tracked by
+        # the controller's decaying offense score) sit out cohort selection
+        # entirely — the policy never sees them.  Fail-open: if *every*
+        # learner is quarantined the filter is skipped, so a poisoned fleet
+        # degrades to the pre-quarantine behaviour instead of deadlocking.
+        available = c.learner_ids
+        eligible = [lid for lid in available if not c.is_quarantined(lid)]
+        if eligible:
+            available = eligible
         kwargs: dict[str, Any] = {}
         if getattr(c.protocol, "needs_profiles", False):
             # Ranking/predicting policies additionally see the EWMA profiles
             # and each learner's modeled round-trip wire time.
             kwargs["profiles"] = c._learner_profiles
-            kwargs["wire_s"] = {lid: c.wire_time_s(lid) for lid in c.learner_ids}
+            kwargs["wire_s"] = {lid: c.wire_time_s(lid) for lid in available}
         state.cohort = c.protocol.select_cohort(
             c.selection,
-            c.learner_ids,
+            available,
             c.round_id,
-            {lid: ln.num_examples for lid, ln in c._learners.items()},
+            {lid: c._learners[lid].num_examples for lid in available},
             **kwargs,
         )
         if continuous:
@@ -644,20 +716,65 @@ class RoundEngine:
             if event.duplicate:
                 ctx["duplicate"] = True
             self._log(event, **ctx)
-            if up is None and not event.duplicate:
-                # Legacy envelope-less update: ingest runs the measured
-                # upload half itself, on this thread — mirror its bytes.
-                before = self.telemetry.value("channel.upload_bytes")
-                c.ingest(event.update)
-                self._up_bytes_seen += int(
-                    self.telemetry.value("channel.upload_bytes") - before
+            clip = None
+            try:
+                if up is None and not event.duplicate:
+                    # Legacy envelope-less update: ingest runs the measured
+                    # upload half itself, on this thread — mirror its bytes.
+                    before = self.telemetry.value("channel.upload_bytes")
+                    clip = c.ingest(event.update)
+                    self._up_bytes_seen += int(
+                        self.telemetry.value("channel.upload_bytes") - before
+                    )
+                else:
+                    clip = c.ingest(event.update)
+            except UploadRejectedError as rej:
+                # Admission control refused the row: nothing was stored.
+                # Bookkeeping mirrors a lost upload — the quorum shrinks,
+                # the learner's reputation takes the full penalty, and the
+                # journal gets a typed record saying why the row is absent.
+                self._log(
+                    UploadRejected(
+                        round_id=int(event.update.round_id),
+                        learner_id=lid,
+                        reason=rej.reason,
+                        norm=float(rej.norm),
+                    ),
                 )
-            else:
-                c.ingest(event.update)
+                prof = c._learner_profiles.get(lid)
+                if prof is not None:
+                    prof.observe_contribution(0.0)
+                self._note_offense(lid)
+                if continuous:
+                    if fire:
+                        if completed < target:
+                            self._dispatch_one(lid, c._broadcast())  # retry leg
+                    elif lid not in self._retry_pending:
+                        self._retry_pending.append(lid)
+                elif not state.aggregated:
+                    if lid in state.cohort and lid not in state.arrived_ids:
+                        state.dropped.add(lid)
+                    if fire:
+                        check_round_progress(lid)
+                return
+            if clip is not None and not event.duplicate:
+                # The row was ingested rescaled; half reputation credit and
+                # an offense mark (repeat clipping quarantines too).
+                self._log(
+                    UploadClipped(
+                        round_id=int(event.update.round_id),
+                        learner_id=lid,
+                        norm=float(clip["norm"]),
+                        limit=float(clip["limit"]),
+                    ),
+                )
+                self._note_offense(lid)
             if not event.duplicate:
                 prof = c._learner_profiles.get(lid)
                 if prof is not None:
-                    prof.observe_contribution(1.0)
+                    prof.observe_contribution(
+                        0.5 if clip is not None else 1.0
+                    )
             if fault == "dup" and not event.duplicate:
                 # The uplink delivered twice: the second copy is handled
                 # inline, right after the first — posting it through the
@@ -729,6 +846,19 @@ class RoundEngine:
             state.deadline_timer.cancel()
         self._log(EngineStopped(completed=completed))
         return out
+
+    def _note_offense(self, lid: str) -> None:
+        """Record one admission offense; journal a quarantine entry if it
+        tipped the learner's decaying score over the threshold."""
+        c = self.controller
+        if c.note_offense(lid):
+            self._log(
+                LearnerQuarantined(
+                    round_id=int(c.round_id),
+                    learner_id=lid,
+                    score=float(c.offense_score(lid)),
+                )
+            )
 
     def _observe_round(self, timings: RoundTimings) -> None:
         """Fold one completed round into the engine's telemetry instruments."""

@@ -30,6 +30,16 @@ Fault taxonomy (all knobs on :class:`FaultSpec`):
 - **Bandwidth caps** — per-learner log-uniform caps between
   ``bandwidth_min_gbps`` and ``bandwidth_max_gbps``, threaded through
   ``Channel.set_learner_bandwidth`` into the virtual wire clock.
+- **Adversaries** — a fixed ``adversarial_fraction`` subset of learners
+  (byzantine clients) whose upload *payloads* are corrupted in flight:
+  each round one fate is drawn from ``adversarial_fates`` (``"nan"`` —
+  poison the buffer with NaNs, ``"scale"`` — multiply it by
+  ``adversarial_scale``, ``"sign_flip"`` — negate it, ``"garbage"`` —
+  replace it with finite uniform noise) and applied by
+  :class:`FaultyChannel` before the envelope is minted.  Corruption only
+  applies when the transport fate is ``"ok"`` — a lost upload never
+  reaches ingest, so the admission screen's rejected counter reconciles
+  exactly with the number of injected ``nan`` fates.
 
 Counters land under ``engine.faults.*`` in the controller's telemetry
 (``stragglers`` here; ``dropouts``/``rejoins`` in the controller;
@@ -47,7 +57,10 @@ import numpy as np
 
 from repro.core.transport import Channel
 
-__all__ = ["FaultSpec", "FaultInjector", "FaultyChannel"]
+__all__ = ["ADVERSARIAL_FATES", "FaultSpec", "FaultInjector", "FaultyChannel"]
+
+#: The byzantine payload corruptions FaultyChannel can stamp onto uploads.
+ADVERSARIAL_FATES = ("nan", "scale", "sign_flip", "garbage")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,11 +85,19 @@ class FaultSpec:
     bandwidth_min_gbps: float = 0.0
     bandwidth_max_gbps: float = 0.0
     min_active: int = 1
+    # Byzantine clients: a fixed adversarial_fraction of learners corrupt
+    # every upload payload, drawing one fate per round from
+    # adversarial_fates (see ADVERSARIAL_FATES).  "scale" multiplies the
+    # buffer by adversarial_scale.
+    adversarial_fraction: float = 0.0
+    adversarial_fates: tuple = ("scale", "sign_flip")
+    adversarial_scale: float = 100.0
 
     def __post_init__(self):
         """Validate rates, tail, and bandwidth bounds at construction."""
         for f in ("dropout_rate", "rejoin_rate", "upload_loss_rate",
-                  "upload_dup_rate", "straggler_rate"):
+                  "upload_dup_rate", "straggler_rate",
+                  "adversarial_fraction"):
             v = getattr(self, f)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{f} must be in [0, 1], got {v}")
@@ -94,6 +115,24 @@ class FaultSpec:
             raise ValueError("bandwidth_min_gbps must be <= bandwidth_max_gbps")
         if self.min_active < 1:
             raise ValueError("min_active must be >= 1")
+        object.__setattr__(
+            self, "adversarial_fates", tuple(self.adversarial_fates)
+        )
+        if self.adversarial_fraction > 0:
+            if not self.adversarial_fates:
+                raise ValueError(
+                    "adversarial_fraction > 0 needs at least one fate in "
+                    "adversarial_fates"
+                )
+            unknown = [f for f in self.adversarial_fates
+                       if f not in ADVERSARIAL_FATES]
+            if unknown:
+                raise ValueError(
+                    f"unknown adversarial fate(s) {unknown}; "
+                    f"valid: {ADVERSARIAL_FATES}"
+                )
+        if self.adversarial_scale <= 0:
+            raise ValueError("adversarial_scale must be positive")
 
 
 class FaultInjector:
@@ -178,6 +217,58 @@ class FaultInjector:
             return "dup"
         return "ok"
 
+    # -- adversaries --------------------------------------------------------
+    def is_adversarial(self, learner_id: str) -> bool:
+        """Whether this learner belongs to the fixed byzantine subset."""
+        if self.spec.adversarial_fraction <= 0:
+            return False
+        return bool(
+            self._rng("adversary", learner_id).uniform()
+            < self.spec.adversarial_fraction
+        )
+
+    def adversarial_fate(self, learner_id: str, round_id: int) -> str | None:
+        """The payload corruption for one upload (None for honest learners).
+
+        Adversaries corrupt *every* upload; which fate they apply is
+        redrawn per ``(learner, round)`` from ``spec.adversarial_fates``.
+        """
+        if not self.is_adversarial(learner_id):
+            return None
+        fates = self.spec.adversarial_fates
+        if len(fates) == 1:
+            return fates[0]
+        i = int(self._rng("advfate", learner_id, round_id).integers(len(fates)))
+        return fates[i]
+
+    def corrupt(
+        self, buffer: Any, fate: str, learner_id: str, round_id: int
+    ) -> Any:
+        """Apply one adversarial fate to an upload payload (host-side copy).
+
+        ``"nan"`` poisons the whole buffer (any single NaN makes the L2
+        norm non-finite, so the admission screen rejects it); ``"scale"``
+        and ``"sign_flip"`` stay finite — scale blow-ups are clippable,
+        sign flips are norm-invariant and *invisible* to the screen, which
+        is exactly why they need a robust aggregation rule.  ``"garbage"``
+        replaces the payload with finite uniform noise drawn from the
+        decision-keyed rng (never NaN, so only ``"nan"`` fates feed the
+        rejected counter).
+        """
+        arr = np.array(buffer, copy=True)
+        if fate == "nan":
+            arr[...] = np.nan
+        elif fate == "scale":
+            arr *= self.spec.adversarial_scale
+        elif fate == "sign_flip":
+            arr = -arr
+        elif fate == "garbage":
+            rng = self._rng("garbage", learner_id, round_id)
+            arr = rng.uniform(-1.0, 1.0, size=arr.shape).astype(arr.dtype)
+        else:  # pragma: no cover - spec validation rejects unknown fates
+            raise ValueError(f"unknown adversarial fate {fate!r}")
+        return arr
+
     # -- churn --------------------------------------------------------------
     def churn(
         self, round_id: int, active_ids: list[str]
@@ -222,12 +313,23 @@ class FaultyChannel(Channel):
     the envelope — the wire half still measures the payload (a lost upload
     crossed the wire; it is lost *at* the controller), and the engine's
     arrival handler enacts the fate.
+
+    Byzantine learners additionally have their payload corrupted in
+    flight (:meth:`FaultInjector.corrupt`) with the fate stamped as
+    ``metadata["adversarial"]`` and counted under
+    ``engine.faults.adversarial.<fate>`` — but only when the transport
+    fate is ``"ok"``: a corrupted-then-lost upload would break the
+    rejected-counter reconciliation the stress tests pin.
     """
 
     def __init__(self, injector: FaultInjector, **kwargs: Any):
         """A measured channel bound to one fault injector."""
         super().__init__(**kwargs)
         self.injector = injector
+        self._adv_counters = {
+            fate: self.telemetry.counter(f"engine.faults.adversarial.{fate}")
+            for fate in ADVERSARIAL_FATES
+        }
 
     def upload(
         self, buffer: Any, metadata: dict | None = None, codec: Any = None
@@ -239,4 +341,13 @@ class FaultyChannel(Channel):
             fate = self.injector.upload_fate(lid, int(rid))
             if fate != "ok":
                 md["fault"] = fate
+            else:
+                # Scripted/duck-typed injectors in tests may only implement
+                # upload_fate; adversarial corruption is opt-in.
+                adv_fate = getattr(self.injector, "adversarial_fate", None)
+                adv = adv_fate(lid, int(rid)) if adv_fate is not None else None
+                if adv is not None:
+                    buffer = self.injector.corrupt(buffer, adv, lid, int(rid))
+                    md["adversarial"] = adv
+                    self._adv_counters[adv].add(1)
         return super().upload(buffer, metadata=md, codec=codec)

@@ -34,6 +34,7 @@ import collections
 import dataclasses
 import io
 import json
+import math
 import threading
 import time
 from typing import Any, Callable, Iterable
@@ -74,12 +75,23 @@ class RoundSummary:
     the aggregate, minus the previous round's).  ``weighting`` / ``trigger``
     record the policy decision that fired the aggregate; ``metrics`` is the
     reduced eval report (round-based policies only).
+
+    The admission-control fields answer "why is this learner's row not in
+    the aggregate": ``rejected`` lists ``{"learner", "reason", "norm"}``
+    dicts for uploads the screen refused (the row never touched the store),
+    ``clipped`` lists learners whose upload was norm-clipped before the row
+    write (still aggregated, at reduced magnitude), and ``quarantined``
+    lists learners that crossed the quarantine threshold during the round
+    (excluded from *subsequent* cohort selection until decay releases them).
     """
 
     round_id: int
     cohort: list = dataclasses.field(default_factory=list)
     arrivals: list = dataclasses.field(default_factory=list)
     staleness: dict = dataclasses.field(default_factory=dict)
+    rejected: list = dataclasses.field(default_factory=list)
+    clipped: list = dataclasses.field(default_factory=list)
+    quarantined: list = dataclasses.field(default_factory=list)
     aggregated: bool = False
     n_arrived: int = 0
     weighting: str | None = None
@@ -295,6 +307,16 @@ class EventJournal:
                 if up is not None:
                     s.up_bytes = int(up) - prev_up
                     prev_up = int(up)
+            elif kind == "upload_rejected" and rid is not None:
+                summary(rid).rejected.append({
+                    "learner": rec.get("learner"),
+                    "reason": rec.get("reason"),
+                    "norm": rec.get("norm"),
+                })
+            elif kind == "upload_clipped" and rid is not None:
+                summary(rid).clipped.append(rec.get("learner"))
+            elif kind == "quarantine" and rid is not None:
+                summary(rid).quarantined.append(rec.get("learner"))
             elif kind == "evaluate" and rid is not None:
                 summary(rid).metrics = rec.get("metrics", {})
         return [rounds[k] for k in sorted(rounds)]
@@ -339,6 +361,32 @@ def _serialize_event(event: Any) -> dict:
         if getattr(event, "members", None):
             out["members"] = list(event.members)
         return out
+    if name == "UploadRejected":
+        norm = float(event.norm)
+        return {
+            "kind": "upload_rejected",
+            "round": int(event.round_id),
+            "learner": event.learner_id,
+            "reason": event.reason,
+            # NaN/inf norms (the usual rejection cause) are not JSON —
+            # stringify so sink files stay loadable by strict parsers.
+            "norm": norm if math.isfinite(norm) else repr(norm),
+        }
+    if name == "UploadClipped":
+        return {
+            "kind": "upload_clipped",
+            "round": int(event.round_id),
+            "learner": event.learner_id,
+            "norm": float(event.norm),
+            "limit": float(event.limit),
+        }
+    if name == "LearnerQuarantined":
+        return {
+            "kind": "quarantine",
+            "round": int(event.round_id),
+            "learner": event.learner_id,
+            "score": float(event.score),
+        }
     if name == "DeadlineExpired":
         return {"kind": "deadline", "round": int(event.round_id)}
     if name == "Evaluated":

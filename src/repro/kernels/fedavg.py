@@ -57,7 +57,8 @@ def choose_block_p(n_learners: int, dtype_bytes: int = 4,
     return int(min(aligned, 1 << 20))
 
 
-def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024) -> int:
+def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024,
+                            budget: int = VMEM_BUDGET_BYTES) -> int:
     """Largest lane-aligned *divisor* of ``p`` whose working set fits VMEM.
 
     The arena hot path must not pad: re-padding the whole ``(N, P)`` arena to
@@ -67,7 +68,7 @@ def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024) 
     non-aligned ad-hoc P there may be none, in which case we return
     :func:`choose_block_p` and the caller pads (legacy behaviour).
     """
-    cap = choose_block_p(n_learners)
+    cap = choose_block_p(n_learners, budget=budget)
     if p <= 0 or p % lane_multiple:
         return cap
     if p <= cap:
@@ -83,7 +84,8 @@ def choose_block_p_dividing(p: int, n_learners: int, lane_multiple: int = 1024) 
 
 
 def choose_block_p_for_shard(
-    p: int, n_learners: int, n_shards: int, lane_multiple: int = 1024
+    p: int, n_learners: int, n_shards: int, lane_multiple: int = 1024,
+    budget: int = VMEM_BUDGET_BYTES,
 ) -> int:
     """Block size for one column shard of a mesh-sharded arena.
 
@@ -97,10 +99,11 @@ def choose_block_p_for_shard(
     caller pads, legacy behaviour).
     """
     if n_shards <= 1:
-        return choose_block_p_dividing(p, n_learners, lane_multiple)
+        return choose_block_p_dividing(p, n_learners, lane_multiple, budget)
     if p % n_shards:
-        return choose_block_p(n_learners)
-    return choose_block_p_dividing(p // n_shards, n_learners, lane_multiple)
+        return choose_block_p(n_learners, budget=budget)
+    return choose_block_p_dividing(p // n_shards, n_learners, lane_multiple,
+                                   budget)
 
 
 def _fedavg_kernel(w_ref, stack_ref, out_ref):

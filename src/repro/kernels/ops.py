@@ -14,12 +14,14 @@ import jax.numpy as jnp
 
 from repro.kernels import fedavg as _fedavg
 from repro.kernels import quantize as _quant
+from repro.kernels import robust as _robust
 
 # CPU backend -> interpret mode.
 INTERPRET = jax.default_backend() == "cpu"
 
 __all__ = [
     "fedavg", "masked_fedavg", "masked_fedavg_sharded",
+    "masked_trimmed_mean", "masked_trimmed_mean_sharded",
     "quantize", "dequantize", "QuantCodec",
 ]
 
@@ -67,6 +69,66 @@ def masked_fedavg(arena: jax.Array, weights: jax.Array, mask: jax.Array,
         padded, weights, mask, block_p=block_p, interpret=INTERPRET
     )
     return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("trim_k", "block_p"))
+def masked_trimmed_mean(arena: jax.Array, weights: jax.Array, mask: jax.Array,
+                        trim_k: int = 1, block_p: int | None = None) -> jax.Array:
+    """Kernel-backed masked trimmed mean over a device-resident arena.
+
+    The robust-rule hot path (``kernels/robust.py`` rank-select kernel):
+    signature-compatible with ``core/aggregation.masked_trimmed_mean`` —
+    ``weights`` is accepted and ignored, order statistics being deliberately
+    weight-blind.  The default block divides the arena's lane-aligned width
+    under the robust kernel's tighter VMEM budget, so the hot path runs with
+    zero re-padding; ad-hoc shapes pay the pad copy."""
+    del weights  # order statistics are weight-blind by design
+    if block_p is None:
+        block_p = _fedavg.choose_block_p_dividing(
+            arena.shape[1], arena.shape[0],
+            budget=_robust.ROBUST_VMEM_BUDGET_BYTES,
+        )
+    padded, p = _pad_to(arena, block_p, axis=1)
+    out = _robust.masked_trimmed_mean_pallas(
+        padded, mask, trim_k=trim_k, block_p=block_p, interpret=INTERPRET
+    )
+    return out[:p]
+
+
+def masked_trimmed_mean_sharded(mesh, axes=None, trim_k: int = 1):
+    """Kernel-backed masked trimmed mean over a mesh-sharded arena.
+
+    Returns a jitted ``(arena (N_max,P), weights, mask) -> (P,)`` running
+    :func:`masked_trimmed_mean` per column shard under ``shard_map`` — the
+    rule is coordinate-wise, so each device rank-selects within its own
+    ``(N_max, P/n_shards)`` slice and the compiled program contains zero
+    collectives, exactly like :func:`masked_fedavg_sharded`.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.aggregation import arena_axes
+
+    ax = arena_axes(mesh, axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in ax], dtype=np.int64))
+
+    def _local(arena, weights, mask):
+        block_p = _fedavg.choose_block_p_for_shard(
+            arena.shape[1] * n_shards, arena.shape[0], n_shards,
+            budget=_robust.ROBUST_VMEM_BUDGET_BYTES,
+        )
+        return masked_trimmed_mean(arena, weights, mask, trim_k=trim_k,
+                                   block_p=block_p)
+
+    sm = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(None, ax), P(), P()),
+        out_specs=P(ax),
+        check_vma=False,
+    )
+    return jax.jit(sm)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "block_rows"))

@@ -8,7 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fedavg_ref", "masked_fedavg_ref", "quantize_ref", "dequantize_ref"]
+__all__ = [
+    "fedavg_ref", "masked_fedavg_ref", "masked_trimmed_mean_ref",
+    "quantize_ref", "dequantize_ref",
+]
 
 
 def fedavg_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
@@ -33,6 +36,33 @@ def masked_fedavg_ref(
                   m / jnp.maximum(jnp.sum(m), 1.0))
     rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
     return jnp.einsum("n,np->p", w, rows)
+
+
+def masked_trimmed_mean_ref(
+    arena: jax.Array, mask: jax.Array, trim_k: int
+) -> jax.Array:
+    """(N, P) x (N,) -> (P,) trimmed mean over valid rows, f32.
+
+    Sort-then-trim oracle: invalid rows float to ``+inf``, the surviving
+    band is ranks ``[trim_k, n_valid - trim_k)``; a degenerate cohort falls
+    back to the untrimmed masked mean, matching the kernel and
+    ``core/aggregation.masked_trimmed_mean``.
+    """
+    m = mask.astype(jnp.float32)
+    n = arena.shape[0]
+    rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), jnp.inf)
+    s = jnp.sort(rows, axis=0)
+    n_valid = jnp.sum(m).astype(jnp.int32)
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    band = (ranks >= trim_k) & (ranks < n_valid - trim_k)
+    count = jnp.sum(band.astype(jnp.float32))
+    trimmed = jnp.sum(jnp.where(band[:, None], s, 0.0), axis=0) / jnp.maximum(
+        count, 1.0
+    )
+    fb = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
+    fallback = jnp.sum(fb, axis=0) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.where(count > 0, trimmed,
+                     jnp.where(n_valid > 0, fallback, 0.0))
 
 
 def quantize_ref(x: jax.Array, group: int = 256) -> tuple[jax.Array, jax.Array]:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    ADVERSARIAL_FATES,
     AsyncProtocol,
     BufferedAsyncProtocol,
     Controller,
@@ -44,7 +45,7 @@ from repro.core import (
     Telemetry,
 )
 
-__all__ = ["SimLearner", "run_stress", "STRESS_PROTOCOLS"]
+__all__ = ["SimLearner", "run_stress", "target_value", "STRESS_PROTOCOLS"]
 
 # The protocols the nightly --stress arm sweeps.
 STRESS_PROTOCOLS = (
@@ -55,6 +56,15 @@ _FAULT_COUNTERS = (
     "orphaned", "uploads_lost", "uploads_duplicated", "uploads_late",
     "deadline_fires", "dropouts", "rejoins", "stragglers",
 )
+
+
+def target_value(round_id: int) -> float:
+    """The per-round consensus value honest ``value_mode="target"`` rows carry.
+
+    Deterministic, bounded away from 0 so a sign-flipped row is a *distinct*
+    wrong answer and ``final_eval_loss`` ratios are well-conditioned.
+    """
+    return 0.25 + ((int(round_id) * 37) % 50) / 100.0
 
 
 class SimLearner(Learner):
@@ -69,21 +79,37 @@ class SimLearner(Learner):
     """
 
     def __init__(self, learner_id: str, injector: FaultInjector,
-                 num_examples: int = 16):
-        """A simulated learner bound to one fault injector."""
+                 num_examples: int = 16, value_mode: str = "crc"):
+        """A simulated learner bound to one fault injector.
+
+        ``value_mode="crc"`` (default) fills each row with a per-(learner,
+        round) pseudo-random value — wide norm spread, good for transport
+        stress.  ``"target"`` makes every honest row *exactly*
+        ``target_value(round_id)``: the faultless global model then equals
+        the target bit-for-bit, so byzantine-robustness demos compare
+        ``final_eval_loss`` against a deterministic zero baseline instead
+        of a flaky noise floor.
+        """
         super().__init__(
             learner_id, loss_fn=None, eval_fn=None, data_fn=None,
             eval_data_fn=None, optimizer=None, num_examples=num_examples,
         )
+        if value_mode not in ("crc", "target"):
+            raise ValueError(f"value_mode must be 'crc' or 'target', "
+                             f"got {value_mode!r}")
         self._injector = injector
+        self._value_mode = value_mode
 
     def fit(self, params, task) -> LocalUpdate:
         """Fabricate one deterministic update for this (learner, round)."""
         rid = int(task.round_id)
         sps = self._injector.step_time(self.learner_id, rid)
-        value = (
-            zlib.crc32(f"{self.learner_id}:{rid}".encode()) % 100_000
-        ) / 100_000.0
+        if self._value_mode == "target":
+            value = target_value(rid)
+        else:
+            value = (
+                zlib.crc32(f"{self.learner_id}:{rid}".encode()) % 100_000
+            ) / 100_000.0
         width = self._upload_pad
         row = np.full((width,), np.float32(value), dtype=np.float32)
         upload = self._channel.upload(
@@ -144,6 +170,10 @@ def run_stress(
     model_params: int = 64,
     buffer_k: int | None = None,
     deadline_s: float = 0.05,
+    aggregation_rule: str = "fedavg",
+    trim_k: int = 1,
+    value_mode: str = "crc",
+    admission_control: bool | None = None,
 ) -> dict:
     """One deterministic stress run; returns the bench JSON row.
 
@@ -152,10 +182,22 @@ def run_stress(
     and drives ``rounds`` federation rounds (round-based policies) or the
     equivalent number of community-update batches (continuous policies).
     The returned row carries uploads/sec, rounds/sec, the staleness
-    histogram, every ``engine.faults.*`` counter, and — when
-    ``journal_path`` is given — the journal JSONL's sha256.
+    histogram, every ``engine.faults.*`` counter (including the per-fate
+    ``adversarial`` and admission/quarantine blocks), the host-computed
+    ``final_eval_loss`` against the ``value_mode="target"`` consensus
+    value, and — when ``journal_path`` is given — the journal JSONL's
+    sha256.
+
+    ``aggregation_rule``/``trim_k`` select the community reduction
+    (byzantine arms run ``"median"``/``"trimmed_mean"``).
+    ``admission_control=None`` enables the ingest screen exactly when the
+    spec configures adversaries: the crc value mode fabricates legitimate
+    rows whose norms swing 1000x between learners, which the clip screen
+    would (correctly, but unhelpfully) mangle in faultless runs.
     """
     spec = spec if spec is not None else FaultSpec()
+    if admission_control is None:
+        admission_control = spec.adversarial_fraction > 0
     if journal_path is not None:
         # The journal sink appends (flight-recorder semantics); a stress
         # row's JSONL must cover exactly this run, so start clean.
@@ -172,12 +214,14 @@ def run_stress(
     ctrl = Controller(
         protocol=proto, channel=channel, store_mode="arena",
         arena_n_max=learners, max_dispatch_workers=1, journal=journal,
+        aggregation_rule=aggregation_rule, trim_k=trim_k,
+        admission_control=admission_control,
     )
     ctrl.set_initial_model(
         {"w": jnp.zeros((model_params,), jnp.float32)}
     )
     fleet = {
-        f"l{i:04d}": SimLearner(f"l{i:04d}", injector)
+        f"l{i:04d}": SimLearner(f"l{i:04d}", injector, value_mode=value_mode)
         for i in range(learners)
     }
     for lid, learner in fleet.items():
@@ -202,6 +246,13 @@ def run_stress(
         else:
             ctrl.engine.run(rounds=1)
     wall_s = time.perf_counter() - t0
+    # Host-side eval: squared distance between the final global model and
+    # the last aggregated round's consensus target.  Exactly 0 for a
+    # faultless value_mode="target" run (honest rows ARE the target);
+    # byzantine arms compare against that zero baseline.
+    final_target = target_value(max(int(ctrl.round_id) - 1, 0))
+    gbuf = np.asarray(ctrl.global_buffer)[:model_params]
+    final_eval_loss = float(np.mean((gbuf - np.float32(final_target)) ** 2))
     ctrl.shutdown()
 
     staleness_hist: dict[str, int] = {}
@@ -216,17 +267,32 @@ def run_stress(
         "learners": learners,
         "rounds": rounds,
         "fault_seed": spec.seed,
+        "aggregation_rule": aggregation_rule,
         "wall_s": wall_s,
         "uploads": uploads,
         "uploads_per_s": uploads / wall_s if wall_s > 0 else 0.0,
         "aggregates": aggregates,
         "rounds_per_s": aggregates / wall_s if wall_s > 0 else 0.0,
+        "final_eval_loss": final_eval_loss,
         "staleness_hist": dict(sorted(staleness_hist.items())),
         "faults": {
             name: int(telemetry.value(f"engine.faults.{name}"))
             if name != "orphaned"
             else int(telemetry.value("engine.uploads.orphaned"))
             for name in _FAULT_COUNTERS
+        },
+        "adversarial": {
+            fate: int(telemetry.value(f"engine.faults.adversarial.{fate}"))
+            for fate in ADVERSARIAL_FATES
+        },
+        "admission": {
+            "rejected_nonfinite": int(
+                telemetry.value("engine.uploads.rejected.nonfinite")
+            ),
+            "clipped": int(telemetry.value("engine.uploads.clipped")),
+            "quarantine_entered": int(
+                telemetry.value("engine.quarantine.entered")
+            ),
         },
     }
     if journal_path is not None:

@@ -76,3 +76,97 @@ def test_faultless_spec_runs_clean(tmp_path):
                      journal_path=str(tmp_path / "journal.jsonl"))
     assert row["uploads"] == 32  # every learner, every round, no faults
     assert all(v == 0 for v in row["faults"].values())
+    assert all(v == 0 for v in row["adversarial"].values())
+    assert all(v == 0 for v in row["admission"].values())
+
+
+# -- byzantine arms ----------------------------------------------------------
+
+ADVERSARIAL = FaultSpec(
+    seed=7, adversarial_fraction=0.15,
+    adversarial_fates=("scale", "sign_flip"),
+)
+
+
+@pytest.mark.stress_smoke
+def test_adversarial_run_is_byte_identical(tmp_path):
+    """The byzantine arm honours the same --fault-seed determinism contract:
+    corruption draws, admission clips and quarantine entries are all
+    decision-keyed, so two runs emit byte-identical journal JSONL."""
+    a_path, b_path = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    kw = dict(protocol="sync", learners=24, rounds=4, spec=ADVERSARIAL,
+              value_mode="target", aggregation_rule="trimmed_mean", trim_k=6)
+    a = run_stress(journal_path=a_path, **kw)
+    b = run_stress(journal_path=b_path, **kw)
+    with open(a_path, "rb") as fa, open(b_path, "rb") as fb:
+        assert fa.read() == fb.read()
+    assert a["journal_sha256"] == b["journal_sha256"]
+    assert a["adversarial"] == b["adversarial"]
+    assert a["admission"] == b["admission"]
+    assert a["final_eval_loss"] == b["final_eval_loss"]
+
+
+@pytest.mark.stress_smoke
+def test_adversarial_counters_clipping_and_quarantine(tmp_path):
+    """Scale blow-ups get clipped, repeat offenders get quarantined, and the
+    per-fate adversarial counters land in the summary row."""
+    row = run_stress(protocol="sync", learners=64, rounds=5, spec=ADVERSARIAL,
+                     value_mode="target", aggregation_rule="trimmed_mean",
+                     trim_k=16, journal_path=str(tmp_path / "journal.jsonl"))
+    assert row["adversarial"]["scale"] > 0
+    assert row["adversarial"]["sign_flip"] > 0
+    assert row["adversarial"]["nan"] == row["adversarial"]["garbage"] == 0
+    # every scale fate hit the clip screen (sign flips are norm-invariant)
+    assert row["admission"]["clipped"] == row["adversarial"]["scale"]
+    assert row["admission"]["quarantine_entered"] > 0
+    # quarantine shrinks later cohorts: fewer uploads than learners * rounds
+    assert row["uploads"] < 64 * 5
+
+
+@pytest.mark.stress_smoke
+def test_nan_fates_reconcile_with_rejections(tmp_path):
+    """No NaN ever reaches the global model: every injected nan fate is
+    rejected at admission (exact counter reconciliation) and the journal
+    replay names each excluded row."""
+    from repro.core import EventJournal
+
+    spec = FaultSpec(seed=11, adversarial_fraction=0.2,
+                     adversarial_fates=("nan",))
+    path = str(tmp_path / "journal.jsonl")
+    row = run_stress(protocol="sync", learners=32, rounds=3, spec=spec,
+                     value_mode="target", aggregation_rule="median",
+                     journal_path=path)
+    n_nan = row["adversarial"]["nan"]
+    assert n_nan > 0
+    assert row["admission"]["rejected_nonfinite"] == n_nan
+    # the surviving global model is finite and still on target
+    assert row["final_eval_loss"] < 1e-9
+    # replay() surfaces why each row was excluded
+    records = EventJournal.read_jsonl(path)
+    rejected_recs = [r for r in records if r.get("kind") == "upload_rejected"]
+    assert len(rejected_recs) == n_nan
+    assert all(r["reason"] == "nonfinite" for r in rejected_recs)
+    summaries = EventJournal().replay(records)
+    replayed = [rej for s in summaries for rej in s.rejected]
+    assert len(replayed) == n_nan
+    assert all(r["reason"] == "nonfinite" for r in replayed)
+
+
+@pytest.mark.slow
+def test_thousand_learner_byzantine_demo():
+    """The headline: at N=1000 with ~15% scale/sign-flip adversaries,
+    trimmed_mean tracks the faultless baseline while FedAvg degrades."""
+    kw = dict(protocol="sync", learners=1000, rounds=3, value_mode="target")
+    base = run_stress(aggregation_rule="fedavg", **kw)
+    fed = run_stress(spec=ADVERSARIAL, aggregation_rule="fedavg", **kw)
+    tm = run_stress(spec=ADVERSARIAL, aggregation_rule="trimmed_mean",
+                    trim_k=250, **kw)
+    # the faultless baseline sits at f32-accumulation epsilon
+    assert base["final_eval_loss"] < 1e-9
+    # trimmed_mean stays within 10% of the baseline (absolute floor guards
+    # the 0-vs-0 comparison against eps-level flakiness)
+    assert tm["final_eval_loss"] <= max(1.1 * base["final_eval_loss"], 1e-9)
+    # FedAvg degrades >= 2x (in practice ~10^8 x: sign flips are invisible
+    # to the norm screen and pull the mean off target)
+    assert fed["final_eval_loss"] >= 2 * max(base["final_eval_loss"], 1e-12)
+    assert fed["final_eval_loss"] > 1e-4

@@ -151,6 +151,73 @@ def test_kill_and_resume_bit_identical(proto, store_mode, n, tmp_path):
     assert resumed._model_version == want_version
 
 
+@pytest.mark.parametrize("rule", ["median", "trimmed_mean"])
+@pytest.mark.parametrize("store_mode", ["arena", "stack"])
+def test_robust_rule_kill_and_resume_bit_identical(rule, store_mode,
+                                                   tmp_path):
+    """The byzantine-robust rows of the kill-and-resume grid: a federation
+    aggregating with a robust rule resumes bit-identically, and the
+    checkpoint pins the rule — resuming under a different one is refused
+    rather than silently switching reductions mid-workflow."""
+    kw = dict(aggregation_rule=rule, trim_k=1)
+    golden = _build("sync", store_mode, 4, **kw)
+    _run(golden, "sync", 4)
+    want = np.asarray(golden.global_buffer)
+    golden.shutdown()
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", store_mode, 4, checkpoint_dir=ckpt,
+                   checkpoint_every=2, **kw)
+    _run(first, "sync", 2)
+    first.shutdown()
+
+    wrong_rule = _build("sync", store_mode, 4)  # a fedavg controller
+    with pytest.raises(ValueError, match="aggregation_rule"):
+        wrong_rule.restore(ckpt)
+    wrong_rule.shutdown()
+
+    resumed = _build("sync", store_mode, 4, **kw)
+    meta = resumed.restore(ckpt)
+    assert meta["aggregation_rule"] == rule
+    _run(resumed, "sync", 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+    np.testing.assert_array_equal(got, want)  # bit-identical, not allclose
+
+
+def test_resume_restores_admission_and_quarantine_state(tmp_path):
+    """Admission EWMA, offense scores and the quarantine set survive a
+    kill: the resumed controller clips at the same norm limit and keeps
+    the same learners benched — an adversary cannot launder its history
+    through a controller restart."""
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", "arena", 3, aggregation_rule="trimmed_mean")
+    _run(first, "sync", 2)
+    # warm the admission EWMA past warmup, the way arriving uploads would
+    for i in range(10):
+        first._screen_upload("l0", jnp.full((4,), jnp.float32(1.0 + 0.1 * i)))
+    # two offenses push l0 over the threshold; one leaves l1 clean
+    assert first.note_offense("l0") is False
+    assert first.note_offense("l0") is True
+    first.note_offense("l1")
+    assert first.is_quarantined("l0") and not first.is_quarantined("l1")
+    want = (first._adm_ewma, first._adm_accepted,
+            dict(first._offenses), set(first._quarantined))
+    first.save_checkpoint(ckpt)
+    first.shutdown()
+
+    resumed = _build("sync", "arena", 3, aggregation_rule="trimmed_mean")
+    meta = resumed.restore(ckpt)
+    assert resumed._adm_ewma == want[0]  # floats round-trip exactly
+    assert resumed._adm_accepted == want[1]
+    assert resumed._offenses == want[2]
+    assert resumed._quarantined == want[3]
+    assert resumed.is_quarantined("l0") and not resumed.is_quarantined("l1")
+    assert meta["admission"]["accepted"] == want[1]
+    assert resumed.telemetry.value("engine.quarantine.active") == 1
+    resumed.shutdown()
+
+
 def test_secure_sync_resume_bit_identical(tmp_path):
     """Secure aggregation composes: mask sessions are keyed by round id /
     model version (both checkpointed), so the resumed fixed-point sums are

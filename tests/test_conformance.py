@@ -244,6 +244,167 @@ def test_int8_uplink_actually_compresses():
     assert raw_stats.upload_bytes / int8_stats.upload_bytes > 3.5
 
 
+# ---------------------------------------------------------------------------
+# robust aggregation rules (median / trimmed_mean)
+# ---------------------------------------------------------------------------
+
+_ROBUST_N, _ROBUST_ROUNDS, _TRIM_K = 4, 2, 1
+
+
+def _robust_reference(rule):
+    """f64 numpy order-statistics replay reference for the robust rules.
+
+    The robust rules are weight-blind, so the reference is plain
+    ``np.median`` / sort-then-trimmed-mean over the replayed upload stack,
+    pushed through the same fedavg server optimizer as the federation.
+    """
+    proto = SyncProtocol(local_steps=2, batch_size=16)
+    learners = [_make_learner(i) for i in range(_ROBUST_N)]
+    manifest = packing.build_manifest(_INIT)
+    gbuf = packing.pack_numeric(_INIT)
+    params = packing.unpack_numeric(gbuf, manifest)
+    server = make_server_optimizer("fedavg")
+    state = server.init(gbuf)
+    for r in range(_ROBUST_ROUNDS):
+        task = proto.make_task(r, {})
+        ups = [l.fit(params, task) for l in learners]
+        stack = np.stack([
+            np.asarray(packing.pack_numeric(u.params), np.float64)
+            for u in ups
+        ])
+        if rule == "median":
+            new = np.median(stack, axis=0)
+        else:
+            s = np.sort(stack, axis=0)
+            new = s[_TRIM_K:_ROBUST_N - _TRIM_K].mean(axis=0)
+        state, gbuf = server.apply(state, gbuf, jnp.asarray(new, jnp.float32))
+        params = packing.unpack_numeric(gbuf, manifest)
+    return np.asarray(params["w"])
+
+
+@pytest.mark.parametrize("codec", ["raw", "int8"])
+@pytest.mark.parametrize("store_mode", ["arena", "stack"])
+@pytest.mark.parametrize("rule", ["median", "trimmed_mean"])
+def test_robust_rules_conformance(rule, store_mode, codec):
+    """median / trimmed_mean × arena / stack × raw / int8 vs the f64 numpy
+    replay reference.  Order statistics are row-permutation invariant, so
+    even the arena arms (row order follows upload arrival order) get the
+    tight tolerance the fedavg grid reserves for deterministic combos."""
+    ctrl = Controller(
+        protocol=SyncProtocol(local_steps=2, batch_size=16),
+        store_mode=store_mode, upload_codec=codec,
+        aggregation_rule=rule, trim_k=_TRIM_K,
+    )
+    ctrl.set_initial_model(_INIT)
+    for i in range(_ROBUST_N):
+        ctrl.register_learner(_make_learner(i))
+    ctrl.engine.run(rounds=_ROBUST_ROUNDS)
+    got = np.asarray(ctrl.global_params["w"])
+    stats = ctrl.channel.stats
+    rejected = ctrl.telemetry.value("engine.uploads.rejected.nonfinite")
+    clipped = ctrl.telemetry.value("engine.uploads.clipped")
+    ctrl.shutdown()
+
+    ref = _robust_reference(rule)
+    if codec == "raw":
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    else:
+        np.testing.assert_allclose(got, ref, rtol=_INT8_RTOL, atol=_INT8_ATOL)
+    # honest cohorts sail through the default-on admission screen untouched
+    assert rejected == 0 and clipped == 0
+    assert stats.upload_messages == _ROBUST_N * _ROBUST_ROUNDS
+
+
+@pytest.mark.multidevice
+def test_robust_rules_sharded_arena():
+    """The robust rules on the mesh-sharded arena (8 forced host devices):
+    median / trimmed_mean × raw / int8 must match the f64 replay reference
+    — the column-sharded reduce may not change the order statistics."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    script = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Controller, Learner, SyncProtocol, packing
+        from repro.core.server_opt import make_server_optimizer
+        from repro.launch.mesh import make_controller_mesh
+        from repro.optim import sgd
+
+        INIT = {"w": np.zeros((4, 1), np.float32)}
+        N, ROUNDS, TRIM_K = 4, 2, 1
+
+        def make_learner(i):
+            def loss_fn(p, b):
+                return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+            rng = np.random.default_rng(i)
+            X = rng.normal(size=(64, 4)).astype(np.float32)
+            y = X @ np.ones((4, 1), np.float32)
+            def data_fn(bs):
+                j = rng.integers(0, 64, size=bs)
+                return X[j], y[j]
+            return Learner(
+                f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+                data_fn, lambda: (X, y), sgd(0.05), 64,
+            )
+
+        def reference(rule):
+            proto = SyncProtocol(local_steps=2, batch_size=16)
+            learners = [make_learner(i) for i in range(N)]
+            manifest = packing.build_manifest(INIT)
+            gbuf = packing.pack_numeric(INIT)
+            params = packing.unpack_numeric(gbuf, manifest)
+            server = make_server_optimizer("fedavg")
+            state = server.init(gbuf)
+            for r in range(ROUNDS):
+                task = proto.make_task(r, {})
+                ups = [l.fit(params, task) for l in learners]
+                stack = np.stack([
+                    np.asarray(packing.pack_numeric(u.params), np.float64)
+                    for u in ups
+                ])
+                if rule == "median":
+                    new = np.median(stack, axis=0)
+                else:
+                    s = np.sort(stack, axis=0)
+                    new = s[TRIM_K:N - TRIM_K].mean(axis=0)
+                state, gbuf = server.apply(
+                    state, gbuf, jnp.asarray(new, jnp.float32))
+                params = packing.unpack_numeric(gbuf, manifest)
+            return np.asarray(params["w"])
+
+        assert jax.device_count() == 8
+        for rule in ("median", "trimmed_mean"):
+            ref = reference(rule)
+            for codec in ("raw", "int8"):
+                ctrl = Controller(
+                    protocol=SyncProtocol(local_steps=2, batch_size=16),
+                    arena_mesh=make_controller_mesh(), upload_codec=codec,
+                    aggregation_rule=rule, trim_k=TRIM_K,
+                )
+                ctrl.set_initial_model(INIT)
+                for i in range(N):
+                    ctrl.register_learner(make_learner(i))
+                ctrl.engine.run(rounds=ROUNDS)
+                got = np.asarray(ctrl.global_params["w"])
+                ctrl.shutdown()
+                if codec == "raw":
+                    np.testing.assert_allclose(
+                        got, ref, rtol=1e-5, atol=1e-6,
+                        err_msg=f"{rule}/raw")
+                else:
+                    np.testing.assert_allclose(
+                        got, ref, rtol=0.02, atol=0.02,
+                        err_msg=f"{rule}/int8")
+        print("SHARDED-ROBUST-OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "SHARDED-ROBUST-OK" in out.stdout
+
+
 @pytest.mark.multidevice
 def test_conformance_matrix_sharded_arena():
     """The same grid on the mesh-sharded arena (8 forced host devices):

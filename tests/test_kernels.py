@@ -54,6 +54,60 @@ def test_fedavg_kernel_property_matches_oracle(n, seed):
 
 
 # ---------------------------------------------------------------------------
+# robust (trimmed-mean) kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,trim_k", [(3, 1), (8, 1), (8, 3), (16, 4)])
+@pytest.mark.parametrize("p", [1024, 5000])
+def test_trimmed_mean_kernel_sweep(n, trim_k, p):
+    arena = jax.random.normal(jax.random.key(n * p + trim_k), (n, p)) * 3
+    mask = (jax.random.uniform(jax.random.key(p + n), (n,)) > 0.3).astype(
+        jnp.float32
+    )
+    w = jnp.ones((n,))
+    got = ops.masked_trimmed_mean(arena, w, mask, trim_k=trim_k)
+    want = ref.masked_trimmed_mean_ref(arena, mask, trim_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_trimmed_mean_kernel_matches_core_rule():
+    from repro.core import aggregation
+
+    arena = jax.random.normal(jax.random.key(0), (12, 4096), jnp.float32)
+    mask = jnp.ones((12,)).at[3].set(0.0).at[7].set(0.0)
+    w = jnp.ones((12,))
+    got = ops.masked_trimmed_mean(arena, w, mask, trim_k=2)
+    want = aggregation.masked_trimmed_mean(arena, w, mask, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_trimmed_mean_kernel_ignores_dead_row_garbage():
+    arena = np.ones((6, 2048), np.float32)
+    arena[2] = np.nan
+    arena[4] = 1e30
+    mask = np.array([1, 1, 0, 1, 0, 1], np.float32)
+    got = ops.masked_trimmed_mean(jnp.asarray(arena), jnp.ones((6,)),
+                                  jnp.asarray(mask), trim_k=1)
+    np.testing.assert_allclose(np.asarray(got), np.ones(2048), atol=1e-6)
+
+
+def test_trimmed_mean_kernel_degenerate_cohort_falls_back():
+    arena = jax.random.normal(jax.random.key(5), (8, 1024), jnp.float32)
+    mask = jnp.zeros((8,)).at[0].set(1.0).at[5].set(1.0)
+    got = ops.masked_trimmed_mean(arena, jnp.ones((8,)), mask, trim_k=2)
+    want = (arena[0] + arena[5]) / 2.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_trimmed_mean_kernel_trim_k_trace_error():
+    arena = jnp.ones((4, 1024), jnp.float32)
+    with pytest.raises(ValueError, match="trim_k"):
+        ops.masked_trimmed_mean(arena, jnp.ones((4,)), jnp.ones((4,)),
+                                trim_k=2, block_p=1024)
+
+
+# ---------------------------------------------------------------------------
 # quantize kernels
 # ---------------------------------------------------------------------------
 
