@@ -26,6 +26,16 @@ Pallas trimmed-mean kernel (interpret mode on CPU) with an allclose parity
 check against the jnp rule — tracks the sort-vs-sum "robustness premium" a
 byzantine-tolerant controller pays per round.
 
+Fused dequant-into-aggregate (``run_fused``, ``--fused``): the int8-resident
+arena's aggregation paths — the fused single-pass reduction
+(``aggregation.masked_fedavg_q8``: read int8 rows + f32 group scales once,
+never build the f32 ``(N, P)`` stack) against the two-program
+dequantize-then-reduce alternative (materialize the f32 stack, then reduce —
+the stack crosses memory twice) and against the plain f32 arena, plus the
+blocked Pallas fused kernel (interpret mode on CPU) with an allclose parity
+check.  Bytes moved: ``~N·P·(1 + 4/group) + 4P`` fused vs ``~9·N·P``
+dequant-then-reduce; see ``benchmarks/roofline_table.py`` and docs/ARENA.md.
+
 Sharded-vs-single-device arena (``run_sharded``, ``--sharded``): the same
 masked reduction and row write on a mesh-sharded arena
 (``ArenaStore(mesh=...)``, every visible device) against the single-device
@@ -253,6 +263,117 @@ def run_robust(learner_counts=(8, 32, 64), param_counts=(1 << 20, 1 << 22),
     return rows
 
 
+def run_fused(shapes=((1 << 22, 8), (1 << 22, 32), (1 << 22, 64),
+                      (1 << 24, 32)),
+              iters=10):
+    """Fused dequant-into-aggregate vs dequantize-then-reduce (``--fused``).
+
+    Every arm aggregates the same N uploads resident in an int8
+    :class:`ArenaStore` (plus an f32 twin for the baseline):
+
+    * **fused** — ``aggregation.masked_fedavg_q8``: one program reads the
+      int8 rows and their per-group f32 scales and emits the masked weighted
+      mean; the f32 ``(N, P)`` stack is never materialized.
+    * **dequant_reduce** — what an int8-resident arena costs *without* the
+      fused path: program 1 dequantizes into an f32 ``(N, P)`` stack, program
+      2 reduces it.  The stack is written and re-read — ``~9·N·P`` bytes vs
+      the fused pass's ``~N·P·(1 + 4/group) + 4P``.
+    * **f32_arena** — the plain f32 arena reduction, for the residency-vs-
+      latency trade-off (4 bytes/param resident vs ~1.016).
+    * **kernel** — the blocked Pallas fused kernel
+      (``kernels/ops.masked_fedavg_q8``; interpret mode on CPU:
+      correctness-representative, not timing-representative).
+
+    Per-shape allclose parity (fused vs dequant-then-reduce vs the Pallas
+    kernel) keeps the bench honest; ``shapes`` is ``(P, N)`` pairs rather
+    than a cross product so the big-P row doesn't multiply against big N
+    (the dequant arm's f32 stack is the memory hog).
+    """
+    import functools
+
+    import numpy as np
+
+    from repro.kernels import ops as kops
+
+    @functools.partial(jax.jit, static_argnames=("group",))
+    def dequant_rows(q, scales, group):
+        n, p = q.shape
+        rows = q.astype(jnp.float32).reshape(n, p // group, group)
+        return (rows * scales[:, :, None]).reshape(n, p)
+
+    out_rows = []
+    for p, n in shapes:
+        arena = ArenaStore(num_params=p, n_max=n, row_align=1024,
+                           arena_dtype="int8")
+        f32 = ArenaStore(num_params=p, n_max=n, row_align=1024)
+        for i in range(n):
+            buf = jax.random.normal(jax.random.key(i), (p,), jnp.float32)
+            arena.write(f"l{i}", buf, weight=float(10 * (i + 1)))
+            f32.write(f"l{i}", buf, weight=float(10 * (i + 1)))
+            del buf
+        group = arena.qgroup
+
+        def fused_round():
+            with arena.lock:
+                return aggregation.masked_fedavg_q8(
+                    arena.buffer, arena.scales, arena.weights, arena.mask,
+                    group,
+                )[: arena.num_params]
+
+        def dequant_reduce_round():
+            with arena.lock:
+                stack = dequant_rows(arena.buffer, arena.scales, group)
+                jax.block_until_ready(stack)  # two programs, like real code
+                return aggregation.masked_weighted_average(
+                    stack, arena.weights, arena.mask
+                )[: arena.num_params]
+
+        def f32_round():
+            with f32.lock:
+                return aggregation.masked_weighted_average(
+                    f32.buffer, f32.weights, f32.mask
+                )[: f32.num_params]
+
+        def kernel_round():
+            with arena.lock:
+                return kops.masked_fedavg_q8(
+                    arena.buffer, arena.scales, arena.weights, arena.mask,
+                    group,
+                )[: arena.num_params]
+
+        want = np.asarray(dequant_reduce_round())
+        np.testing.assert_allclose(np.asarray(fused_round()), want,
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(kernel_round()), want,
+                                   rtol=2e-5, atol=2e-5)
+        t_fused = bench(fused_round, warmup=2, iters=iters)
+        t_dq = bench(dequant_reduce_round, warmup=2, iters=iters)
+        t_f32 = bench(f32_round, warmup=2, iters=iters)
+        t_kernel = bench(kernel_round, warmup=1, iters=2)
+
+        speedup = t_dq / t_fused
+        resident_q8 = arena.buffer.nbytes + arena.scales.nbytes
+        row = {
+            "bench": "fused_q8", "params": p, "learners": n, "group": group,
+            "fused_s": t_fused, "dequant_reduce_s": t_dq,
+            "f32_arena_s": t_f32, "kernel_interpret_s": t_kernel,
+            "resident_bytes_int8": resident_q8,
+            "resident_bytes_f32": f32.buffer.nbytes,
+            "shrink_resident": f32.buffer.nbytes / resident_q8,
+            "speedup_fused_vs_dequant": speedup,
+        }
+        out_rows.append(row)
+        print(
+            f"fused,P={p},N={n},fused={t_fused*1e3:.2f}ms,"
+            f"dequant_reduce={t_dq*1e3:.2f}ms,f32={t_f32*1e3:.2f}ms,"
+            f"kernel(interp)={t_kernel*1e3:.2f}ms,"
+            f"shrink={row['shrink_resident']:.2f}x,speedup={speedup:.2f}x",
+            flush=True,
+        )
+        del arena, f32
+    return out_rows
+
+
 def run_sharded(learner_counts=(8, 32), param_counts=(1 << 20, 1 << 22),
                 iters=10):
     """Sharded-vs-single-device arena: masked reduction + row-write latency.
@@ -348,13 +469,21 @@ def main(argv=None):
     ap.add_argument("--robust", action="store_true",
                     help="robust rules (median / trimmed mean) vs fedavg "
                          "off the arena, incl. the Pallas kernel")
+    ap.add_argument("--fused", action="store_true",
+                    help="int8 arena: fused dequant-into-aggregate vs "
+                         "dequantize-then-reduce vs the f32 arena")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump result rows as JSON")
     args = ap.parse_args(argv)
 
-    if args.sharded:
+    if args.fused:
+        if args.smoke:
+            rows = run_fused(shapes=((1 << 16, 4), (1 << 16, 8)), iters=3)
+        else:
+            rows = run_fused()
+    elif args.sharded:
         if args.smoke:
             rows = run_sharded(learner_counts=(4, 8), param_counts=(1 << 16,),
                                iters=3)

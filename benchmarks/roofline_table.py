@@ -8,6 +8,8 @@ import os
 
 HW_NOTE = "197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI, 16 GiB HBM per chip"
 
+HBM_GBPS = 819.0
+
 _ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 
 
@@ -71,6 +73,37 @@ def fmt_agg_table(recs: list[dict]) -> str:
     return head + "\n".join(lines) + "\n"
 
 
+def fmt_fused_q8_table(
+    shapes=((1 << 22, 8), (1 << 22, 32), (1 << 22, 64), (1 << 24, 32)),
+    group: int = 256,
+) -> str:
+    """Analytic bytes-moved roofline for the int8-arena aggregation paths.
+
+    The fused dequant-into-aggregate pass (``kernels/fused_agg``) reads the
+    int8 rows once plus their f32 group scales and writes the f32 output:
+    ``~N·P·(1 + 4/group) + 4·P`` bytes.  Dequantize-then-reduce reads the
+    same int8 + scales, *writes* the f32 ``(N, P)`` stack, then re-reads it
+    for the reduction: ``~9·N·P`` bytes.  HBM-bound times assume the
+    ``HW_NOTE`` chip's 819 GB/s; the bytes ratio is the memory-roofline
+    speedup ceiling ``benchmarks/bench_agg.py --fused`` measures against.
+    """
+    head = (
+        "| P (params) | N | fused MiB | dequant+reduce MiB | "
+        "fused HBM-bound ms | dequant+reduce ms | bytes ratio |\n"
+        "|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for p, n in shapes:
+        fused = n * p * (1 + 4 / group) + 4 * p
+        dq = 9 * n * p
+        lines.append(
+            f"| 2^{p.bit_length() - 1} | {n} | {fused / 2**20:.1f} | "
+            f"{dq / 2**20:.1f} | {fused / (HBM_GBPS * 1e9) * 1e3:.3f} | "
+            f"{dq / (HBM_GBPS * 1e9) * 1e3:.3f} | {dq / fused:.2f}x |"
+        )
+    return head + "\n".join(lines) + "\n"
+
+
 def summarize(
     sections=(
         ("Baseline 16×16 (pre-§Perf substrate; old collective parser)",
@@ -109,3 +142,6 @@ def summarize(
 if __name__ == "__main__":
     print(f"Hardware: {HW_NOTE}\n")
     print(summarize())
+    print("### Int8 arena: fused dequant-into-aggregate bytes moved "
+          "(analytic)\n")
+    print(fmt_fused_q8_table())

@@ -38,7 +38,9 @@ __all__ = [
     "masked_normalize",
     "masked_weighted_average",
     "masked_fedavg",
+    "masked_fedavg_q8",
     "masked_staleness_average",
+    "masked_staleness_q8",
     "coordinate_median",
     "trimmed_mean",
     "masked_coordinate_median",
@@ -47,7 +49,9 @@ __all__ = [
     "fedavg_sharded",
     "hierarchical_fedavg",
     "masked_fedavg_sharded",
+    "masked_fedavg_q8_sharded",
     "masked_staleness_sharded",
+    "masked_staleness_q8_sharded",
     "masked_median_sharded",
     "masked_trimmed_mean_sharded",
     "arena_axes",
@@ -134,6 +138,64 @@ def masked_staleness_average(
     w = staleness_weights(num_examples, stal, alpha)
     w = masked_normalize(w, m)
     rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
+    return jnp.einsum("n,np->p", w, rows)
+
+
+def _dequant_rows(q: jax.Array, scales: jax.Array, group: int) -> jax.Array:
+    """Dequantize ``(N, P)`` int8 rows with ``(N, P//group)`` f32 scales."""
+    n, p = q.shape
+    return (
+        q.astype(jnp.float32).reshape(n, p // group, group)
+        * scales[:, :, None]
+    ).reshape(n, p)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def masked_fedavg_q8(
+    q: jax.Array,
+    scales: jax.Array,
+    weights: jax.Array,
+    mask: jax.Array,
+    group: int = 256,
+) -> jax.Array:
+    """Masked FedAvg straight off a quantized arena — one fused XLA program.
+
+    ``(N, P)`` int8 × ``(N, P//group)`` f32 × ``(N,)`` × ``(N,)`` -> ``(P,)``:
+    the int8-arena statement of :func:`masked_weighted_average`.  Dequantize
+    (a per-group broadcast multiply), mask and reduce compile into a single
+    program, so the f32 ``(N, P)`` stack exists only as a fusion-internal
+    temporary XLA can tile away — never a second resident copy of the arena.
+    The controller's default dispatch for ``arena_dtype="int8"``; the Pallas
+    statement with explicit VMEM tiling is ``kernels/ops.masked_fedavg_q8``.
+    """
+    m = jnp.asarray(mask, jnp.float32)
+    w = masked_normalize(weights, m)
+    rows = jnp.where(m[:, None] > 0, _dequant_rows(q, scales, group), 0.0)
+    return jnp.einsum("n,np->p", w, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def masked_staleness_q8(
+    q: jax.Array,
+    scales: jax.Array,
+    num_examples: jax.Array,
+    versions: jax.Array,
+    current_version: jax.Array,
+    mask: jax.Array,
+    alpha: float = 0.5,
+    group: int = 256,
+) -> jax.Array:
+    """Asynchronous-protocol aggregation straight off a quantized arena.
+
+    The int8-arena statement of :func:`masked_staleness_average`: staleness
+    discount on the tiny replicated vectors, fused dequantize-mask-reduce on
+    the ``(N, P)`` int8 rows — numerically identical to dequantizing and
+    calling the f32 path, without ever materializing the f32 stack.
+    """
+    m = jnp.asarray(mask, jnp.float32)
+    stal = jnp.maximum(jnp.float32(current_version) - versions, 0.0)
+    w = masked_normalize(staleness_weights(num_examples, stal, alpha), m)
+    rows = jnp.where(m[:, None] > 0, _dequant_rows(q, scales, group), 0.0)
     return jnp.einsum("n,np->p", w, rows)
 
 
@@ -308,6 +370,55 @@ def masked_fedavg_sharded(mesh: Mesh, axes=None):
             NamedSharding(mesh, P()),
             NamedSharding(mesh, P()),
         ),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
+
+
+def masked_fedavg_q8_sharded(mesh: Mesh, axes=None, group: int = 256):
+    """Masked FedAvg over a column-sharded *quantized* arena — zero collectives.
+
+    Returns a jitted ``(q (N,P) int8, scales (N,P//group), weights, mask) ->
+    (P,)``: values and scales carry the same ``P(None, axes)`` column
+    sharding (``ArenaStore(arena_dtype="int8", mesh=...)`` keeps every shard
+    a whole number of groups), so each device fuses dequantize-mask-reduce
+    over its own slice and only the replicated ``(N,)`` vectors are reduced
+    globally — the same contract as :func:`masked_fedavg_sharded`.
+    """
+    ax = arena_axes(mesh, axes)
+
+    def _agg(q, scales, weights, mask):
+        return masked_fedavg_q8(q, scales, weights, mask, group)
+
+    repl = NamedSharding(mesh, P())
+    col = NamedSharding(mesh, P(None, ax))
+    return jax.jit(
+        _agg,
+        in_shardings=(col, col, repl, repl),
+        out_shardings=NamedSharding(mesh, P(ax)),
+    )
+
+
+def masked_staleness_q8_sharded(mesh: Mesh, axes=None, alpha: float = 0.5,
+                                group: int = 256):
+    """Sharded statement of :func:`masked_staleness_q8` for async int8 arenas.
+
+    Same sharding contract as :func:`masked_fedavg_q8_sharded`; the staleness
+    discount runs on the replicated ``(N,)`` vectors so the per-shard fused
+    dequantize-reduce stays collective-free.
+    """
+    ax = arena_axes(mesh, axes)
+
+    def _agg(q, scales, num_examples, versions, current_version, mask):
+        return masked_staleness_q8(
+            q, scales, num_examples, versions, current_version, mask,
+            alpha, group,
+        )
+
+    repl = NamedSharding(mesh, P())
+    col = NamedSharding(mesh, P(None, ax))
+    return jax.jit(
+        _agg,
+        in_shardings=(col, col, repl, repl, repl, repl),
         out_shardings=NamedSharding(mesh, P(ax)),
     )
 

@@ -31,6 +31,7 @@ __all__ = ["FederationConfig"]
 _STORE_MODES = ("auto", "arena", "stack")
 _UPLOAD_CODECS = ("raw", "int8")
 _AGGREGATION_RULES = ("fedavg", "median", "trimmed_mean")
+_ARENA_DTYPES = ("f32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,13 @@ class FederationConfig:
         Rows trimmed per side by ``"trimmed_mean"`` (>= 1; ignored by the
         other rules).  Must satisfy ``2 * trim_k < n_live`` at aggregate
         time; the arena capacity bound is checked at setup.
+    arena_dtype:
+        Resident precision of the arena rows: ``"f32"`` (default) keeps
+        full-precision rows; ``"int8"`` keeps blockwise-quantized rows
+        (int8 groups + per-group f32 scales, ~4x less device memory) and
+        aggregates through the fused dequant-into-aggregate path.
+        Requires an arena store with the default ``"fedavg"`` rule and no
+        secure aggregation — see the support matrix in ``docs/ARENA.md``.
     """
 
     store_mode: str = "auto"
@@ -96,6 +104,7 @@ class FederationConfig:
     journal_capacity: int = 4096
     aggregation_rule: str = "fedavg"
     trim_k: int = 1
+    arena_dtype: str = "f32"
 
     def __post_init__(self) -> None:
         """Validate every knob at construction time."""
@@ -143,6 +152,22 @@ class FederationConfig:
             )
         if not isinstance(self.trim_k, int) or self.trim_k < 1:
             raise ValueError(f"trim_k must be an int >= 1, got {self.trim_k!r}")
+        if self.arena_dtype not in _ARENA_DTYPES:
+            raise ValueError(
+                f"arena_dtype must be one of {_ARENA_DTYPES}, "
+                f"got {self.arena_dtype!r}"
+            )
+        if self.arena_dtype == "int8" and self.store_mode == "stack":
+            raise ValueError(
+                "arena_dtype='int8' requires an arena store; it cannot "
+                "combine with store_mode='stack'"
+            )
+        if self.arena_dtype == "int8" and self.aggregation_rule != "fedavg":
+            raise ValueError(
+                "arena_dtype='int8' supports only aggregation_rule='fedavg'; "
+                "the robust order-statistic rules sort full-precision rows "
+                f"(got {self.aggregation_rule!r}) — see docs/ARENA.md"
+            )
 
     @classmethod
     def from_kwargs(cls, **kwargs: Any) -> "FederationConfig":

@@ -47,7 +47,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, packing
+from repro.core import aggregation, packing, transport
 from repro.core.engine import RoundEngine, RoundTimings, UploadRejectedError
 from repro.core.journal import EventJournal, jsonable
 from repro.core.learner import Learner, LocalUpdate
@@ -201,6 +201,7 @@ class Controller:
         arena_row_align: int = 1024,
         arena_mesh: Any = None,
         arena_axes: Any = None,
+        arena_dtype: str = "f32",
         flat_uploads: bool = True,
         upload_codec: Any = None,
         profile_decay: float = 0.5,
@@ -220,6 +221,39 @@ class Controller:
     ):
         if store_mode not in ("arena", "stack"):
             raise ValueError(f"store_mode must be 'arena' or 'stack', got {store_mode!r}")
+        if arena_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"arena_dtype must be 'f32' or 'int8', got {arena_dtype!r}"
+            )
+        if arena_dtype == "int8":
+            # The quantized-resident arena supports exactly the weighted-
+            # average family (fused dequant-into-aggregate); everything that
+            # needs f32 rows declares itself f32-only instead of silently
+            # widening the resident state back to 4 bytes/param.
+            if store_mode != "arena":
+                raise ValueError(
+                    "arena_dtype='int8' requires store_mode='arena'; the "
+                    "stack store keeps decoded f32 buffers"
+                )
+            if secure:
+                raise ValueError(
+                    "arena_dtype='int8' cannot run under secure "
+                    "aggregation: mask-encoded fixed-point rows are f32-only"
+                )
+            if aggregation_rule != "fedavg":
+                raise ValueError(
+                    f"aggregation_rule={aggregation_rule!r} is f32-only: "
+                    "order statistics sort full-precision rows and have no "
+                    "fused dequantized form.  Use arena_dtype='f32' for "
+                    "robust rules — see the support matrix in docs/ARENA.md"
+                )
+            if aggregate_fn is not None or masked_aggregate_fn is not None:
+                raise ValueError(
+                    "arena_dtype='int8' cannot honour a custom aggregate_fn/"
+                    "masked_aggregate_fn: custom rules expect an f32 arena "
+                    "buffer, not int8 values + scales"
+                )
+        self.arena_dtype = arena_dtype
         if store is not None and store_mode == "arena":
             # An explicit hash-map store would be silently bypassed by the
             # arena hot path — refuse the contradiction instead.
@@ -307,6 +341,10 @@ class Controller:
         # Built lazily in set_initial_model when the arena is sharded.
         self._sharded_masked_fn: Callable | None = None
         self._sharded_staleness_fn: Callable | None = None
+        # Quantized-arena (arena_dtype='int8') sharded reductions — mutually
+        # exclusive with the f32 pair above.
+        self._sharded_q8_fn: Callable | None = None
+        self._sharded_staleness_q8_fn: Callable | None = None
         self.channel = channel or Channel()
         if upload_codec is not None:
             self.channel.upload_codec = get_upload_codec(upload_codec)
@@ -357,6 +395,15 @@ class Controller:
             "engine.uploads.rejected.nonfinite"
         )
         self._c_clipped = self.telemetry.counter("engine.uploads.clipped")
+        # Quantized-arena fast paths (docs/OBSERVABILITY.md): uploads landed
+        # in int8 form with no f32 materialization, and fused dequant-into-
+        # aggregate reductions fired.
+        self._c_quant_direct = self.telemetry.counter(
+            "engine.uploads.quantized_direct"
+        )
+        self._c_fused_agg = self.telemetry.counter(
+            "controller.aggregations.fused_q8"
+        )
         self._c_quarantined = self.telemetry.counter("engine.quarantine.entered")
         self._g_quarantine = self.telemetry.gauge("engine.quarantine.active")
         self._store_lock = threading.Lock()
@@ -431,6 +478,7 @@ class Controller:
                 mesh=self.arena_mesh,
                 axes=self.arena_axes,
                 telemetry=self.telemetry,
+                arena_dtype=self.arena_dtype,
             )
             # Deterministic row order: rows follow *registration* order, not
             # first-upload arrival order, so arena aggregation order — and
@@ -452,7 +500,22 @@ class Controller:
                 # reduction is matched to the configured aggregation_rule.
                 # A user-supplied masked rule is honoured as-is — it runs on
                 # the sharded buffer with whatever layout XLA infers.
-                if self._masked_is_default:
+                alpha = getattr(self.protocol, "staleness_alpha", 0.5)
+                if self.arena_dtype == "int8":
+                    # Quantized arena: the fused dequant-into-aggregate pair
+                    # (values + scales share the column sharding; zero
+                    # collectives).  Robust rules and custom fns were
+                    # rejected at construction, so fedavg is the only rule.
+                    self._sharded_q8_fn = aggregation.masked_fedavg_q8_sharded(
+                        self.arena.mesh, self.arena.axes, self.arena.qgroup
+                    )
+                    self._sharded_staleness_q8_fn = (
+                        aggregation.masked_staleness_q8_sharded(
+                            self.arena.mesh, self.arena.axes, alpha,
+                            self.arena.qgroup,
+                        )
+                    )
+                elif self._masked_is_default:
                     if self.aggregation_rule == "median":
                         self._sharded_masked_fn = (
                             aggregation.masked_median_sharded(
@@ -471,10 +534,12 @@ class Controller:
                                 self.arena.mesh, self.arena.axes
                             )
                         )
-                alpha = getattr(self.protocol, "staleness_alpha", 0.5)
-                self._sharded_staleness_fn = aggregation.masked_staleness_sharded(
-                    self.arena.mesh, self.arena.axes, alpha
-                )
+                if self.arena_dtype != "int8":
+                    self._sharded_staleness_fn = (
+                        aggregation.masked_staleness_sharded(
+                            self.arena.mesh, self.arena.axes, alpha
+                        )
+                    )
         for learner in self._learners.values():
             self._ship_manifest(learner)
 
@@ -620,7 +685,12 @@ class Controller:
         return self.channel.round_trip_s(down, int(up), learner_id=learner_id)
 
     # ---------------------------------------------------------------- ingest
-    def _upload_buffer(self, update: LocalUpdate, pad_to: int | None) -> jax.Array:
+    def _upload_buffer(
+        self,
+        update: LocalUpdate,
+        pad_to: int | None,
+        with_norm: bool = False,
+    ) -> jax.Array | tuple[jax.Array, jax.Array]:
         """The upload's decoded flat buffer, always off the measured uplink.
 
         Fast path: the learner already sent its packed row through
@@ -631,9 +701,15 @@ class Controller:
         still cross the same measured half, with the controller standing in
         for the learner's send: every upload on every protocol is encoded,
         byte-accounted, and decoded through the channel's upload codec.
+
+        With ``with_norm=True`` returns ``(buffer, norm)`` where ``norm``
+        is the f32 L2 norm as an *unread device scalar*, fused into the
+        same jitted decode — so the admission screen's single host sync
+        covers an already-computed value instead of launching (and
+        blocking on) a separate reduction per upload.
         """
         if update.upload is not None:
-            return self.channel.recv_upload(update.upload)
+            return self.channel.recv_upload(update.upload, with_norm=with_norm)
         buffer = update.buffer
         if buffer is None:
             self._c_fallback.add(1)
@@ -642,31 +718,32 @@ class Controller:
             buffer, metadata={"learner_id": update.learner_id,
                               "round_id": update.round_id},
         )
-        return self.channel.recv_upload(envelope)
+        return self.channel.recv_upload(envelope, with_norm=with_norm)
 
-    def _screen_upload(
-        self, learner_id: str, buffer: jax.Array
-    ) -> tuple[jax.Array, dict | None]:
-        """The admission screen: reject non-finite rows, clip norm outliers.
+    def _screen_norm(
+        self, learner_id: str, norm: float
+    ) -> tuple[float | None, dict | None]:
+        """The admission decision on an already-materialized norm scalar.
 
-        One scalar — the f32 L2 norm of the decoded buffer — covers both
-        checks: a single NaN/inf anywhere in the row makes the norm
-        non-finite (reject with :class:`UploadRejectedError`; counted in
+        A single NaN/inf anywhere in the row makes its norm non-finite
+        (reject with :class:`UploadRejectedError`; counted in
         ``engine.uploads.rejected.nonfinite``), and once
         ``admission_warmup`` uploads have seeded the EWMA of accepted
-        norms, a norm beyond ``admission_clip_factor`` times that EWMA is
-        rescaled down to the limit (counted in ``engine.uploads.clipped``).
-        Accepted (possibly clipped) norms feed the EWMA, so the envelope
-        tracks the federation's own update scale.  The norm readback is one
-        blocking device scalar per upload — the price of the screen.
+        norms, a norm beyond ``admission_clip_factor`` times that EWMA
+        must be rescaled down to the limit (counted in
+        ``engine.uploads.clipped``).  Accepted (possibly clipped) norms
+        feed the EWMA, so the envelope tracks the federation's own update
+        scale.
 
-        Returns ``(buffer, clip_info)`` where ``clip_info`` is ``None`` or
+        Returns ``(scale, clip_info)``: ``scale`` is the multiplicative
+        clip factor the caller must apply to the row (``None`` when the
+        row passes untouched), ``clip_info`` is ``None`` or
         ``{"norm": original, "limit": applied}``.
         """
-        norm = float(jnp.linalg.norm(buffer.astype(jnp.float32)))
         if not math.isfinite(norm):
             self._c_rejected_nonfinite.add(1)
             raise UploadRejectedError(learner_id, "nonfinite", norm)
+        scale: float | None = None
         clip: dict | None = None
         if (
             self._adm_ewma is not None
@@ -674,7 +751,7 @@ class Controller:
         ):
             limit = self.admission_clip_factor * self._adm_ewma
             if norm > limit > 0.0:
-                buffer = buffer * jnp.asarray(limit / norm, buffer.dtype)
+                scale = limit / norm
                 self._c_clipped.add(1)
                 clip = {"norm": norm, "limit": limit}
                 norm = limit
@@ -684,6 +761,32 @@ class Controller:
             else d * self._adm_ewma + (1.0 - d) * norm
         )
         self._adm_accepted += 1
+        return scale, clip
+
+    def _screen_upload(
+        self,
+        learner_id: str,
+        buffer: jax.Array,
+        norm: jax.Array | None = None,
+    ) -> tuple[jax.Array, dict | None]:
+        """The admission screen: reject non-finite rows, clip norm outliers.
+
+        One scalar — the f32 L2 norm of the decoded buffer — covers both
+        checks (see :meth:`_screen_norm` for the decision itself).  The
+        norm readback is the screen's single blocking host sync per
+        upload; pass ``norm`` (an unread device scalar fused into the
+        upload decode by ``recv_upload(..., with_norm=True)``) so that
+        sync reads back an already-scheduled value instead of launching a
+        fresh full-row reduction and waiting on it.
+
+        Returns ``(buffer, clip_info)`` where ``clip_info`` is ``None`` or
+        ``{"norm": original, "limit": applied}``.
+        """
+        if norm is None:
+            norm = transport._row_norm(buffer)
+        scale, clip = self._screen_norm(learner_id, float(norm))
+        if scale is not None:
+            buffer = buffer * jnp.asarray(scale, buffer.dtype)
         return buffer, clip
 
     def ingest(self, update: LocalUpdate) -> dict | None:
@@ -705,24 +808,77 @@ class Controller:
         :class:`~repro.core.engine.UploadRejectedError` (nothing is stored;
         the engine journals the rejection and treats the learner as
         dropped for the round), and norm outliers are clipped before the
-        row write.  Returns the screen's clip info (``None`` when the
-        upload was stored untouched) so the engine can journal the clip.
+        row write.  The screen's norm is fused into the upload decode
+        (``recv_upload(..., with_norm=True)``), so admission costs one
+        host readback of an already-scheduled scalar instead of a
+        blocking full-row reduction per upload.  Returns the screen's
+        clip info (``None`` when the upload was stored untouched) so the
+        engine can journal the clip.
+
+        Quantized arenas (``arena_dtype='int8'``) take a *direct landing*
+        when the wire codec matches the arena layout (int8 codec, same
+        quantization group, row-width payload): the wire's int8 groups and
+        f32 scales are split device-side and written straight into the
+        arena — no f32 materialization, no requantization.  Norm
+        screening happens in quantized form
+        (:math:`\\sqrt{\\sum_g s_g^2 \\sum_i q_{g,i}^2}`) and clipping
+        rescales the scales vector.  Counted in
+        ``engine.uploads.quantized_direct``.
         """
         clip: dict | None = None
         if self.store_mode == "arena":
-            buffer = self._upload_buffer(update, pad_to=self.arena.padded_params)
-            if self.admission_control:
-                buffer, clip = self._screen_upload(update.learner_id, buffer)
-            self.arena.write(
-                update.learner_id,
-                buffer,
-                weight=float(update.num_examples),
-                version=float(self._learner_versions.get(update.learner_id, 0)),
-            )
+            if self._quant_direct_ok(update):
+                q, scales, norm = self.channel.recv_upload_quantized(
+                    update.upload, self.arena.padded_params
+                )
+                if self.admission_control:
+                    scale, clip = self._screen_norm(
+                        update.learner_id, float(norm)
+                    )
+                    if scale is not None:
+                        # Clipping a quantized row == rescaling its scales.
+                        scales = scales * jnp.float32(scale)
+                self.arena.write_quantized(
+                    update.learner_id,
+                    q,
+                    scales,
+                    weight=float(update.num_examples),
+                    version=float(
+                        self._learner_versions.get(update.learner_id, 0)
+                    ),
+                )
+                self._c_quant_direct.add(1)
+            else:
+                if self.admission_control:
+                    buffer, norm = self._upload_buffer(
+                        update, pad_to=self.arena.padded_params,
+                        with_norm=True,
+                    )
+                    buffer, clip = self._screen_upload(
+                        update.learner_id, buffer, norm=norm
+                    )
+                else:
+                    buffer = self._upload_buffer(
+                        update, pad_to=self.arena.padded_params
+                    )
+                self.arena.write(
+                    update.learner_id,
+                    buffer,
+                    weight=float(update.num_examples),
+                    version=float(
+                        self._learner_versions.get(update.learner_id, 0)
+                    ),
+                )
         else:
-            buffer = self._upload_buffer(update, pad_to=None)
             if self.admission_control:
-                buffer, clip = self._screen_upload(update.learner_id, buffer)
+                buffer, norm = self._upload_buffer(
+                    update, pad_to=None, with_norm=True
+                )
+                buffer, clip = self._screen_upload(
+                    update.learner_id, buffer, norm=norm
+                )
+            else:
+                buffer = self._upload_buffer(update, pad_to=None)
             with self._store_lock:
                 self.store.insert(
                     ModelRecord(
@@ -744,6 +900,26 @@ class Controller:
         if update.upload is not None:
             prof.observe_upload_bytes(update.upload.payload.nbytes)
         return clip
+
+    def _quant_direct_ok(self, update: LocalUpdate) -> bool:
+        """True when the upload can land in the int8 arena without dequant.
+
+        Requires an int8 arena, a wire envelope from the registry ``int8``
+        codec whose quantization group matches the arena's ``qgroup``, and
+        a payload already packed at the arena's padded row width (the
+        ``flat_uploads`` fast path).  Anything else — raw codec, custom
+        codec objects, group mismatch, legacy pytree uploads — falls back
+        to the f32 decode, and :meth:`ArenaStore.write` requantizes.
+        """
+        if self.arena is None or self.arena.arena_dtype != "int8":
+            return False
+        env = update.upload
+        return (
+            env is not None
+            and env.codec == "int8"
+            and int(env.codec_params.get("group", 0)) == self.arena.qgroup
+            and int(env.num_elements) == self.arena.padded_params
+        )
 
     # ------------------------------------------------------------ quarantine
     def offense_score(self, learner_id: str) -> float:
@@ -894,6 +1070,20 @@ class Controller:
             if arena.num_valid(list(selected)) == 0:
                 raise RuntimeError("no local models available to aggregate")
             mask = arena.round_mask(list(selected))
+            if self.arena_dtype == "int8":
+                # Fused dequant-into-aggregate: the reduce reads the int8
+                # groups + scales directly, never materializing (N, P) f32.
+                if self._sharded_q8_fn is not None:
+                    out = self._sharded_q8_fn(
+                        arena.buffer, arena.scales, arena.weights, mask
+                    )
+                else:
+                    out = aggregation.masked_fedavg_q8(
+                        arena.buffer, arena.scales, arena.weights, mask,
+                        arena.qgroup,
+                    )
+                self._c_fused_agg.add(1)
+                return out[: arena.num_params]
             # Built only for the rule-matched defaults (_masked_is_default);
             # a custom masked rule always takes the plain call below.
             if self._sharded_masked_fn is not None:
@@ -901,6 +1091,30 @@ class Controller:
             else:
                 out = self.masked_aggregate_fn(arena.buffer, arena.weights, mask)
             return out[: arena.num_params]
+
+    def _staleness_q8(
+        self, arena: ArenaStore, mask: jax.Array, alpha: float
+    ) -> jax.Array:
+        """Staleness-damped fused reduce over the quantized arena.
+
+        Same math as ``masked_staleness_average`` with the dequant folded
+        into the weighted sum; dispatches the column-sharded variant when
+        the arena is sharded.  Counted in
+        ``controller.aggregations.fused_q8``.
+        """
+        if self._sharded_staleness_q8_fn is not None:
+            out = self._sharded_staleness_q8_fn(
+                arena.buffer, arena.scales, arena.weights, arena.versions,
+                jnp.float32(self._model_version), mask,
+            )
+        else:
+            out = aggregation.masked_staleness_q8(
+                arena.buffer, arena.scales, arena.weights, arena.versions,
+                jnp.float32(self._model_version), mask, alpha,
+                arena.qgroup,
+            )
+        self._c_fused_agg.add(1)
+        return out[: arena.num_params]
 
     def aggregate_community(self) -> float:
         """One staleness-weighted community update (the continuous policy).
@@ -922,6 +1136,8 @@ class Controller:
             with arena.lock:
                 if self.secure:
                     new_buffer = self._secure_community_arena(alpha)
+                elif self.arena_dtype == "int8":
+                    new_buffer = self._staleness_q8(arena, arena.mask, alpha)
                 elif self._sharded_staleness_fn is not None:
                     new_buffer = self._sharded_staleness_fn(
                         arena.buffer, arena.weights, arena.versions,
@@ -996,7 +1212,9 @@ class Controller:
                             "no local models available to aggregate"
                         )
                     mask = arena.round_mask(ordered)
-                    if self._sharded_staleness_fn is not None:
+                    if self.arena_dtype == "int8":
+                        new_buffer = self._staleness_q8(arena, mask, alpha)
+                    elif self._sharded_staleness_fn is not None:
                         new_buffer = self._sharded_staleness_fn(
                             arena.buffer, arena.weights, arena.versions,
                             jnp.float32(self._model_version), mask,
@@ -1150,7 +1368,10 @@ class Controller:
             extras["arena_weights"] = st["weights"]
             extras["arena_versions"] = st["versions"]
             extras["arena_valid"] = st["valid"]
+            if st.get("scales") is not None:
+                extras["arena_scales"] = st["scales"]
             meta["arena_rows"] = {k: int(v) for k, v in st["rows"].items()}
+            meta["arena_dtype"] = self.arena_dtype
         elif self.store_mode == "stack":
             records = self.store.export_records()
             meta["stack_records"] = [
@@ -1195,6 +1416,7 @@ class Controller:
             ("store_mode", self.store_mode),
             ("secure", bool(self.secure)),
             ("aggregation_rule", self.aggregation_rule),
+            ("arena_dtype", self.arena_dtype),
         ):
             if key in meta and meta[key] != mine:
                 raise ValueError(
@@ -1255,6 +1477,7 @@ class Controller:
                 versions=extras["arena_versions"],
                 valid=extras["arena_valid"],
                 rows=meta["arena_rows"],
+                scales=extras.get("arena_scales"),
             )
         elif self.store_mode == "stack" and "stack_records" in meta:
             self.store.restore_records([

@@ -92,6 +92,10 @@ class FederationEnv:
     # Uplink wire format for update buffers: "raw" (bit-transparent f32
     # bytes) or "int8" (blockwise quantization, ~3.9x fewer uplink bytes).
     upload_codec: str = "raw"
+    # Resident precision of the arena rows: "f32" (default) or "int8"
+    # (quantized-resident arena + fused dequant-into-aggregate reduce,
+    # ~4x less device memory; fedavg-only, no secure — docs/ARENA.md).
+    arena_dtype: str = "f32"
     # EWMA decay for the per-learner seconds-per-step estimate (0 = legacy
     # last-sample behaviour; see core/scheduler.LearnerProfile).
     profile_decay: float = 0.5
@@ -136,13 +140,14 @@ class FederationEnv:
                     prox_mu=self.prox_mu,
                     aggregation_rule=self.aggregation_rule,
                     trim_k=self.trim_k,
+                    arena_dtype=self.arena_dtype,
                 ),
             )
         else:
             for field in (
                 "store_mode", "arena_shards", "upload_codec", "flat_uploads",
                 "wire_aware", "profile_decay", "prox_mu",
-                "aggregation_rule", "trim_k",
+                "aggregation_rule", "trim_k", "arena_dtype",
             ):
                 object.__setattr__(self, field, getattr(self.config, field))
 
@@ -226,6 +231,7 @@ class Driver:
             profile_decay=env.profile_decay,
             aggregation_rule=env.aggregation_rule,
             trim_k=env.trim_k,
+            arena_dtype=env.arena_dtype,
             journal_sink=cfg.journal_sink,
             journal_capacity=cfg.journal_capacity,
             checkpoint_every=cfg.checkpoint_every,

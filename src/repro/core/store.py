@@ -305,11 +305,18 @@ class ArenaStore:
         mesh: Any = None,
         axes: Any = None,
         telemetry: Telemetry | None = None,
+        arena_dtype: str = "f32",
+        qgroup: int | None = None,
     ):
         if num_params < 1:
             raise ValueError("num_params must be >= 1")
+        if arena_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"arena_dtype must be 'f32' or 'int8', got {arena_dtype!r}"
+            )
         self.num_params = int(num_params)
         self.dtype = jnp.dtype(dtype)
+        self.arena_dtype = arena_dtype
         self.lock = threading.RLock()
         self.mesh = mesh
         if mesh is not None:
@@ -336,13 +343,36 @@ class ArenaStore:
             self._writer = None
             self._grower = _grown
             self.padded_params = round_up(self.num_params, row_align)
+        if arena_dtype == "int8":
+            from repro.kernels.quantize import DEFAULT_GROUP
+
+            self.qgroup = int(qgroup or DEFAULT_GROUP)
+            if self.shard_width % self.qgroup:
+                raise ValueError(
+                    f"int8 arena needs the per-shard row width "
+                    f"{self.shard_width} divisible by the quant group "
+                    f"{self.qgroup}; raise row_align or shrink the group"
+                )
+            self.buffer_dtype = jnp.dtype(jnp.int8)
+        else:
+            self.qgroup = int(qgroup) if qgroup else None
+            self.buffer_dtype = self.dtype
         n = max(1, int(n_max))
         self._rows: dict[str, int] = {}
         self._valid = np.zeros((n,), bool)
         self._weights_host = np.zeros((n,), np.float32)
         self._versions_host = np.zeros((n,), np.float32)
-        self.buffer = self._zeros((n, self.padded_params), self.dtype,
+        self.buffer = self._zeros((n, self.padded_params), self.buffer_dtype,
                                   self.buffer_sharding)
+        # Per-row per-group f32 dequantization scales of the int8 arena: the
+        # quantized row is column-aligned with its scales, so both shard with
+        # the same column specs (the scale width padded_params/qgroup stays a
+        # multiple of n_shards because shard_width % qgroup == 0).
+        self.scales = (
+            self._zeros((n, self.padded_params // self.qgroup), jnp.float32,
+                        self.buffer_sharding)
+            if arena_dtype == "int8" else None
+        )
         self.weights = jnp.zeros((n,), jnp.float32)
         self.versions = jnp.zeros((n,), jnp.float32)
         self.mask = jnp.zeros((n,), jnp.float32)
@@ -350,6 +380,8 @@ class ArenaStore:
         self._c_writes = self._telemetry.counter("store.arena.total_writes")
         self._c_bytes = self._telemetry.counter("store.arena.bytes_ingested")
         self._c_grows = self._telemetry.counter("store.arena.grow_events")
+        self._g_resident = self._telemetry.gauge("store.arena.bytes_resident")
+        self._g_resident.set(self.resident_bytes())
 
     @property
     def total_writes(self) -> int:
@@ -391,6 +423,8 @@ class ArenaStore:
 
     def _grow(self, n_new: int) -> None:
         self.buffer = self._grower(self.buffer, n_new=n_new)
+        if self.scales is not None:
+            self.scales = self._grower(self.scales, n_new=n_new)
         self.weights = _grown(self.weights, n_new)
         self.versions = _grown(self.versions, n_new)
         self.mask = _grown(self.mask, n_new)
@@ -403,6 +437,7 @@ class ArenaStore:
             [self._versions_host, np.zeros((pad,), np.float32)]
         )
         self._c_grows.add(1)
+        self._g_resident.set(self.resident_bytes())
 
     def _assign_row(self, learner_id: str) -> int:
         row = self._rows.get(learner_id)
@@ -440,6 +475,24 @@ class ArenaStore:
                 f"buffer has {buf.shape[0]} params, arena rows hold "
                 f"{self.num_params} (or {self.padded_params} pre-padded)"
             )
+        if self.arena_dtype == "int8":
+            # Quantize the f32 upload into the resident layout on device,
+            # then land it through the quantized write path.  The padded
+            # columns quantize to q=0/scale=1.0 exactly (zero-amax fallback).
+            from repro.kernels import ops, quantize as quant
+
+            if buf.shape[0] != self.padded_params:
+                buf = jnp.pad(buf, (0, self.padded_params - buf.shape[0]))
+            q, s = ops.quantize(
+                buf, group=self.qgroup,
+                block_rows=quant.effective_block_rows(
+                    self.padded_params, self.qgroup
+                ),
+            )
+            return self.write_quantized(
+                learner_id, q[: self.padded_params],
+                s[: self.padded_params // self.qgroup], weight, version,
+            )
         if self.sharded:
             if buf.shape[0] != self.padded_params:
                 buf = jnp.pad(buf, (0, self.padded_params - buf.shape[0]))
@@ -462,6 +515,56 @@ class ArenaStore:
             # Cumulative decoded-row ingest bytes: reconciles against the
             # channel's uplink message count in the dispatch tests.
             self._c_bytes.add(int(buf.nbytes))
+            return row
+
+    def write_quantized(
+        self, learner_id: str, q: jax.Array, scales: jax.Array,
+        weight: float, version: float = 0.0,
+    ) -> int:
+        """Land an already-quantized row (int8 values + f32 group scales).
+
+        The quantized-resident ingest hot path: an int8 upload decoded by
+        ``Channel.recv_upload_quantized`` writes straight into the arena with
+        **no** intermediate f32 ``(P,)`` materialization — two donated row
+        writes (values + scales), same metadata bookkeeping as :meth:`write`.
+        Only valid on an ``arena_dtype="int8"`` arena.
+        """
+        if self.arena_dtype != "int8":
+            raise ValueError(
+                "write_quantized requires ArenaStore(arena_dtype='int8'); "
+                f"this arena is {self.arena_dtype!r}"
+            )
+        q = jnp.ravel(jnp.asarray(q))
+        if q.dtype != jnp.int8:
+            raise ValueError(f"quantized row must be int8, got {q.dtype}")
+        n_groups = self.padded_params // self.qgroup
+        if q.shape[0] != self.padded_params or scales.shape != (n_groups,):
+            raise ValueError(
+                f"quantized row holds {q.shape[0]} values / "
+                f"{scales.shape} scales; this arena wants "
+                f"({self.padded_params},) / ({n_groups},)"
+            )
+        scales = jnp.asarray(scales, jnp.float32)
+        if self.sharded:
+            q = jax.device_put(q, self.row_sharding)
+            scales = jax.device_put(scales, self.row_sharding)
+        with self.lock:
+            row = self._assign_row(learner_id)
+            writer = self._writer if self.sharded else _write_row
+            # The same jitted writer serves both arrays: jit re-specializes
+            # per (shape, dtype), so values and scales each get a cached
+            # executable.
+            self.buffer = writer(self.buffer, jnp.int32(row), q)
+            self.scales = writer(self.scales, jnp.int32(row), scales)
+            self.weights, self.versions, self.mask = _set_row_meta(
+                self.weights, self.versions, self.mask,
+                jnp.int32(row), jnp.float32(weight), jnp.float32(version),
+            )
+            self._valid[row] = True
+            self._weights_host[row] = weight
+            self._versions_host[row] = version
+            self._c_writes.add(1)
+            self._c_bytes.add(int(q.nbytes) + int(scales.nbytes))
             return row
 
     def invalidate(self, learner_id: str) -> None:
@@ -496,11 +599,22 @@ class ArenaStore:
             return float(self._versions_host[row])
 
     def row_view(self, learner_id: str) -> jax.Array:
-        """Device view of one learner's un-padded packed buffer."""
+        """Device view of one learner's un-padded packed buffer (always f32).
+
+        On a quantized arena the row is dequantized on the fly (one small
+        device program) so callers keep the f32 contract; the resident state
+        stays int8.
+        """
         with self.lock:
             row = self._rows[learner_id]
             if not self._valid[row]:
                 raise KeyError(f"{learner_id} has no valid model in the arena")
+            if self.arena_dtype == "int8":
+                q = self.buffer[row]
+                s = self.scales[row]
+                x = (q.astype(jnp.float32)
+                     .reshape(-1, self.qgroup) * s[:, None]).reshape(-1)
+                return x[: self.num_params]
             return self.buffer[row, : self.num_params]
 
     def round_mask(self, learner_ids: Sequence[str] | None = None) -> jax.Array:
@@ -555,9 +669,16 @@ class ArenaStore:
             return int(self._valid.sum())
 
     def resident_bytes(self) -> int:
-        """Global device bytes held by the arena (buffer + metadata)."""
+        """Global device bytes held by the arena (buffer + scales + metadata).
+
+        Also published as the ``store.arena.bytes_resident`` gauge after
+        every capacity change — the observable half of the int8 arena's ~4x
+        resident shrink (int8 values + f32 scales ≈ ``(1 + 4/group)``
+        bytes/param vs 4 for f32).
+        """
+        scales = self.scales.nbytes if self.scales is not None else 0
         return int(
-            self.buffer.nbytes + self.weights.nbytes
+            self.buffer.nbytes + scales + self.weights.nbytes
             + self.versions.nbytes + self.mask.nbytes
         )
 
@@ -565,20 +686,25 @@ class ArenaStore:
     def export_state(self) -> dict:
         """Host-side copy of the arena's full state (checkpoint save).
 
-        Returns ``buffer`` (the full ``(n_max, padded_params)`` f32 array,
-        gathered if sharded), the host ``weights``/``versions``/``valid``
-        mirrors, and the ``rows`` learner→row map.  The f32 round-trip
-        through ``.npz`` is bit-exact, so a restored arena aggregates
-        bit-identically.
+        Returns ``buffer`` (the full ``(n_max, padded_params)`` array —
+        f32, or int8 for a quantized arena — gathered if sharded), the host
+        ``weights``/``versions``/``valid`` mirrors, and the ``rows``
+        learner→row map.  A quantized arena additionally returns ``scales``
+        (the ``(n_max, padded_params/group)`` f32 array).  Both the f32 and
+        the int8+scales round-trips through ``.npz`` are bit-exact, so a
+        restored arena aggregates bit-identically.
         """
         with self.lock:
-            return {
+            state = {
                 "buffer": np.asarray(jax.device_get(self.buffer)),
                 "weights": self._weights_host.copy(),
                 "versions": self._versions_host.copy(),
                 "valid": self._valid.copy(),
                 "rows": dict(self._rows),
             }
+            if self.scales is not None:
+                state["scales"] = np.asarray(jax.device_get(self.scales))
+            return state
 
     def restore_state(
         self,
@@ -587,23 +713,40 @@ class ArenaStore:
         versions: np.ndarray,
         valid: np.ndarray,
         rows: dict[str, int],
+        scales: np.ndarray | None = None,
     ) -> None:
         """Reload a checkpointed arena state (inverse of :meth:`export_state`).
 
         The arena must have been constructed with the same ``num_params``
         and row alignment (``padded_params`` must match).  Capacity adapts:
         the restored state is padded (or the arena grown) to cover both the
-        saved rows and any already-assigned ones.
+        saved rows and any already-assigned ones.  A quantized arena
+        requires ``scales`` (the checkpointed scale matrix) — restoring an
+        int8 checkpoint into an f32 arena, or vice versa, is a layout
+        mismatch the caller surfaces via the checkpoint fingerprint.
         """
-        buffer = np.asarray(buffer, np.float32)
+        host_dt = np.int8 if self.arena_dtype == "int8" else np.float32
+        buffer = np.asarray(buffer, host_dt)
         if buffer.ndim != 2 or buffer.shape[1] != self.padded_params:
             raise ValueError(
                 f"checkpointed arena rows hold {buffer.shape[-1]} params, "
                 f"this arena holds {self.padded_params}"
             )
+        if self.arena_dtype == "int8":
+            if scales is None:
+                raise ValueError(
+                    "restoring an int8 arena needs the checkpointed scales"
+                )
+            scales = np.asarray(scales, np.float32)
+            n_groups = self.padded_params // self.qgroup
+            if scales.ndim != 2 or scales.shape[1] != n_groups:
+                raise ValueError(
+                    f"checkpointed scales hold {scales.shape[-1]} groups, "
+                    f"this arena wants {n_groups}"
+                )
         with self.lock:
             n = max(self.n_max, buffer.shape[0], len(rows))
-            full = np.zeros((n, self.padded_params), np.float32)
+            full = np.zeros((n, self.padded_params), host_dt)
             full[: buffer.shape[0]] = buffer
             self._valid = np.zeros((n,), bool)
             self._valid[: len(valid)] = np.asarray(valid, bool)
@@ -618,6 +761,16 @@ class ArenaStore:
                 self.buffer = jax.device_put(full, self.buffer_sharding)
             else:
                 self.buffer = jnp.asarray(full)
+            if self.arena_dtype == "int8":
+                full_s = np.zeros(
+                    (n, self.padded_params // self.qgroup), np.float32
+                )
+                full_s[: scales.shape[0]] = scales
+                if self.buffer_sharding is not None:
+                    self.scales = jax.device_put(full_s, self.buffer_sharding)
+                else:
+                    self.scales = jnp.asarray(full_s)
             self.weights = jnp.asarray(self._weights_host)
             self.versions = jnp.asarray(self._versions_host)
             self.mask = jnp.asarray(self._valid.astype(np.float32))
+            self._g_resident.set(self.resident_bytes())

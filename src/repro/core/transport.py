@@ -158,20 +158,105 @@ class RawUploadCodec:
         """Wire bytes → device-resident f32 ``(P,)`` row (one transfer)."""
         return packing.unpack_row_bytes(payload, num_elements, "float32")
 
+    def decode_with_norm(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Decode + L2 norm in one jitted device program (no host sync).
 
-@functools.partial(jax.jit, static_argnames=("n_q", "n_scales"))
-def _split_quant_wire(wire: jax.Array, n_q: int, n_scales: int):
+        The admission-screen fast path: the norm comes back as a device
+        scalar enqueued behind the decode, so the controller's only host
+        sync per upload is reading the already-materialized float.
+        """
+        if int(np.size(payload)) != 4 * int(num_elements):
+            raise ValueError(
+                f"row payload holds {int(np.size(payload))} bytes, expected "
+                f"{4 * int(num_elements)} for {num_elements} float32 elements"
+            )
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        return _raw_decode_norm(dev, int(num_elements))
+
+
+@functools.partial(jax.jit, static_argnames=("num_elements",))
+def _raw_decode_norm(wire: jax.Array, num_elements: int):
+    """One jitted program: bitcast the raw f32 wire bytes + its L2 norm."""
+    row = jax.lax.bitcast_convert_type(
+        wire.reshape(num_elements, 4), jnp.float32
+    ).reshape(num_elements)
+    return row, jnp.linalg.norm(row)
+
+
+@jax.jit
+def _row_norm(row: jax.Array) -> jax.Array:
+    """Device-side L2 norm of a decoded row (fallback for custom codecs)."""
+    return jnp.linalg.norm(row.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_q", "n_scales", "n_groups"))
+def _split_quant_wire(wire: jax.Array, n_q: int, n_scales: int, n_groups: int):
     """Device-side split of one int8 upload payload into (q int8, scales f32).
 
     Compiled once per wire layout and cached — together with the jitted
     ``kernels/ops.dequantize`` this makes the controller's int8 ingest a
     single ``device_put`` plus device-only bitcasts and the dequant kernel,
     mirroring the downlink's one-transfer ``unpack_bytes`` design.
+
+    The wire carries only the ``n_scales = ceil(n/group)`` informative
+    scales (``kernels/quantize.wire_layout`` trims pure-padding groups); the
+    remaining ``n_groups - n_scales`` trailing groups are re-synthesized
+    here as exactly 1.0 — the quantize kernel's zero-amax fallback — so the
+    round-trip stays bit-identical to an untrimmed wire.
     """
     q = jax.lax.bitcast_convert_type(jax.lax.slice(wire, (0,), (n_q,)), jnp.int8)
     sb = jax.lax.slice(wire, (n_q,), (n_q + 4 * n_scales,))
     scales = jax.lax.bitcast_convert_type(sb.reshape(n_scales, 4), jnp.float32)
-    return q, scales.reshape(n_scales)
+    scales = scales.reshape(n_scales)
+    if n_groups > n_scales:
+        pad = jnp.ones((n_groups - n_scales,), jnp.float32)
+        scales = jnp.concatenate([scales, pad])
+    return q, scales
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_q", "n_scales", "num_elements", "group", "block_rows"),
+)
+def _int8_decode_norm(wire, n_q, n_scales, num_elements, group, block_rows):
+    """One jitted program: split + re-pad + dequantize + L2 norm.
+
+    The int8 statement of :func:`_raw_decode_norm`: the whole decode and the
+    admission norm compile into a single cached executable per wire layout,
+    so ingest enqueues one device program and never blocks.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels import quantize as quant
+
+    q, scales = _split_quant_wire(wire, n_q, n_scales, n_q // group)
+    row = quant.dequantize_pallas(
+        q, scales, group, block_rows, interpret=kops.INTERPRET
+    )[:num_elements]
+    return row, jnp.linalg.norm(row)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_q", "n_scales", "out_params", "group")
+)
+def _decode_quant_resident(wire, n_q, n_scales, out_params, group):
+    """Land one int8 upload in quantized form: (q int8, scales f32, norm).
+
+    The quantized-resident arena's ingest program: split the wire, re-pad
+    the trimmed scales, slice to the arena row width — **no f32 (P,) row is
+    ever materialized**.  The admission norm is computed from the quantized
+    form directly, ``sqrt(Σ_g scale_g² · Σ_i q_{g,i}²)``, which equals the
+    L2 norm of the dequantized row exactly (dequantization is a per-group
+    scalar multiply), so screening decisions match the f32 path bit-for-bit
+    up to f32 summation order.
+    """
+    q, scales = _split_quant_wire(wire, n_q, n_scales, n_q // group)
+    q = jax.lax.slice(q, (0,), (out_params,))
+    scales = jax.lax.slice(scales, (0,), (out_params // group,))
+    qf = q.astype(jnp.float32).reshape(out_params // group, group)
+    norm = jnp.sqrt(jnp.sum(scales * scales * jnp.sum(qf * qf, axis=1)))
+    return q, scales, norm
 
 
 class Int8UploadCodec:
@@ -211,7 +296,13 @@ class Int8UploadCodec:
         return quant.wire_layout(int(num_elements), self.group, self.block_rows)[2]
 
     def encode(self, buffer: Any) -> np.ndarray:
-        """Quantize a flat ``(P,)`` buffer into int8 values + f32 scales."""
+        """Quantize a flat ``(P,)`` buffer into int8 values + f32 scales.
+
+        Only the ``ceil(P/group)`` informative scales go on the wire
+        (``wire_layout``); trailing pure-padding groups carry ``q == 0``
+        with scale exactly 1.0, which the decoder re-synthesizes from ``P``
+        alone, so trimming them is lossless *and* byte-exact.
+        """
         from repro.kernels import ops, quantize as quant
 
         flat = jnp.asarray(buffer, jnp.float32).reshape(-1)
@@ -221,16 +312,21 @@ class Int8UploadCodec:
                 flat.shape[0], self.group, self.block_rows
             ),
         )
+        n_scales = quant.wire_layout(
+            int(flat.shape[0]), self.group, self.block_rows
+        )[1]
         qb = np.asarray(q).view(np.uint8).reshape(-1)
-        sb = np.asarray(scales).view(np.uint8).reshape(-1)
+        sb = np.asarray(scales)[:n_scales].view(np.uint8).reshape(-1)
         out = np.empty((qb.size + sb.size,), np.uint8)
         out[: qb.size] = qb
         out[qb.size:] = sb
         return out
 
-    def decode(self, payload: np.ndarray, num_elements: int) -> jax.Array:
-        """Dequantize an int8 payload back to the f32 ``(P,)`` row."""
-        from repro.kernels import ops, quantize as quant
+    def _checked_layout(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[int, int]:
+        """Validate payload size against the wire layout; return (n_q, n_scales)."""
+        from repro.kernels import quantize as quant
 
         n_q, n_scales, nbytes = quant.wire_layout(
             num_elements, self.group, self.block_rows
@@ -240,14 +336,61 @@ class Int8UploadCodec:
                 f"int8 payload holds {int(payload.size)} bytes, expected "
                 f"{nbytes} for {num_elements} elements"
             )
+        return n_q, n_scales
+
+    def decode(self, payload: np.ndarray, num_elements: int) -> jax.Array:
+        """Dequantize an int8 payload back to the f32 ``(P,)`` row."""
+        from repro.kernels import ops, quantize as quant
+
+        n_q, n_scales = self._checked_layout(payload, num_elements)
         dev = jnp.asarray(np.ascontiguousarray(payload))
-        q, scales = _split_quant_wire(dev, n_q, n_scales)
+        q, scales = _split_quant_wire(dev, n_q, n_scales, n_q // self.group)
         return ops.dequantize(
             q, scales, num_elements, group=self.group,
             block_rows=quant.effective_block_rows(
                 num_elements, self.group, self.block_rows
             ),
         )
+
+    def decode_with_norm(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Decode + L2 norm in one jitted device program (no host sync).
+
+        Same contract as :meth:`RawUploadCodec.decode_with_norm`: one
+        ``device_put``, one cached executable, norm as a device scalar.
+        """
+        from repro.kernels import quantize as quant
+
+        n_q, n_scales = self._checked_layout(payload, num_elements)
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        return _int8_decode_norm(
+            dev, n_q, n_scales, int(num_elements), self.group,
+            quant.effective_block_rows(
+                int(num_elements), self.group, self.block_rows
+            ),
+        )
+
+    def decode_quantized(
+        self, payload: np.ndarray, num_elements: int, out_params: int
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Decode an int8 payload straight into arena-resident quantized form.
+
+        Returns ``(q int8 (out_params,), scales f32 (out_params//group,),
+        norm)`` from one jitted program — no intermediate f32 ``(P,)`` row.
+        ``out_params`` (the arena's padded row width) must be a multiple of
+        ``group`` and at most the payload's padded element count.
+        """
+        n_q, n_scales = self._checked_layout(payload, num_elements)
+        out_params = int(out_params)
+        if out_params % self.group or out_params > n_q:
+            raise ValueError(
+                f"out_params={out_params} must be a multiple of "
+                f"group={self.group} and <= the payload's {n_q} padded "
+                "elements"
+            )
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        return _decode_quant_resident(dev, n_q, n_scales, out_params, self.group)
 
 
 UPLOAD_CODECS = {"raw": RawUploadCodec, "int8": Int8UploadCodec}
@@ -547,18 +690,64 @@ class Channel:
             metadata=dict(metadata or {}), codec_params=_codec_params(c),
         )
 
-    def recv_upload(self, envelope: UploadEnvelope) -> jax.Array:
+    def recv_upload(
+        self, envelope: UploadEnvelope, with_norm: bool = False
+    ) -> jax.Array | tuple[jax.Array, jax.Array]:
         """Controller half of the uplink: decode wire bytes to a device row.
 
         One ``device_put`` of the payload plus a jitted decode program cached
         per wire layout (bitcast for ``raw``, bitcast split + Pallas dequant
         for ``int8``) — the returned f32 ``(P,)`` row feeds a straight arena
         row write with zero host-side numeric work.
+
+        With ``with_norm=True`` returns ``(row, norm)`` where ``norm`` is the
+        row's L2 norm as a **device scalar** fused into (or enqueued behind)
+        the decode program — the admission screen's non-blocking readback.
+        Registry codecs fuse it into the decode executable; a custom codec
+        without ``decode_with_norm`` pays one extra enqueued jit, still with
+        zero host syncs.
         """
         c = self._resolve_upload_codec(envelope)
         t0 = time.perf_counter()
-        row = c.decode(envelope.payload, envelope.num_elements)
+        if with_norm:
+            fused = getattr(c, "decode_with_norm", None)
+            if fused is not None:
+                row, norm = fused(envelope.payload, envelope.num_elements)
+            else:
+                row = c.decode(envelope.payload, envelope.num_elements)
+                norm = _row_norm(row)
+        else:
+            row = c.decode(envelope.payload, envelope.num_elements)
         dt = time.perf_counter() - t0
         with self._stats_lock:
             self._c["upload_deserialize_s"].add(dt)
-        return row
+        return (row, norm) if with_norm else row
+
+    def recv_upload_quantized(
+        self, envelope: UploadEnvelope, out_params: int
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Decode an int8 upload straight into arena-resident quantized form.
+
+        Returns ``(q int8 (out_params,), scales f32 (out_params//group,),
+        norm)`` — the quantized-resident arena's ingest half: one
+        ``device_put`` plus one jitted split/slice/norm program, with **no**
+        intermediate f32 ``(P,)`` materialization and the admission norm as
+        a device scalar.  Only valid for envelopes whose codec decodes to
+        the int8 wire format; accounted as upload deserialization work like
+        :meth:`recv_upload`.
+        """
+        c = self._resolve_upload_codec(envelope)
+        decode_q = getattr(c, "decode_quantized", None)
+        if decode_q is None:
+            raise ValueError(
+                f"codec {envelope.codec!r} cannot land quantized rows; "
+                "use recv_upload for f32 decode"
+            )
+        t0 = time.perf_counter()
+        q, scales, norm = decode_q(
+            envelope.payload, envelope.num_elements, out_params
+        )
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self._c["upload_deserialize_s"].add(dt)
+        return q, scales, norm

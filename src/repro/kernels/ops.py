@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fedavg as _fedavg
+from repro.kernels import fused_agg as _fused
 from repro.kernels import quantize as _quant
 from repro.kernels import robust as _robust
 
@@ -21,6 +22,7 @@ INTERPRET = jax.default_backend() == "cpu"
 
 __all__ = [
     "fedavg", "masked_fedavg", "masked_fedavg_sharded",
+    "masked_fedavg_q8", "masked_fedavg_q8_sharded",
     "masked_trimmed_mean", "masked_trimmed_mean_sharded",
     "quantize", "dequantize", "QuantCodec",
 ]
@@ -69,6 +71,72 @@ def masked_fedavg(arena: jax.Array, weights: jax.Array, mask: jax.Array,
         padded, weights, mask, block_p=block_p, interpret=INTERPRET
     )
     return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_p"))
+def masked_fedavg_q8(arena_q: jax.Array, scales: jax.Array,
+                     weights: jax.Array, mask: jax.Array,
+                     group: int = _quant.DEFAULT_GROUP,
+                     block_p: int | None = None) -> jax.Array:
+    """Kernel-backed fused dequant-into-aggregate over a quantized arena.
+
+    The int8-arena analogue of :func:`masked_fedavg`: one fused pass reads
+    the resident ``(N, P)`` int8 rows plus their ``(N, P//group)`` f32
+    scales and emits the masked weighted mean — no f32 ``(N, P)`` stack is
+    ever materialized.  The default block divides the arena's lane-aligned
+    row width (which ``ArenaStore`` keeps a multiple of lcm(1024, group)),
+    so the hot path runs with zero re-padding; ad-hoc non-aligned shapes pay
+    a pad copy on both the values and the scales (padding with scale 0.0 —
+    the padded tail dequantizes to exact zeros and the extra columns are
+    sliced off)."""
+    if block_p is None:
+        block_p = _fused.choose_block_p_q8_dividing(
+            arena_q.shape[1], arena_q.shape[0], group
+        )
+    padded, p = _pad_to(arena_q, block_p, axis=1)
+    spad, _ = _pad_to(scales, block_p // group, axis=1)
+    out = _fused.masked_fedavg_q8_pallas(
+        padded, spad, weights, mask, group=group, block_p=block_p,
+        interpret=INTERPRET,
+    )
+    return out[:p]
+
+
+def masked_fedavg_q8_sharded(mesh, axes=None, group: int = _quant.DEFAULT_GROUP):
+    """Fused dequant-into-aggregate over a mesh-sharded quantized arena.
+
+    Returns a jitted ``(arena_q (N,P) int8, scales (N,P//group), weights,
+    mask) -> (P,)`` running :func:`masked_fedavg_q8` per column shard under
+    ``shard_map``.  Values and scales carry the same ``P(None, axes)``
+    column sharding (``ArenaStore(arena_dtype="int8", mesh=...)`` keeps the
+    shard width a whole number of groups), weight normalization reduces only
+    over the replicated ``(N,)`` vectors, and the compiled program contains
+    zero collectives, exactly like :func:`masked_fedavg_sharded`.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.aggregation import arena_axes
+
+    ax = arena_axes(mesh, axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in ax], dtype=np.int64))
+
+    def _local(arena_q, scales, weights, mask):
+        block_p = _fused.choose_block_p_q8_for_shard(
+            arena_q.shape[1] * n_shards, arena_q.shape[0], n_shards, group
+        )
+        return masked_fedavg_q8(arena_q, scales, weights, mask,
+                                group=group, block_p=block_p)
+
+    sm = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(None, ax), P(None, ax), P(), P()),
+        out_specs=P(ax),
+        check_vma=False,
+    )
+    return jax.jit(sm)
 
 
 @functools.partial(jax.jit, static_argnames=("trim_k", "block_p"))

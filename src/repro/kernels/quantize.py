@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = [
-    "quantize_pallas", "dequantize_pallas", "wire_layout",
+    "quantize_pallas", "dequantize_pallas", "wire_layout", "scales_padding",
     "effective_block_rows", "DEFAULT_GROUP", "DEFAULT_BLOCK_ROWS",
 ]
 
@@ -56,16 +56,36 @@ def wire_layout(
 
     Returns ``(n_padded, n_scales, payload_bytes)``: the kernel-tile-padded
     element count (a ``group * effective_block_rows`` multiple — what the
-    quantize path actually emits), the number of f32 group scales, and the
-    total uplink wire bytes (``n_padded`` int8 values followed by
-    ``n_scales`` f32 scales).  The transport's int8 upload codec and its
-    tests derive payload sizes from this single source of truth, so the
-    kernel's padding policy can change without desynchronizing the wire.
+    quantize path actually emits), the number of f32 group scales **shipped**,
+    and the total uplink wire bytes (``n_padded`` int8 values followed by
+    ``n_scales`` f32 scales).  Only groups that contain real data carry a
+    scale: ``n_scales = ceil(n / group)``.  Trailing all-padding groups hold
+    ``q == 0`` with scale exactly 1.0 (the quantize kernel's zero-amax
+    fallback), so shipping their scales would spend 4 bytes per group on no
+    information — the decoder re-synthesizes them from ``n`` alone
+    (``scales_padding``).  The transport's int8 upload codec and its tests
+    derive payload sizes from this single source of truth, so the kernel's
+    padding policy can change without desynchronizing the wire.
     """
     tile = group * effective_block_rows(n, group, block_rows)
     n_padded = ((n + tile - 1) // tile) * tile
-    n_scales = n_padded // group
+    n_scales = (n + group - 1) // group
     return n_padded, n_scales, n_padded + 4 * n_scales
+
+
+def scales_padding(
+    n: int, group: int = DEFAULT_GROUP, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> int:
+    """How many trailing pad-group scales the decoder must re-synthesize.
+
+    ``wire_layout`` trims the scales of pure-padding groups off the wire;
+    the dequantize kernel still wants one scale per padded group, so the
+    receiver appends this many 1.0 entries (the quantize kernel's zero-amax
+    scale) before dequantizing.  Derived from ``n`` alone, exactly like the
+    rest of the wire layout.
+    """
+    n_padded, n_scales, _ = wire_layout(n, group, block_rows)
+    return n_padded // group - n_scales
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -92,7 +112,15 @@ def quantize_pallas(
     (ops.py pads)."""
     p = x.shape[0]
     rows = p // group
-    assert rows % block_rows == 0, (rows, block_rows)
+    if p % group or rows % block_rows:
+        # Trace-time validation (like aggregation.masked_trimmed_mean): a
+        # bare assert would vanish under ``python -O`` and let a mis-padded
+        # buffer reach the kernel as a shape error deep inside pallas_call.
+        raise ValueError(
+            f"quantize_pallas needs x.shape[0]={p} divisible by "
+            f"group*block_rows={group}*{block_rows}={group * block_rows} "
+            "(ops.quantize pads)"
+        )
     xg = x.reshape(rows, group)
     grid = (rows // block_rows,)
     q, s = pl.pallas_call(
@@ -121,7 +149,18 @@ def dequantize_pallas(
 ) -> jax.Array:
     """Inverse of :func:`quantize_pallas`: int8 groups × scales -> float32."""
     rows = q.shape[0] // group
-    assert rows % block_rows == 0, (rows, block_rows)
+    if q.shape[0] % group or rows % block_rows:
+        raise ValueError(
+            f"dequantize_pallas needs q.shape[0]={q.shape[0]} divisible by "
+            f"group*block_rows={group}*{block_rows}={group * block_rows} "
+            "(ops.quantize emits that layout)"
+        )
+    if scales.shape[0] != rows:
+        raise ValueError(
+            f"dequantize_pallas got {scales.shape[0]} scales for {rows} "
+            f"groups of {group}; re-pad trimmed wire scales first "
+            "(kernels.quantize.scales_padding)"
+        )
     qg = q.reshape(rows, group)
     grid = (rows // block_rows,)
     x = pl.pallas_call(

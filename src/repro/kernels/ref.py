@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "fedavg_ref", "masked_fedavg_ref", "masked_trimmed_mean_ref",
-    "quantize_ref", "dequantize_ref",
+    "fedavg_ref", "masked_fedavg_ref", "masked_fedavg_q8_ref",
+    "masked_trimmed_mean_ref", "quantize_ref", "dequantize_ref",
 ]
 
 
@@ -36,6 +36,33 @@ def masked_fedavg_ref(
                   m / jnp.maximum(jnp.sum(m), 1.0))
     rows = jnp.where(m[:, None] > 0, arena.astype(jnp.float32), 0.0)
     return jnp.einsum("n,np->p", w, rows)
+
+
+def masked_fedavg_q8_ref(
+    q: jax.Array, scales: jax.Array, weights: jax.Array, mask: jax.Array,
+    group: int = 256,
+) -> jax.Array:
+    """f64 oracle for the fused dequant-into-aggregate kernel.
+
+    (N, P) int8 x (N, P//group) f32 x (N,) x (N,) -> (P,): dequantize each
+    row exactly (f64), then the masked normalized weighted mean of
+    :func:`masked_fedavg_ref` — i.e. dequant-then-reduce at full precision,
+    the replay reference the fused single-pass kernel must match.  Computed
+    in *host* numpy so the oracle stays genuine f64 even when jax runs
+    without the x64 flag.
+    """
+    import numpy as np
+
+    qh = np.asarray(q).astype(np.float64)
+    sh = np.asarray(scales).astype(np.float64)
+    n, p = qh.shape
+    rows = (qh.reshape(n, p // group, group) * sh[:, :, None]).reshape(n, p)
+    m = np.asarray(mask).astype(np.float64)
+    w = np.asarray(weights).astype(np.float64) * m
+    total = float(w.sum())
+    w = w / total if total > 0 else m / max(float(m.sum()), 1.0)
+    rows = np.where(m[:, None] > 0, rows, 0.0)
+    return jnp.asarray(w @ rows, jnp.float32)
 
 
 def masked_trimmed_mean_ref(

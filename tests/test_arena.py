@@ -374,3 +374,178 @@ def test_controller_arena_round_uses_padded_rows():
     assert ctrl.arena.num_params == 4
     assert ctrl.arena.padded_params == 1024
     assert ctrl.global_buffer.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# quantized-resident arena (arena_dtype="int8")
+# ---------------------------------------------------------------------------
+
+
+def test_int8_arena_write_dequant_bound():
+    """f32 writes requantize on device; row_view obeys the per-group bound."""
+    arena = ArenaStore(num_params=3000, n_max=4, arena_dtype="int8")
+    assert arena.buffer.dtype == jnp.int8
+    assert arena.scales.shape == (4, arena.padded_params // arena.qgroup)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=3000).astype(np.float32) * 3
+    arena.write("a", jnp.asarray(x), weight=5.0)
+    back = np.asarray(arena.row_view("a"))
+    assert back.shape == (3000,)
+    pad = (-3000) % arena.qgroup
+    xg = np.pad(x, (0, pad)).reshape(-1, arena.qgroup)
+    bound = np.abs(xg).max(1, keepdims=True) / 254.0 + 1e-7
+    err = np.abs(np.pad(back, (0, pad)).reshape(-1, arena.qgroup) - xg)
+    assert (err <= bound).all()
+
+
+def test_int8_arena_write_quantized_bit_exact():
+    """An already-quantized row lands with no re-encoding loss."""
+    arena = ArenaStore(num_params=2048, n_max=2, arena_dtype="int8")
+    g = arena.qgroup
+    rng = np.random.default_rng(1)
+    q = rng.integers(-127, 128, size=arena.padded_params, dtype=np.int8)
+    s = rng.uniform(0.1, 2.0, size=arena.padded_params // g).astype(np.float32)
+    row = arena.write_quantized("a", jnp.asarray(q), jnp.asarray(s), weight=1.0)
+    np.testing.assert_array_equal(np.asarray(arena.buffer)[row], q)
+    np.testing.assert_array_equal(np.asarray(arena.scales)[row], s)
+
+
+def test_int8_arena_resident_bytes_shrink():
+    """The resident gauge shows the ~4x shrink over an f32 arena."""
+    from repro.core.metrics import Telemetry
+
+    t8, t32 = Telemetry(), Telemetry()
+    a8 = ArenaStore(num_params=100_000, n_max=8, arena_dtype="int8",
+                    telemetry=t8)
+    a32 = ArenaStore(num_params=100_000, n_max=8, telemetry=t32)
+    b8 = t8.value("store.arena.bytes_resident", 0)
+    b32 = t32.value("store.arena.bytes_resident", 0)
+    assert b8 == a8.resident_bytes() and b32 == a32.resident_bytes()
+    assert b8 >= a8.buffer.nbytes + a8.scales.nbytes
+    assert b32 >= a32.buffer.nbytes
+    # int8 values + f32 per-group scales = (1 + 4/group) bytes/param vs 4
+    assert b32 / b8 > 3.5
+
+
+def test_int8_arena_grow_preserves_rows_and_scales():
+    arena = ArenaStore(num_params=1024, n_max=2, arena_dtype="int8")
+    rng = np.random.default_rng(2)
+    rows = {}
+    for i in range(5):  # forces growth past n_max=2
+        x = rng.normal(size=1024).astype(np.float32)
+        arena.write(f"l{i}", jnp.asarray(x), weight=1.0)
+        rows[f"l{i}"] = x
+    assert arena.n_max >= 5
+    for lid, x in rows.items():
+        back = np.asarray(arena.row_view(lid))
+        g = arena.qgroup
+        bound = np.abs(x.reshape(-1, g)).max(1, keepdims=True) / 254.0 + 1e-7
+        assert (np.abs(back.reshape(-1, g) - x.reshape(-1, g)) <= bound).all()
+
+
+def test_int8_arena_export_restore_roundtrip():
+    arena = ArenaStore(num_params=2048, n_max=3, arena_dtype="int8")
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        arena.write(f"l{i}", jnp.asarray(rng.normal(size=2048), jnp.float32),
+                    weight=float(i + 1), version=float(i))
+    st = arena.export_state()
+    fresh = ArenaStore(num_params=2048, n_max=3, arena_dtype="int8")
+    fresh.restore_state(buffer=st["buffer"], weights=st["weights"],
+                        versions=st["versions"], valid=st["valid"],
+                        rows=st["rows"], scales=st["scales"])
+    np.testing.assert_array_equal(np.asarray(fresh.buffer),
+                                  np.asarray(arena.buffer))
+    np.testing.assert_array_equal(np.asarray(fresh.scales),
+                                  np.asarray(arena.scales))
+    out_a = ops.masked_fedavg_q8(arena.buffer, arena.scales, arena.weights,
+                                 arena.mask, group=arena.qgroup)
+    out_f = ops.masked_fedavg_q8(fresh.buffer, fresh.scales, fresh.weights,
+                                 fresh.mask, group=fresh.qgroup)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_f))
+
+
+def test_int8_arena_restore_requires_scales():
+    arena = ArenaStore(num_params=1024, n_max=2, arena_dtype="int8")
+    st = arena.export_state()
+    fresh = ArenaStore(num_params=1024, n_max=2, arena_dtype="int8")
+    with pytest.raises(ValueError, match="scales"):
+        fresh.restore_state(buffer=st["buffer"], weights=st["weights"],
+                            versions=st["versions"], valid=st["valid"],
+                            rows=st["rows"])
+
+
+def test_write_quantized_rejects_f32_arena_and_bad_shapes():
+    f32 = ArenaStore(num_params=1024, n_max=2)
+    q = jnp.zeros((f32.padded_params,), jnp.int8)
+    s = jnp.ones((f32.padded_params // 256,), jnp.float32)
+    with pytest.raises(ValueError, match="int8"):
+        f32.write_quantized("a", q, s, weight=1.0)
+    a8 = ArenaStore(num_params=1024, n_max=2, arena_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        a8.write_quantized("a", q.astype(jnp.float32), s, weight=1.0)
+    with pytest.raises(ValueError, match="scales"):
+        a8.write_quantized("a", q, s[:-1], weight=1.0)
+
+
+def _run_sync_dtype(arena_dtype, codec="int8", rounds=2):
+    from repro.core import Channel
+
+    ctrl = Controller(
+        protocol=SyncProtocol(local_steps=2, batch_size=16),
+        store_mode="arena", arena_dtype=arena_dtype,
+        channel=Channel(upload_codec=codec),
+    )
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(3):
+        ctrl.register_learner(_make_learner(i))
+    ctrl.engine.run(rounds=rounds)
+    out = np.asarray(ctrl.global_params["w"])
+    ctrl.shutdown()
+    return out, ctrl
+
+
+def test_controller_int8_arena_matches_f32_arena_with_int8_codec():
+    """Same quantized wire payloads -> the direct landing and the f32
+    dequant-then-store arena agree to float-accumulation tolerance (arena
+    row order follows arrival order, so engine-driven runs may reduce in a
+    different order; the bit-exact proof with pinned ingest order lives in
+    test_conformance.test_int8_arena_direct_landing_bitexact...)."""
+    out8, ctrl8 = _run_sync_dtype("int8", codec="int8")
+    out32, _ = _run_sync_dtype("f32", codec="int8")
+    np.testing.assert_allclose(out8, out32, rtol=1e-5, atol=1e-6)
+    assert ctrl8.telemetry.value("engine.uploads.quantized_direct", 0) >= 6
+    assert ctrl8.telemetry.value("controller.aggregations.fused_q8", 0) >= 2
+
+
+def test_controller_int8_arena_raw_codec_requantizes():
+    """Raw f32 uploads into an int8 arena: fallback path requantizes on
+    write (no direct landings) and stays within quantization error."""
+    out8, ctrl8 = _run_sync_dtype("int8", codec="raw")
+    out32, _ = _run_sync_dtype("f32", codec="raw")
+    assert ctrl8.telemetry.value("engine.uploads.quantized_direct", 0) == 0
+    assert ctrl8.telemetry.value("controller.aggregations.fused_q8", 0) >= 2
+    np.testing.assert_allclose(out8, out32, atol=0.05)
+
+
+@pytest.mark.parametrize("kwargs,frag", [
+    (dict(store_mode="stack"), "arena"),
+    (dict(store_mode="arena", secure=True), "secure"),
+    (dict(store_mode="arena", aggregation_rule="median"), "f32-only"),
+    (dict(store_mode="arena", aggregation_rule="trimmed_mean"), "f32-only"),
+])
+def test_controller_rejects_unsupported_int8_combinations(kwargs, frag):
+    with pytest.raises(ValueError, match=frag):
+        Controller(protocol=SyncProtocol(local_steps=1, batch_size=8),
+                   arena_dtype="int8", **kwargs)
+
+
+def test_config_rejects_unsupported_int8_combinations():
+    from repro.core.config import FederationConfig
+
+    with pytest.raises(ValueError, match="arena_dtype"):
+        FederationConfig(arena_dtype="fp16")
+    with pytest.raises(ValueError, match="arena"):
+        FederationConfig(arena_dtype="int8", store_mode="stack")
+    with pytest.raises(ValueError, match="fedavg"):
+        FederationConfig(arena_dtype="int8", aggregation_rule="median")

@@ -395,3 +395,40 @@ def test_stack_restore_preserves_records_without_counter_bumps(tmp_path):
     assert resumed.store.total_inserts == 0
     assert recs[0].metadata["model_version"] == 0
     resumed.shutdown()
+
+@pytest.mark.parametrize("codec", ["raw", "int8"])
+def test_int8_arena_kill_and_resume_bit_identical(codec, tmp_path):
+    """The quantized-resident rows of the kill-and-resume grid: the int8
+    arena checkpoints its scales alongside the values, the resumed fused
+    reduce is bit-identical to the uninterrupted run, and the checkpoint
+    pins arena_dtype — resuming on an f32 controller is refused."""
+    kw = dict(arena_dtype="int8", upload_codec=codec)
+    golden = _build("sync", "arena", 3, **kw)
+    _run(golden, "sync", 4)
+    want = np.asarray(golden.global_buffer)
+    golden.shutdown()
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", "arena", 3, checkpoint_dir=ckpt,
+                   checkpoint_every=2, **kw)
+    _run(first, "sync", 2)
+    saved_q = np.asarray(first.arena.buffer)
+    saved_s = np.asarray(first.arena.scales)
+    first.shutdown()
+
+    wrong_dtype = _build("sync", "arena", 3, upload_codec=codec)
+    with pytest.raises(ValueError, match="arena_dtype"):
+        wrong_dtype.restore(ckpt)
+    wrong_dtype.shutdown()
+
+    resumed = _build("sync", "arena", 3, **kw)
+    meta = resumed.restore(ckpt)
+    assert meta["arena_dtype"] == "int8"
+    # the resident rows round-trip bit-exactly: int8 values AND f32 scales
+    np.testing.assert_array_equal(np.asarray(resumed.arena.buffer), saved_q)
+    np.testing.assert_array_equal(np.asarray(resumed.arena.scales), saved_s)
+    assert resumed.arena.buffer.dtype == jnp.int8
+    _run(resumed, "sync", 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+    np.testing.assert_array_equal(got, want)  # bit-identical, not allclose

@@ -168,10 +168,11 @@ def _reference(case, agg_mode):
     return np.asarray(params["w"])
 
 
-def _federation(case, store_mode, codec):
+def _federation(case, store_mode, codec, arena_dtype="f32"):
     ctrl = Controller(
         protocol=case["proto"](), secure=case["secure"],
         store_mode=store_mode, upload_codec=codec,
+        arena_dtype=arena_dtype,
     )
     ctrl.set_initial_model(_INIT)
     for i in range(case["n"]):
@@ -242,6 +243,179 @@ def test_int8_uplink_actually_compresses():
     assert int8_stats.upload_bytes == n * payload
     assert raw_stats.upload_bytes == n * 4 * 1024
     assert raw_stats.upload_bytes / int8_stats.upload_bytes > 3.5
+
+
+# ---------------------------------------------------------------------------
+# quantized-resident arena (arena_dtype="int8")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["raw", "int8"])
+@pytest.mark.parametrize("proto", ["sync", "semi_sync", "async",
+                                   "buffered_async"])
+def test_int8_arena_conformance(proto, codec):
+    """int8-resident arena × fedavg protocols × codecs vs the f64
+    dequant-then-reduce replay references: the fused single-pass aggregate
+    must land inside the quantization-error bound of both the exact and the
+    naive reference — the resident quantization adds at most one extra
+    per-group rounding on top of the int8 wire's."""
+    case = _CASES[proto]
+    got, stats, expected_uploads = _federation(case, "arena", codec,
+                                               arena_dtype="int8")
+    ref_exact = _reference(case, "exact")
+    ref_naive = _reference(case, "naive")
+    np.testing.assert_allclose(got, ref_exact, rtol=_INT8_RTOL, atol=_INT8_ATOL)
+    np.testing.assert_allclose(got, ref_naive, rtol=_INT8_RTOL, atol=_INT8_ATOL)
+    assert stats.upload_messages == expected_uploads
+    assert stats.upload_bytes > 0 and stats.bytes_moved > 0
+
+
+def test_int8_arena_direct_landing_bitexact_vs_dequant_store():
+    """The tentpole's no-materialization proof: the SAME int8 wire
+    envelopes, ingested in the SAME order, aggregate bit-identically
+    whether they land directly in the quantized arena (fused reduce) or are
+    dequantized to f32 rows first (f32 arena + masked reduce).  Any hidden
+    f32 round-trip or requantization on the direct path would break
+    bit-equality."""
+    ctrls = {
+        dt: Controller(
+            protocol=SyncProtocol(local_steps=2, batch_size=16),
+            store_mode="arena", upload_codec="int8", arena_dtype=dt,
+        )
+        for dt in ("int8", "f32")
+    }
+    from repro.core.learner import LocalUpdate
+
+    for ctrl in ctrls.values():
+        ctrl.set_initial_model(_INIT)
+        for i in range(3):
+            ctrl.register_learner(_make_learner(i))
+    P = ctrls["int8"].arena.padded_params
+    rng = np.random.default_rng(0)
+    rows = [jnp.asarray(rng.normal(size=P), jnp.float32) for _ in range(3)]
+    for dt, ctrl in ctrls.items():
+        for i, row in enumerate(rows):
+            env = ctrl.channel.upload(
+                row, metadata={"learner_id": f"l{i}", "round_id": 0})
+            ctrl.ingest(LocalUpdate(
+                learner_id=f"l{i}", round_id=0, params=None, buffer=None,
+                num_examples=10 * (i + 1), metrics={},
+                seconds_per_step=0.01, upload=env,
+            ))
+        ctrl.aggregate_round([f"l{i}" for i in range(3)])
+    got8 = np.asarray(ctrls["int8"].global_buffer)
+    got32 = np.asarray(ctrls["f32"].global_buffer)
+    for ctrl in ctrls.values():
+        ctrl.shutdown()
+    np.testing.assert_array_equal(got8, got32)
+    assert ctrls["int8"].telemetry.value(
+        "engine.uploads.quantized_direct", 0) == 3
+    assert ctrls["int8"].telemetry.value(
+        "controller.aggregations.fused_q8", 0) == 1
+
+
+@pytest.mark.multidevice
+def test_int8_arena_conformance_sharded():
+    """The int8-resident grid on the mesh-sharded arena (8 forced host
+    devices): sync and async × raw/int8 codec, the column-sharded fused
+    reduce vs the f64 replay reference — and vs a single-device int8
+    federation of the same workload."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    script = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (AsyncProtocol, Controller, Learner,
+                                SyncProtocol, aggregation, packing)
+        from repro.core.server_opt import make_server_optimizer
+        from repro.launch.mesh import make_controller_mesh
+        from repro.optim import sgd
+
+        INIT = {"w": np.zeros((4, 1), np.float32)}
+
+        def make_learner(i):
+            def loss_fn(p, b):
+                return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+            rng = np.random.default_rng(i)
+            X = rng.normal(size=(64, 4)).astype(np.float32)
+            y = X @ np.ones((4, 1), np.float32)
+            def data_fn(bs):
+                j = rng.integers(0, 64, size=bs)
+                return X[j], y[j]
+            return Learner(
+                f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+                data_fn, lambda: (X, y), sgd(0.05), 64,
+            )
+
+        CASES = {
+            "sync": (lambda: SyncProtocol(local_steps=2, batch_size=16),
+                     3, 2, 0),
+            "async": (lambda: AsyncProtocol(local_steps=2, batch_size=16),
+                      1, 0, 3),
+        }
+
+        def reference(name):
+            proto_fn, n, rounds, updates = CASES[name]
+            proto = proto_fn()
+            learners = [make_learner(i) for i in range(n)]
+            manifest = packing.build_manifest(INIT)
+            gbuf = packing.pack_numeric(INIT)
+            params = packing.unpack_numeric(gbuf, manifest)
+            server = make_server_optimizer("fedavg")
+            state = server.init(gbuf)
+            for r in range(rounds or updates):
+                task = proto.make_task(r, {})
+                ups = [l.fit(params, task) for l in learners]
+                ws = [float(u.num_examples) for u in ups]
+                bufs = [packing.pack_numeric(u.params) for u in ups]
+                if updates and n == 1:
+                    new = bufs[0]
+                else:
+                    new = aggregation.weighted_average(
+                        jnp.stack(bufs), jnp.asarray(ws, jnp.float32))
+                state, gbuf = server.apply(state, gbuf, new)
+                params = packing.unpack_numeric(gbuf, manifest)
+            return np.asarray(params["w"])
+
+        def federation(name, codec, mesh):
+            proto_fn, n, rounds, updates = CASES[name]
+            ctrl = Controller(protocol=proto_fn(), arena_mesh=mesh,
+                              store_mode="arena", upload_codec=codec,
+                              arena_dtype="int8")
+            ctrl.set_initial_model(INIT)
+            for i in range(n):
+                ctrl.register_learner(make_learner(i))
+            if updates:
+                ctrl.engine.run(total_updates=updates)
+            else:
+                ctrl.engine.run(rounds=rounds)
+            got = np.asarray(ctrl.global_params["w"])
+            fused = ctrl.telemetry.value(
+                "controller.aggregations.fused_q8", 0)
+            ctrl.shutdown()
+            return got, fused
+
+        assert jax.device_count() == 8
+        for name in CASES:
+            ref = reference(name)
+            for codec in ("raw", "int8"):
+                got_sh, fused = federation(name, codec,
+                                           make_controller_mesh())
+                got_1d, _ = federation(name, codec, None)
+                assert fused > 0, (name, codec)
+                np.testing.assert_allclose(got_sh, ref, rtol=0.02, atol=0.02,
+                                           err_msg=f"{name}/{codec}/ref")
+                np.testing.assert_allclose(got_sh, got_1d, rtol=1e-5,
+                                           atol=1e-6,
+                                           err_msg=f"{name}/{codec}/1d")
+        print("SHARDED-INT8-ARENA-OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "SHARDED-INT8-ARENA-OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------

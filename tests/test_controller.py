@@ -198,3 +198,87 @@ def test_channel_counts_bytes_and_virtual_time():
     assert ch.stats.messages == 1
     expected_wire = 1e-3 + 4000 * 8 / 1e9
     assert abs(ch.stats.virtual_wire_s - expected_wire) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# admission screen: one host sync per upload (fused-norm regression)
+# ---------------------------------------------------------------------------
+
+
+class _CountingScalar:
+    """A device-scalar proxy that counts host readbacks (`float()` calls)."""
+
+    def __init__(self, value, counter):
+        self._value, self._counter = value, counter
+
+    def __float__(self):
+        self._counter["readbacks"] += 1
+        return float(self._value)
+
+
+@pytest.mark.parametrize("codec,arena_dtype", [
+    ("raw", "f32"), ("int8", "f32"), ("int8", "int8"),
+])
+def test_admission_screen_single_host_sync_per_upload(codec, arena_dtype):
+    """The screen reads back ONE already-fused scalar per upload.
+
+    Regression for the per-upload blocking device sync: the old screen
+    launched a fresh full-row `jnp.linalg.norm` and blocked on it for every
+    arrival.  Now the norm rides along inside the jitted upload decode
+    (`recv_upload(..., with_norm=True)` / `recv_upload_quantized`), so the
+    only host sync is one `float()` on a scalar the decode already
+    scheduled — asserted here by (a) counting scalar readbacks through a
+    proxy and (b) poisoning the separate-norm fallback so any extra norm
+    launch fails the test.
+    """
+    from repro.core import transport
+    from repro.core.learner import LocalUpdate
+
+    ctrl = Controller(
+        protocol=SyncProtocol(local_steps=1, batch_size=8),
+        channel=Channel(upload_codec=codec),
+        store_mode="arena", arena_dtype=arena_dtype,
+        admission_control=True,
+    )
+    ctrl.set_initial_model({"w": jnp.zeros((4, 1))})
+    for i in range(2):
+        ctrl.register_learner(_make_learner(i))
+    counter = {"readbacks": 0}
+    real_recv = ctrl.channel.recv_upload
+    real_recv_q = ctrl.channel.recv_upload_quantized
+
+    def spy_recv(envelope, with_norm=False):
+        assert with_norm, "admission ingest must fuse the norm into decode"
+        row, norm = real_recv(envelope, with_norm=True)
+        return row, _CountingScalar(norm, counter)
+
+    def spy_recv_q(envelope, out_params):
+        q, s, norm = real_recv_q(envelope, out_params)
+        return q, s, _CountingScalar(norm, counter)
+
+    ctrl.channel.recv_upload = spy_recv
+    ctrl.channel.recv_upload_quantized = spy_recv_q
+    poison = transport._row_norm
+    transport._row_norm = lambda *_: (_ for _ in ()).throw(
+        AssertionError("separate per-upload norm launch")
+    )
+    try:
+        rng = np.random.default_rng(0)
+        P = ctrl.arena.padded_params
+        for k in range(4):
+            row = jnp.asarray(rng.normal(size=P), jnp.float32)
+            env = ctrl.channel.upload(
+                row, metadata={"learner_id": f"l{k % 2}", "round_id": 0})
+            before = counter["readbacks"]
+            ctrl.ingest(LocalUpdate(
+                learner_id=f"l{k % 2}", round_id=0, params=None, buffer=None,
+                num_examples=10, metrics={}, seconds_per_step=0.01,
+                upload=env,
+            ))
+            assert counter["readbacks"] - before == 1, \
+                "expected exactly one scalar readback per upload"
+    finally:
+        transport._row_norm = poison
+        ctrl.shutdown()
+    if arena_dtype == "int8" and codec == "int8":
+        assert ctrl.telemetry.value("engine.uploads.quantized_direct", 0) == 4

@@ -172,3 +172,112 @@ def test_choose_block_p_fits_vmem():
             jnp.ones((n,)),
         )
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-into-aggregate kernel
+# ---------------------------------------------------------------------------
+
+
+def _quantized_arena(n, p, seed=0, group=256, scale_spread=5.0):
+    """A synthetic quantized arena: random int8 groups + spread-out scales."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, size=(n, p), dtype=np.int8)
+    s = rng.uniform(0.01, scale_spread, size=(n, p // group)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(s)
+
+
+@pytest.mark.parametrize("n,p", [(3, 4096), (8, 16384), (33, 8192)])
+def test_fused_q8_kernel_matches_oracle(n, p):
+    q, s = _quantized_arena(n, p, seed=n)
+    w = jnp.asarray(np.random.default_rng(n + 1).uniform(1, 50, n), jnp.float32)
+    mask = jnp.asarray((np.arange(n) % 3 != 1).astype(np.float32))
+    got = ops.masked_fedavg_q8(q, s, w, mask)
+    want = ref.masked_fedavg_q8_ref(q, s, w, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_q8_kernel_block_sweep():
+    q, s = _quantized_arena(5, 8192, seed=7)
+    w = jnp.ones((5,), jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1, 0], jnp.float32)
+    want = np.asarray(ref.masked_fedavg_q8_ref(q, s, w, mask))
+    for block_p in (1024, 2048, 4096, 8192):
+        got = ops.masked_fedavg_q8(q, s, w, mask, block_p=block_p)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=2e-5, atol=2e-5, err_msg=str(block_p))
+
+
+def test_fused_q8_kernel_nondefault_group():
+    q, s = _quantized_arena(4, 4096, seed=3, group=512)
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    mask = jnp.ones((4,), jnp.float32)
+    got = ops.masked_fedavg_q8(q, s, w, mask, group=512)
+    want = ref.masked_fedavg_q8_ref(q, s, w, mask, group=512)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_q8_kernel_all_invalid_mask_is_zero():
+    q, s = _quantized_arena(4, 2048, seed=9)
+    out = ops.masked_fedavg_q8(q, s, jnp.ones((4,)), jnp.zeros((4,)))
+    assert bool(jnp.all(out == 0.0))
+
+
+def test_fused_q8_kernel_dead_row_garbage_ignored():
+    q, s = _quantized_arena(4, 2048, seed=11)
+    # poison a masked-out row with extreme values and scales
+    q = q.at[2].set(127)
+    s = s.at[2].set(1e30)
+    mask = jnp.asarray([1, 1, 0, 1], jnp.float32)
+    got = ops.masked_fedavg_q8(q, s, jnp.ones((4,)), mask)
+    want = ref.masked_fedavg_q8_ref(q, s, jnp.ones((4,)), mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_fused_q8_kernel_shape_errors():
+    from repro.kernels.fused_agg import masked_fedavg_q8_pallas
+
+    q, s = _quantized_arena(3, 2048, seed=1)
+    w, m = jnp.ones((3,)), jnp.ones((3,))
+    with pytest.raises(ValueError, match="block_p"):
+        masked_fedavg_q8_pallas(q, s, w, m, block_p=1536, interpret=True)
+    with pytest.raises(ValueError, match="scales"):
+        masked_fedavg_q8_pallas(q, s[:, :-1], w, m, block_p=2048,
+                                interpret=True)
+
+
+def test_fused_q8_kernel_pads_non_aligned_width():
+    # 2048 + one group: not a multiple of any legal block — ops must pad.
+    q, s = _quantized_arena(3, 2048 + 256, seed=5)
+    got = ops.masked_fedavg_q8(q, s, jnp.ones((3,)), jnp.ones((3,)),
+                               block_p=1024)
+    want = ref.masked_fedavg_q8_ref(q, s, jnp.ones((3,)), jnp.ones((3,)))
+    assert got.shape == (2048 + 256,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_choose_block_p_q8_fits_vmem_and_divides():
+    from repro.kernels.fused_agg import (
+        VMEM_BUDGET_BYTES, choose_block_p_q8, choose_block_p_q8_dividing,
+    )
+
+    for n in (2, 8, 50, 200, 1000):
+        bp = choose_block_p_q8(n)
+        # int8 values + f32 out-tile accum + scales + weights/mask vectors
+        working = n * bp + 4 * n * bp + 4 * n * (bp // 256) + 4 * bp + 8 * n
+        assert working <= VMEM_BUDGET_BYTES, (n, bp, working)
+        assert bp % 1024 == 0
+    bp = choose_block_p_q8_dividing(16 * 1024, 8, 256)
+    assert (16 * 1024) % bp == 0
+
+
+def test_dequantize_scale_count_error():
+    q = jnp.zeros((16384,), jnp.int8)
+    s = jnp.zeros((3,), jnp.float32)  # wrong: needs 64 scales
+    with pytest.raises(ValueError, match="scales"):
+        ops.dequantize(q, s, 16384)

@@ -18,7 +18,9 @@ from hypothesis_compat import given, settings, st
 
 from repro.core import packing
 from repro.core.transport import Channel, Int8UploadCodec
-from repro.kernels.quantize import effective_block_rows, wire_layout
+from repro.kernels.quantize import (
+    effective_block_rows, scales_padding, wire_layout,
+)
 
 _DTYPES = ("float32", "bfloat16", "float16", "int32", "int8")
 
@@ -118,7 +120,9 @@ def test_int8_upload_codec_bounded_and_layout_pinned(row):
 @given(st.integers(1, 40000))
 @settings(max_examples=25, deadline=None)
 def test_wire_layout_invariants(n):
-    """Layout algebra: padded to the *adaptive* kernel tile, 1/group scales,
+    """Layout algebra: padded to the *adaptive* kernel tile, trimmed scales
+    (only the ceil(n/group) groups that hold real data ship — pure-padding
+    groups quantize to exactly q=0/scale=1 and are re-synthesized on decode),
     byte total — and compression never inverts once P reaches one group."""
     group, block_rows = 256, 64
     eff = effective_block_rows(n, group, block_rows)
@@ -126,7 +130,8 @@ def test_wire_layout_invariants(n):
     n_pad, n_scales, payload = wire_layout(n, group, block_rows)
     assert 1 <= eff <= block_rows
     assert n_pad >= n and n_pad % tile == 0 and n_pad - n < tile
-    assert n_scales * group == n_pad
+    assert n_scales == -(-n // group)  # ceil: data groups only
+    assert scales_padding(n, group, block_rows) == n_pad // group - n_scales
     assert payload == n_pad + 4 * n_scales
     if n >= group:
         assert payload < 4 * n  # int8 wire never exceeds the raw wire
