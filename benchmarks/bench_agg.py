@@ -36,6 +36,15 @@ blocked Pallas fused kernel (interpret mode on CPU) with an allclose parity
 check.  Bytes moved: ``~N·P·(1 + 4/group) + 4P`` fused vs ``~9·N·P``
 dequant-then-reduce; see ``benchmarks/roofline_table.py`` and docs/ARENA.md.
 
+Sparse top-k aggregation (``run_sparse``, ``--sparse``): the topk-resident
+arena's masked scatter-accumulate (``aggregation.masked_fedavg_topk``: read
+the ``(N, k)`` index/value streams once, never build the dense ``(N, P)``
+stack) against densify-then-reduce (materialize the f32 stack, then reduce)
+and against the int8 arena's fused dequant-into-aggregate over the same
+rows — the two wire-compression paths' per-round costs side by side, with
+per-shape parity checks.  Bytes moved: ``~8·N·k + 4·P`` scatter vs
+``~8·N·P`` densify-then-reduce; see ``benchmarks/roofline_table.py``.
+
 Sharded-vs-single-device arena (``run_sharded``, ``--sharded``): the same
 masked reduction and row write on a mesh-sharded arena
 (``ArenaStore(mesh=...)``, every visible device) against the single-device
@@ -374,6 +383,120 @@ def run_fused(shapes=((1 << 22, 8), (1 << 22, 32), (1 << 22, 64),
     return out_rows
 
 
+def run_sparse(shapes=((1 << 22, 8), (1 << 22, 32), (1 << 22, 64),
+                       (1 << 24, 32)),
+               k_divisor=64, iters=10):
+    """Sparse top-k aggregation: scatter-accumulate vs alternatives
+    (``--sparse``).
+
+    Every arm aggregates the *same* N sparse top-k uploads (k = P /
+    ``k_divisor`` coordinates per row, the ``sparse_mode="direct"``
+    resident layout):
+
+    * **scatter** — ``aggregation.masked_fedavg_topk``: one program scatters
+      the ``(N, k)`` weighted value streams into the f32 output row; the
+      dense ``(N, P)`` stack is never materialized (``~8·N·k + 4·P`` bytes).
+    * **densify_reduce** — what ``sparse_mode="densify"`` costs at
+      aggregation time if the densified rows were *not* arena-resident:
+      program 1 scatters each row into a dense f32 ``(N, P)`` stack, program
+      2 runs the masked reduction.  The stack is written and re-read —
+      ``~8·N·P`` bytes.
+    * **fused_q8** — the int8-resident arena's fused dequant-into-aggregate
+      (``aggregation.masked_fedavg_q8``) over the same densified rows,
+      quantized: the other wire-compression path's per-round cost, for the
+      codec trade-off table in docs/ARENA.md.
+
+    Per-shape parity: scatter must match densify-then-reduce to f32
+    tolerance (both are exact reorderings of the same sum), and fused_q8
+    must land inside the per-group quantization bound of that target.
+    ``shapes`` is ``(P, N)`` pairs, same convention as :func:`run_fused`.
+    """
+    import functools
+
+    import numpy as np
+
+    @functools.partial(jax.jit, static_argnames=("width",))
+    def densify_rows(idx, val, width):
+        n = idx.shape[0]
+        dense = jnp.zeros((n, width), jnp.float32)
+        return dense.at[jnp.arange(n)[:, None], idx].add(val)
+
+    out_rows = []
+    for p, n in shapes:
+        k = max(1, p // k_divisor)
+        arena = ArenaStore(num_params=p, n_max=n, row_align=1024,
+                           arena_dtype="topk", sparse_k=k)
+        q8 = ArenaStore(num_params=p, n_max=n, row_align=1024,
+                        arena_dtype="int8")
+        amax = 0.0
+        for i in range(n):
+            kidx, kkey = jax.random.split(jax.random.key(i))
+            idx = jax.random.choice(kidx, p, shape=(k,), replace=False)
+            val = jax.random.normal(kkey, (k,), jnp.float32)
+            arena.write_sparse(f"l{i}", idx.astype(jnp.int32), val,
+                               weight=float(10 * (i + 1)))
+            q8.write(f"l{i}",
+                     densify_rows(idx[None, :].astype(jnp.int32),
+                                  val[None, :], arena.padded_params)[0],
+                     weight=float(10 * (i + 1)))
+            amax = max(amax, float(jnp.max(jnp.abs(val))))
+        group = q8.qgroup
+        width = arena.padded_params
+
+        def scatter_round():
+            with arena.lock:
+                return aggregation.masked_fedavg_topk(
+                    arena.indices, arena.buffer, arena.weights, arena.mask,
+                    width,
+                )[: arena.num_params]
+
+        def densify_reduce_round():
+            with arena.lock:
+                stack = densify_rows(arena.indices, arena.buffer, width)
+                jax.block_until_ready(stack)  # two programs, like real code
+                return aggregation.masked_weighted_average(
+                    stack, arena.weights, arena.mask
+                )[: arena.num_params]
+
+        def fused_q8_round():
+            with q8.lock:
+                return aggregation.masked_fedavg_q8(
+                    q8.buffer, q8.scales, q8.weights, q8.mask, group,
+                )[: q8.num_params]
+
+        want = np.asarray(densify_reduce_round())
+        np.testing.assert_allclose(np.asarray(scatter_round()), want,
+                                   rtol=2e-5, atol=2e-5)
+        # fused_q8 aggregates the quantized twin of the same rows: the
+        # weighted mean can drift at most one group scale (amax/127) off.
+        np.testing.assert_allclose(np.asarray(fused_q8_round()), want,
+                                   atol=amax / 127 + 1e-6)
+        t_scatter = bench(scatter_round, warmup=2, iters=iters)
+        t_dense = bench(densify_reduce_round, warmup=2, iters=iters)
+        t_q8 = bench(fused_q8_round, warmup=2, iters=iters)
+
+        speedup = t_dense / t_scatter
+        resident = arena.buffer.nbytes + arena.indices.nbytes
+        row = {
+            "bench": "sparse_topk", "params": p, "learners": n, "k": k,
+            "scatter_s": t_scatter, "densify_reduce_s": t_dense,
+            "fused_q8_s": t_q8,
+            "resident_bytes_topk": resident,
+            "resident_bytes_f32": 4 * n * width,
+            "shrink_resident": 4 * n * width / resident,
+            "speedup_scatter_vs_densify": speedup,
+        }
+        out_rows.append(row)
+        print(
+            f"sparse,P={p},N={n},k={k},scatter={t_scatter*1e3:.2f}ms,"
+            f"densify_reduce={t_dense*1e3:.2f}ms,fused_q8={t_q8*1e3:.2f}ms,"
+            f"shrink={row['shrink_resident']:.1f}x,speedup={speedup:.2f}x",
+            flush=True,
+        )
+        del arena, q8
+    return out_rows
+
+
 def run_sharded(learner_counts=(8, 32), param_counts=(1 << 20, 1 << 22),
                 iters=10):
     """Sharded-vs-single-device arena: masked reduction + row-write latency.
@@ -472,13 +595,22 @@ def main(argv=None):
     ap.add_argument("--fused", action="store_true",
                     help="int8 arena: fused dequant-into-aggregate vs "
                          "dequantize-then-reduce vs the f32 arena")
+    ap.add_argument("--sparse", action="store_true",
+                    help="top-k arena: masked scatter-accumulate vs "
+                         "densify-then-reduce vs the fused int8 path")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump result rows as JSON")
     args = ap.parse_args(argv)
 
-    if args.fused:
+    if args.sparse:
+        if args.smoke:
+            rows = run_sparse(shapes=((1 << 16, 4), (1 << 16, 32)),
+                              k_divisor=64, iters=3)
+        else:
+            rows = run_sparse()
+    elif args.fused:
         if args.smoke:
             rows = run_fused(shapes=((1 << 16, 4), (1 << 16, 8)), iters=3)
         else:

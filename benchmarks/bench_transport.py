@@ -2,7 +2,7 @@
 Figs. 5a/5d...): per-tensor pickle (naive) vs flat-byte packing (paper's
 proto-tensor) vs flat packing + int8 Pallas codec (beyond paper), plus the
 serialize-once broadcast fan-out vs legacy per-send dispatch, plus the
-measured **uplink** (``--upload``): raw vs int8 upload codec over the
+measured **uplink** (``--upload``): raw vs int8 vs top-k sparse codecs over the
 ``Channel.upload``/``recv_upload`` half — the dominant wire direction of a
 federation round (N uploads vs 1 broadcast).
 
@@ -21,6 +21,7 @@ import numpy as np
 from benchmarks.timing import bench
 from repro.configs import housing_mlp
 from repro.core import Channel, naive, packing
+from repro.core.transport import TopkUploadCodec
 from repro.kernels.ops import QuantCodec
 from repro.models import mlp as mlp_model
 
@@ -120,24 +121,46 @@ def run_broadcast(sizes=("1m", "10m"), n_recipients=32, iters=3):
 
 
 def run_upload(sizes=(2**23,), iters=2):
-    """Measured uplink: raw vs int8 upload codec over flat (P,) buffers.
+    """Measured uplink: raw vs int8 vs top-k sparse upload codecs.
 
     Each arm times **one** learner row through the channel's upload half
     (``Channel.upload`` → ``recv_upload``) and reports that upload's wire
     bytes — per-roundtrip units, same convention as :func:`run`, so MB/s is
     computable straight off the JSON row.  Honesty checks: the raw arm must
     round-trip bit-exactly; the int8 arm must stay inside the per-group
-    quantization bound.  The headline number is ``uplink_saving`` — int8
-    cuts uplink wire bytes ~3.9x vs raw.
+    quantization bound; the topk arms must be zero off the selected
+    coordinates and exact (f32 values) or inside the quantization bound
+    (int8-grouped values) on them.
+
+    The sparse arms sweep ``k = P/16, P/64, P/256`` with f32 values plus
+    ``k = P/64`` with int8-grouped values, and each row carries its byte
+    ratio against the raw and int8 arms.  The contract the nightly JSON
+    tracks (and this function asserts — bytes are deterministic): at
+    ``k = P/64`` the topk payload is **>= 8x** smaller than raw and
+    **>= 2x** smaller than the int8 codec.
     """
     rows = []
     for p in sizes:
+        p = int(p)
         buf = jnp.asarray(
-            np.random.default_rng(0).normal(size=(int(p),)).astype(np.float32)
+            np.random.default_rng(0).normal(size=(p,)).astype(np.float32)
         )
         jax.block_until_ready(buf)
+        np_buf = np.asarray(buf)
+        amax = float(np.max(np.abs(np_buf)))
+
+        specs = [("raw", "raw"), ("int8", "int8")]
+        for frac in (16, 64, 256):
+            specs.append(
+                (f"topk_p{frac}", TopkUploadCodec(k=max(1, p // frac)))
+            )
+        specs.append(
+            ("topk_p64_q8",
+             TopkUploadCodec(k=max(1, p // 64), value_dtype="int8"))
+        )
+
         arms = {}
-        for codec in ("raw", "int8"):
+        for name, codec in specs:
             ch = Channel(upload_codec=codec)
 
             def roundtrip(ch=ch):
@@ -148,35 +171,63 @@ def run_upload(sizes=(2**23,), iters=2):
 
             env = roundtrip()
             got = np.asarray(ch.recv_upload(env))
-            if codec == "raw":
-                np.testing.assert_array_equal(got, np.asarray(buf))
+            if name == "raw":
+                np.testing.assert_array_equal(got, np_buf)
+            elif name == "int8":
+                assert float(np.max(np.abs(got - np_buf))) <= amax / 127
             else:
-                amax = float(np.max(np.abs(np.asarray(buf))))
-                assert float(np.max(np.abs(got - np.asarray(buf)))) <= amax / 127
+                idx, _ = ch.upload_codec.unpack_coords(env.payload, p)
+                idx = np.asarray(idx)
+                off = np.ones(p, bool)
+                off[idx] = False
+                assert not got[off].any()  # zero off the selected coords
+                err = np.max(np.abs(got[idx] - np_buf[idx]))
+                if ch.upload_codec.value_dtype == "f32":
+                    assert err == 0.0
+                else:
+                    assert float(err) <= amax / 127
 
             # per-upload wire bytes off the unified telemetry surface (the
-            # same counters the controller registry exposes; the honesty
-            # check below keeps them consistent with the envelope itself)
+            # same counters the controller registry exposes; the assert
+            # keeps them consistent with the envelope itself)
             tm = ch.telemetry
             per_upload = (tm.value("channel.upload_bytes")
                           // tm.value("channel.upload_messages"))
             assert per_upload == int(env.payload.nbytes)
-            arms[codec] = (bench(roundtrip, warmup=1, iters=iters, block=False),
-                           int(per_upload))
+            arms[name] = (bench(roundtrip, warmup=1, iters=iters, block=False),
+                          int(per_upload))
         t_raw, b_raw = arms["raw"]
         t_int8, b_int8 = arms["int8"]
         saving = b_raw / b_int8
-        rows.append({
-            "bench": "upload", "p": int(p),
+        row = {
+            "bench": "upload", "p": p,
             "raw_s": t_raw, "int8_s": t_int8,
             "raw_bytes": b_raw, "int8_bytes": b_int8,
             "uplink_saving": saving,
-        })
+        }
+        sparse_bits = []
+        for name in arms:
+            if not name.startswith("topk"):
+                continue
+            t_k, b_k = arms[name]
+            row[f"{name}_s"] = t_k
+            row[f"{name}_bytes"] = b_k
+            row[f"{name}_vs_raw"] = b_raw / b_k
+            row[f"{name}_vs_int8"] = b_int8 / b_k
+            sparse_bits.append(
+                f"{name}={t_k*1e3:.2f}ms/{b_k/1e6:.3f}MB"
+                f"({b_raw/b_k:.0f}x raw)"
+            )
+        # The headline sparse contract at k = P/64 (bytes, deterministic).
+        assert row["topk_p64_vs_raw"] >= 8.0
+        assert row["topk_p64_vs_int8"] >= 2.0
+        rows.append(row)
         print(
-            f"upload,P={int(p)},"
+            f"upload,P={p},"
             f"raw={t_raw*1e3:.2f}ms/{b_raw/1e6:.2f}MB,"
             f"int8={t_int8*1e3:.2f}ms/{b_int8/1e6:.2f}MB,"
-            f"uplink_saving={saving:.2f}x",
+            + ",".join(sparse_bits) +
+            f",uplink_saving={saving:.2f}x",
             flush=True,
         )
     return rows
@@ -187,7 +238,8 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--upload", action="store_true",
-                    help="run only the uplink raw-vs-int8 codec arm")
+                    help="run only the uplink codec arms "
+                         "(raw vs int8 vs top-k sparse)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump result rows as JSON")
     args = ap.parse_args(argv)

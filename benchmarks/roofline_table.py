@@ -104,6 +104,40 @@ def fmt_fused_q8_table(
     return head + "\n".join(lines) + "\n"
 
 
+def fmt_sparse_topk_table(
+    shapes=((1 << 22, 8), (1 << 22, 32), (1 << 22, 64), (1 << 24, 32)),
+    k_divisor: int = 64,
+) -> str:
+    """Analytic bytes-moved roofline for the sparse top-k aggregation paths.
+
+    The masked scatter-accumulate (``kernels/sparse_agg``) reads the
+    ``(N, k)`` int32 index and f32 value streams once and writes the f32
+    output row: ``~8·N·k + 4·P`` bytes.  Densify-then-reduce writes the f32
+    ``(N, P)`` stack from those same streams, then re-reads it for the
+    reduction: ``~8·N·P`` bytes.  At ``k = P/64`` the stack never being
+    built is a ~57x bytes gap — the memory-roofline ceiling
+    ``benchmarks/bench_agg.py --sparse`` measures against.  HBM-bound times
+    assume the ``HW_NOTE`` chip's 819 GB/s.
+    """
+    head = (
+        "| P (params) | N | k | scatter MiB | densify+reduce MiB | "
+        "scatter HBM-bound ms | densify+reduce ms | bytes ratio |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for p, n in shapes:
+        k = max(1, p // k_divisor)
+        scatter = 8 * n * k + 4 * p
+        dense = 8 * n * p
+        lines.append(
+            f"| 2^{p.bit_length() - 1} | {n} | P/{k_divisor} | "
+            f"{scatter / 2**20:.1f} | {dense / 2**20:.1f} | "
+            f"{scatter / (HBM_GBPS * 1e9) * 1e3:.3f} | "
+            f"{dense / (HBM_GBPS * 1e9) * 1e3:.3f} | {dense / scatter:.2f}x |"
+        )
+    return head + "\n".join(lines) + "\n"
+
+
 def summarize(
     sections=(
         ("Baseline 16×16 (pre-§Perf substrate; old collective parser)",
@@ -145,3 +179,6 @@ if __name__ == "__main__":
     print("### Int8 arena: fused dequant-into-aggregate bytes moved "
           "(analytic)\n")
     print(fmt_fused_q8_table())
+    print("### Sparse top-k arena: scatter-accumulate bytes moved "
+          "(analytic)\n")
+    print(fmt_sparse_topk_table())

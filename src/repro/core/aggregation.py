@@ -39,8 +39,10 @@ __all__ = [
     "masked_weighted_average",
     "masked_fedavg",
     "masked_fedavg_q8",
+    "masked_fedavg_topk",
     "masked_staleness_average",
     "masked_staleness_q8",
+    "masked_staleness_topk",
     "coordinate_median",
     "trimmed_mean",
     "masked_coordinate_median",
@@ -50,8 +52,10 @@ __all__ = [
     "hierarchical_fedavg",
     "masked_fedavg_sharded",
     "masked_fedavg_q8_sharded",
+    "masked_fedavg_topk_sharded",
     "masked_staleness_sharded",
     "masked_staleness_q8_sharded",
+    "masked_staleness_topk_sharded",
     "masked_median_sharded",
     "masked_trimmed_mean_sharded",
     "arena_axes",
@@ -197,6 +201,58 @@ def masked_staleness_q8(
     w = masked_normalize(staleness_weights(num_examples, stal, alpha), m)
     rows = jnp.where(m[:, None] > 0, _dequant_rows(q, scales, group), 0.0)
     return jnp.einsum("n,np->p", w, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("out_width",))
+def masked_fedavg_topk(
+    indices: jax.Array,
+    values: jax.Array,
+    weights: jax.Array,
+    mask: jax.Array,
+    out_width: int,
+) -> jax.Array:
+    """Masked FedAvg straight off a sparse (top-k) arena — scatter, not stack.
+
+    ``(N, k)`` int32 × ``(N, k)`` f32 × ``(N,)`` × ``(N,)`` -> ``(P,)``: the
+    sparse-arena statement of :func:`masked_weighted_average`.  The weight
+    normalization runs on the tiny replicated vectors; the reduce is one
+    combining scatter-add (``kernels/sparse_agg.scatter_accumulate``) of
+    every valid row's weighted ``(index, value)`` stream into the dense
+    output — the ``(N, P)`` stack is never built, so the reduce moves
+    ``~N·k + P`` floats instead of ``N·P``.  Rows hold *deltas* (the topk
+    codec sparsifies updates, not parameters); the controller adds the
+    aggregated delta onto the global buffer at commit.
+    """
+    from repro.kernels import sparse_agg
+
+    m = jnp.asarray(mask, jnp.float32)
+    w = masked_normalize(weights, m)
+    return sparse_agg.scatter_accumulate(indices, values, w, m, out_width)
+
+
+@functools.partial(jax.jit, static_argnames=("out_width",))
+def masked_staleness_topk(
+    indices: jax.Array,
+    values: jax.Array,
+    num_examples: jax.Array,
+    versions: jax.Array,
+    current_version: jax.Array,
+    mask: jax.Array,
+    out_width: int,
+    alpha: float = 0.5,
+) -> jax.Array:
+    """Asynchronous-protocol aggregation straight off a sparse arena.
+
+    The sparse statement of :func:`masked_staleness_average`: the staleness
+    discount damps the replicated weight vector, then one masked
+    scatter-accumulate folds every valid sparse row into the ``(P,)`` delta.
+    """
+    from repro.kernels import sparse_agg
+
+    m = jnp.asarray(mask, jnp.float32)
+    stal = jnp.maximum(jnp.float32(current_version) - versions, 0.0)
+    w = masked_normalize(staleness_weights(num_examples, stal, alpha), m)
+    return sparse_agg.scatter_accumulate(indices, values, w, m, out_width)
 
 
 def _robust_out_dtype(stack: jax.Array) -> jnp.dtype:
@@ -421,6 +477,52 @@ def masked_staleness_q8_sharded(mesh: Mesh, axes=None, alpha: float = 0.5,
         in_shardings=(col, col, repl, repl, repl, repl),
         out_shardings=NamedSharding(mesh, P(ax)),
     )
+
+
+def masked_fedavg_topk_sharded(mesh: Mesh, axes=None, out_width: int = 0):
+    """Masked sparse FedAvg over a column-sharded output — zero collectives.
+
+    Returns a jitted ``(indices (N,k) int32, values (N,k) f32, weights (N,),
+    mask (N,)) -> (P,)`` closed over the mesh and the (static) output width.
+    Unlike the dense sharded reductions, the *inputs* stay replicated — the
+    sparse arena is ``N·k``-small by construction — and only the ``(P,)``
+    output is column-sharded: inside ``shard_map`` each device buckets the
+    global indices into its own column window and scatters locally
+    (``kernels/sparse_agg.scatter_accumulate_sharded``), so the compiled
+    HLO stays collective-free.
+    """
+    from repro.kernels import sparse_agg
+
+    ax = arena_axes(mesh, axes)
+    scatter = sparse_agg.scatter_accumulate_sharded(mesh, ax, int(out_width))
+
+    def _agg(indices, values, weights, mask):
+        m = jnp.asarray(mask, jnp.float32)
+        w = masked_normalize(weights, m)
+        return scatter(indices, values, w, m)
+
+    return jax.jit(_agg)
+
+
+def masked_staleness_topk_sharded(mesh: Mesh, axes=None, out_width: int = 0,
+                                  alpha: float = 0.5):
+    """Sharded statement of :func:`masked_staleness_topk` for async sparse
+    arenas — same replicated-input / sharded-output contract as
+    :func:`masked_fedavg_topk_sharded`, with the staleness discount on the
+    replicated ``(N,)`` vectors.
+    """
+    from repro.kernels import sparse_agg
+
+    ax = arena_axes(mesh, axes)
+    scatter = sparse_agg.scatter_accumulate_sharded(mesh, ax, int(out_width))
+
+    def _agg(indices, values, num_examples, versions, current_version, mask):
+        m = jnp.asarray(mask, jnp.float32)
+        stal = jnp.maximum(jnp.float32(current_version) - versions, 0.0)
+        w = masked_normalize(staleness_weights(num_examples, stal, alpha), m)
+        return scatter(indices, values, w, m)
+
+    return jax.jit(_agg)
 
 
 def masked_staleness_sharded(mesh: Mesh, axes=None, alpha: float = 0.5):

@@ -29,9 +29,10 @@ from typing import Any
 __all__ = ["FederationConfig"]
 
 _STORE_MODES = ("auto", "arena", "stack")
-_UPLOAD_CODECS = ("raw", "int8")
+_UPLOAD_CODECS = ("raw", "int8", "topk")
 _AGGREGATION_RULES = ("fedavg", "median", "trimmed_mean")
 _ARENA_DTYPES = ("f32", "int8")
+_SPARSE_MODES = ("direct", "densify")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +50,10 @@ class FederationConfig:
         0 = single-device arena; N > 0 column-shards over an N-device mesh;
         -1 shards over every visible device.
     upload_codec:
-        Uplink wire format: ``"raw"`` (bit-transparent f32) or ``"int8"``
-        (blockwise quantization).
+        Uplink wire format: ``"raw"`` (bit-transparent f32), ``"int8"``
+        (blockwise quantization) or ``"topk"`` (magnitude top-k delta
+        sparsification with learner-side error feedback — requires
+        ``flat_uploads``; see ``docs/DISPATCH.md``).
     flat_uploads:
         Ship the wire manifest at registration so uploads arrive as packed
         flat buffers (the fast path); False keeps pack-on-arrival parity.
@@ -89,6 +92,15 @@ class FederationConfig:
         aggregates through the fused dequant-into-aggregate path.
         Requires an arena store with the default ``"fedavg"`` rule and no
         secure aggregation — see the support matrix in ``docs/ARENA.md``.
+    sparse_mode:
+        How a ``"topk"`` upload lands in the store: ``"densify"`` (default)
+        scatters the sparse delta into the existing dense f32/int8 row, so
+        every store mode and aggregation rule keeps working; ``"direct"``
+        keeps the ``(n_max, k)`` index/value arena resident and aggregates
+        through the masked scatter-accumulate — the fast path, restricted
+        to an arena store with ``"fedavg"``/staleness weighting and the
+        default f32 rows.  Ignored (must stay ``"densify"``) for the dense
+        codecs — see the support matrix in ``docs/ARENA.md``.
     """
 
     store_mode: str = "auto"
@@ -105,6 +117,7 @@ class FederationConfig:
     aggregation_rule: str = "fedavg"
     trim_k: int = 1
     arena_dtype: str = "f32"
+    sparse_mode: str = "densify"
 
     def __post_init__(self) -> None:
         """Validate every knob at construction time."""
@@ -168,6 +181,45 @@ class FederationConfig:
                 "the robust order-statistic rules sort full-precision rows "
                 f"(got {self.aggregation_rule!r}) — see docs/ARENA.md"
             )
+        if self.sparse_mode not in _SPARSE_MODES:
+            raise ValueError(
+                f"sparse_mode must be one of {_SPARSE_MODES}, "
+                f"got {self.sparse_mode!r}"
+            )
+        is_topk = self.upload_codec == "topk" or (
+            not isinstance(self.upload_codec, str)
+            and getattr(self.upload_codec, "codec_id", None) == "topk"
+        )
+        if is_topk and not self.flat_uploads:
+            raise ValueError(
+                "upload_codec='topk' requires flat_uploads=True: the "
+                "error-feedback residual lives learner-side against the "
+                "shipped wire manifest"
+            )
+        if self.sparse_mode == "direct":
+            if not is_topk:
+                raise ValueError(
+                    "sparse_mode='direct' requires upload_codec='topk' "
+                    f"(got {self.upload_codec!r})"
+                )
+            if self.store_mode == "stack":
+                raise ValueError(
+                    "sparse_mode='direct' requires an arena store; it "
+                    "cannot combine with store_mode='stack'"
+                )
+            if self.aggregation_rule != "fedavg":
+                raise ValueError(
+                    "sparse_mode='direct' supports only "
+                    "aggregation_rule='fedavg'; the robust order-statistic "
+                    "rules need dense rows — use sparse_mode='densify' "
+                    f"(got {self.aggregation_rule!r})"
+                )
+            if self.arena_dtype != "f32":
+                raise ValueError(
+                    "sparse_mode='direct' keeps its own (n, k) sparse "
+                    "arena; it cannot combine with "
+                    f"arena_dtype={self.arena_dtype!r}"
+                )
 
     @classmethod
     def from_kwargs(cls, **kwargs: Any) -> "FederationConfig":

@@ -202,6 +202,7 @@ class Controller:
         arena_mesh: Any = None,
         arena_axes: Any = None,
         arena_dtype: str = "f32",
+        sparse_mode: str = "densify",
         flat_uploads: bool = True,
         upload_codec: Any = None,
         profile_decay: float = 0.5,
@@ -345,9 +346,72 @@ class Controller:
         # exclusive with the f32 pair above.
         self._sharded_q8_fn: Callable | None = None
         self._sharded_staleness_q8_fn: Callable | None = None
+        # Sparse-arena (sparse_mode='direct') scatter-accumulate reductions.
+        self._sharded_topk_fn: Callable | None = None
+        self._sharded_staleness_topk_fn: Callable | None = None
         self.channel = channel or Channel()
         if upload_codec is not None:
             self.channel.upload_codec = get_upload_codec(upload_codec)
+        # Sparse (top-k) uplink: rows hold *deltas* (the learner sparsifies
+        # its update against the shipped model, carrying the rest as an
+        # error-feedback residual), so every aggregate commits
+        # ``global_buffer + aggregated_delta``.  ``sparse_mode`` picks how
+        # a sparse upload lands: 'densify' scatters it into the existing
+        # dense row (every store/rule keeps working); 'direct' keeps an
+        # (n_max, k) index/value arena resident and aggregates through the
+        # masked scatter-accumulate (see docs/ARENA.md support matrix).
+        self._topk = (
+            getattr(self.channel.upload_codec, "codec_id", None) == "topk"
+        )
+        if sparse_mode not in ("direct", "densify"):
+            raise ValueError(
+                f"sparse_mode must be 'direct' or 'densify', "
+                f"got {sparse_mode!r}"
+            )
+        self.sparse_mode = sparse_mode
+        if self._topk:
+            if secure:
+                raise ValueError(
+                    "upload_codec='topk' cannot run under secure "
+                    "aggregation: the controller must densify and re-weight "
+                    "sparse deltas, and the masked fixed-point rows admit "
+                    "neither"
+                )
+            if not flat_uploads:
+                raise ValueError(
+                    "upload_codec='topk' requires flat_uploads=True: the "
+                    "error-feedback residual lives learner-side against "
+                    "the shipped wire manifest"
+                )
+            if aggregate_fn is not None or masked_aggregate_fn is not None:
+                raise ValueError(
+                    "upload_codec='topk' cannot honour a custom "
+                    "aggregate_fn/masked_aggregate_fn: sparse rows hold "
+                    "deltas, and custom rules expect full-parameter rows"
+                )
+        if sparse_mode == "direct":
+            if not self._topk:
+                raise ValueError(
+                    "sparse_mode='direct' requires upload_codec='topk'"
+                )
+            if store_mode != "arena":
+                raise ValueError(
+                    "sparse_mode='direct' requires store_mode='arena'; the "
+                    "stack store keeps dense decoded buffers"
+                )
+            if aggregation_rule != "fedavg":
+                raise ValueError(
+                    "sparse_mode='direct' supports only "
+                    "aggregation_rule='fedavg'; the robust order-statistic "
+                    "rules need dense rows — use sparse_mode='densify' "
+                    f"(got {aggregation_rule!r})"
+                )
+            if arena_dtype != "f32":
+                raise ValueError(
+                    "sparse_mode='direct' keeps its own (n, k) sparse "
+                    "arena; it cannot combine with "
+                    f"arena_dtype={arena_dtype!r}"
+                )
         # The unified observability surface: the controller adopts its
         # channel's registry, so every channel.* counter and every store/
         # controller instrument is reachable through this one handle.
@@ -403,6 +467,15 @@ class Controller:
         )
         self._c_fused_agg = self.telemetry.counter(
             "controller.aggregations.fused_q8"
+        )
+        # Sparse-uplink fast paths (docs/OBSERVABILITY.md): uploads landed
+        # in the (n, k) sparse arena with no densification, and masked
+        # scatter-accumulate reductions fired.
+        self._c_sparse_direct = self.telemetry.counter(
+            "engine.uploads.sparse_direct"
+        )
+        self._c_sparse_agg = self.telemetry.counter(
+            "controller.aggregations.sparse_scatter"
         )
         self._c_quarantined = self.telemetry.counter("engine.quarantine.entered")
         self._g_quarantine = self.telemetry.gauge("engine.quarantine.active")
@@ -471,6 +544,7 @@ class Controller:
         self._server_state = self.server_opt.init(self.global_buffer)
         self.invalidate_wire_cache()
         if self.store_mode == "arena":
+            direct = self._topk and self.sparse_mode == "direct"
             self.arena = ArenaStore(
                 num_params=max(1, int(self.global_buffer.shape[0])),
                 n_max=max(self._arena_n_max, len(self._learners)),
@@ -478,7 +552,10 @@ class Controller:
                 mesh=self.arena_mesh,
                 axes=self.arena_axes,
                 telemetry=self.telemetry,
-                arena_dtype=self.arena_dtype,
+                arena_dtype="topk" if direct else self.arena_dtype,
+                sparse_k=(
+                    self.channel.upload_codec.k if direct else None
+                ),
             )
             # Deterministic row order: rows follow *registration* order, not
             # first-upload arrival order, so arena aggregation order — and
@@ -501,7 +578,24 @@ class Controller:
                 # A user-supplied masked rule is honoured as-is — it runs on
                 # the sharded buffer with whatever layout XLA infers.
                 alpha = getattr(self.protocol, "staleness_alpha", 0.5)
-                if self.arena_dtype == "int8":
+                if self.arena.arena_dtype == "topk":
+                    # Sparse arena: replicated (n, k) inputs, column-sharded
+                    # (P,) output — each shard buckets the global indices
+                    # into its own column window and scatters locally, so
+                    # the compiled HLO stays collective-free.
+                    self._sharded_topk_fn = (
+                        aggregation.masked_fedavg_topk_sharded(
+                            self.arena.mesh, self.arena.axes,
+                            self.arena.padded_params,
+                        )
+                    )
+                    self._sharded_staleness_topk_fn = (
+                        aggregation.masked_staleness_topk_sharded(
+                            self.arena.mesh, self.arena.axes,
+                            self.arena.padded_params, alpha,
+                        )
+                    )
+                elif self.arena_dtype == "int8":
                     # Quantized arena: the fused dequant-into-aggregate pair
                     # (values + scales share the column sharding; zero
                     # collectives).  Robust rules and custom fns were
@@ -534,7 +628,8 @@ class Controller:
                                 self.arena.mesh, self.arena.axes
                             )
                         )
-                if self.arena_dtype != "int8":
+                if (self.arena_dtype != "int8"
+                        and self.arena.arena_dtype != "topk"):
                     self._sharded_staleness_fn = (
                         aggregation.masked_staleness_sharded(
                             self.arena.mesh, self.arena.axes, alpha
@@ -827,7 +922,37 @@ class Controller:
         """
         clip: dict | None = None
         if self.store_mode == "arena":
-            if self._quant_direct_ok(update):
+            if self._sparse_direct_ok(update):
+                idx, val, norm = self.channel.recv_upload_sparse(
+                    update.upload
+                )
+                if self.admission_control:
+                    scale, clip = self._screen_norm(
+                        update.learner_id, float(norm)
+                    )
+                    if scale is not None:
+                        # Clipping a sparse row == rescaling its values
+                        # (top-k indices are unique, so the value-vector
+                        # norm *is* the row norm).
+                        val = val * jnp.float32(scale)
+                self.arena.write_sparse(
+                    update.learner_id,
+                    idx,
+                    val,
+                    weight=float(update.num_examples),
+                    version=float(
+                        self._learner_versions.get(update.learner_id, 0)
+                    ),
+                )
+                self._c_sparse_direct.add(1)
+            elif (self.arena is not None
+                    and self.arena.arena_dtype == "topk"):
+                raise ValueError(
+                    "sparse_mode='direct' arena can only land registry "
+                    "'topk' envelopes packed at the arena row width; got "
+                    f"codec={getattr(update.upload, 'codec', None)!r}"
+                )
+            elif self._quant_direct_ok(update):
                 q, scales, norm = self.channel.recv_upload_quantized(
                     update.upload, self.arena.padded_params
                 )
@@ -900,6 +1025,24 @@ class Controller:
         if update.upload is not None:
             prof.observe_upload_bytes(update.upload.payload.nbytes)
         return clip
+
+    def _sparse_direct_ok(self, update: LocalUpdate) -> bool:
+        """True when the upload can land in the (n, k) sparse arena as-is.
+
+        Requires a ``sparse_mode='direct'`` arena and a wire envelope from
+        the registry ``topk`` codec whose payload was packed at the arena's
+        padded row width (the ``flat_uploads`` fast path) — the arena row
+        then *is* the wire's (index, value) stream, decoded device-side
+        with the row norm fused into the same program.
+        """
+        if self.arena is None or self.arena.arena_dtype != "topk":
+            return False
+        env = update.upload
+        return (
+            env is not None
+            and env.codec == "topk"
+            and int(env.num_elements) == self.arena.padded_params
+        )
 
     def _quant_direct_ok(self, update: LocalUpdate) -> bool:
         """True when the upload can land in the int8 arena without dequant.
@@ -984,7 +1127,16 @@ class Controller:
 
     # ------------------------------------------------------------- aggregate
     def _commit(self, new_buffer: jax.Array) -> None:
-        """Server-side optimization + global model swap + version bump."""
+        """Server-side optimization + global model swap + version bump.
+
+        Sparse (topk) uplinks ship *deltas*, so the aggregate is a delta
+        too: fold it onto the current global buffer first — the async-safe
+        statement (the controller no longer holds each learner's base
+        version), exactly equal to dense FedAvg when every cohort member
+        trained from the same broadcast.
+        """
+        if self._topk:
+            new_buffer = self.global_buffer + new_buffer
         self._server_state, new_buffer = self.server_opt.apply(
             self._server_state, self.global_buffer, new_buffer
         )
@@ -1070,6 +1222,20 @@ class Controller:
             if arena.num_valid(list(selected)) == 0:
                 raise RuntimeError("no local models available to aggregate")
             mask = arena.round_mask(list(selected))
+            if arena.arena_dtype == "topk":
+                # Masked scatter-accumulate straight off the (n, k) sparse
+                # arena: the dense (N, P) stack is never built.
+                if self._sharded_topk_fn is not None:
+                    out = self._sharded_topk_fn(
+                        arena.indices, arena.buffer, arena.weights, mask
+                    )
+                else:
+                    out = aggregation.masked_fedavg_topk(
+                        arena.indices, arena.buffer, arena.weights, mask,
+                        arena.padded_params,
+                    )
+                self._c_sparse_agg.add(1)
+                return out[: arena.num_params]
             if self.arena_dtype == "int8":
                 # Fused dequant-into-aggregate: the reduce reads the int8
                 # groups + scales directly, never materializing (N, P) f32.
@@ -1116,6 +1282,30 @@ class Controller:
         self._c_fused_agg.add(1)
         return out[: arena.num_params]
 
+    def _staleness_topk(
+        self, arena: ArenaStore, mask: jax.Array, alpha: float
+    ) -> jax.Array:
+        """Staleness-damped scatter-accumulate over the sparse arena.
+
+        Same math as ``masked_staleness_average`` restated over (index,
+        value) streams; dispatches the column-sharded variant when the
+        arena is sharded.  Counted in
+        ``controller.aggregations.sparse_scatter``.
+        """
+        if self._sharded_staleness_topk_fn is not None:
+            out = self._sharded_staleness_topk_fn(
+                arena.indices, arena.buffer, arena.weights, arena.versions,
+                jnp.float32(self._model_version), mask,
+            )
+        else:
+            out = aggregation.masked_staleness_topk(
+                arena.indices, arena.buffer, arena.weights, arena.versions,
+                jnp.float32(self._model_version), mask,
+                arena.padded_params, alpha,
+            )
+        self._c_sparse_agg.add(1)
+        return out[: arena.num_params]
+
     def aggregate_community(self) -> float:
         """One staleness-weighted community update (the continuous policy).
 
@@ -1136,6 +1326,10 @@ class Controller:
             with arena.lock:
                 if self.secure:
                     new_buffer = self._secure_community_arena(alpha)
+                elif arena.arena_dtype == "topk":
+                    new_buffer = self._staleness_topk(
+                        arena, arena.mask, alpha
+                    )
                 elif self.arena_dtype == "int8":
                     new_buffer = self._staleness_q8(arena, arena.mask, alpha)
                 elif self._sharded_staleness_fn is not None:
@@ -1212,7 +1406,9 @@ class Controller:
                             "no local models available to aggregate"
                         )
                     mask = arena.round_mask(ordered)
-                    if self.arena_dtype == "int8":
+                    if arena.arena_dtype == "topk":
+                        new_buffer = self._staleness_topk(arena, mask, alpha)
+                    elif self.arena_dtype == "int8":
                         new_buffer = self._staleness_q8(arena, mask, alpha)
                     elif self._sharded_staleness_fn is not None:
                         new_buffer = self._sharded_staleness_fn(
@@ -1370,6 +1566,8 @@ class Controller:
             extras["arena_valid"] = st["valid"]
             if st.get("scales") is not None:
                 extras["arena_scales"] = st["scales"]
+            if st.get("indices") is not None:
+                extras["arena_indices"] = st["indices"]
             meta["arena_rows"] = {k: int(v) for k, v in st["rows"].items()}
             meta["arena_dtype"] = self.arena_dtype
         elif self.store_mode == "stack":
@@ -1385,6 +1583,20 @@ class Controller:
             ]
             for j, rec in enumerate(records):
                 extras[f"stackbuf_{j}"] = rec.buffer
+        if self._topk:
+            # The learner-side error-feedback residuals are federation
+            # state: dropping them at resume silently re-sends mass the
+            # carry already accounted for.  The engine checkpoints at
+            # round boundaries after draining outstanding tasks, so the
+            # residuals are quiescent here.
+            meta["sparse_mode"] = self.sparse_mode
+            residual_learners = []
+            for lid, learner in self._learners.items():
+                res = learner.export_residual()
+                if res is not None:
+                    extras[f"residual__{lid}"] = res
+                    residual_learners.append(lid)
+            meta["residual_learners"] = residual_learners
         return ckpt.save_checkpoint(
             directory, step, self.global_params,
             extra_arrays=extras, metadata=meta,
@@ -1417,6 +1629,7 @@ class Controller:
             ("secure", bool(self.secure)),
             ("aggregation_rule", self.aggregation_rule),
             ("arena_dtype", self.arena_dtype),
+            ("sparse_mode", self.sparse_mode),
         ):
             if key in meta and meta[key] != mine:
                 raise ValueError(
@@ -1478,6 +1691,7 @@ class Controller:
                 valid=extras["arena_valid"],
                 rows=meta["arena_rows"],
                 scales=extras.get("arena_scales"),
+                indices=extras.get("arena_indices"),
             )
         elif self.store_mode == "stack" and "stack_records" in meta:
             self.store.restore_records([
@@ -1490,6 +1704,10 @@ class Controller:
                 )
                 for j, rec in enumerate(meta["stack_records"])
             ])
+        for lid in meta.get("residual_learners", []):
+            learner = self._learners.get(lid)
+            if learner is not None:
+                learner.restore_residual(extras[f"residual__{lid}"])
         self.invalidate_wire_cache()
         self.journal.seek(int(meta.get("journal_cursor", 0)))
         return meta

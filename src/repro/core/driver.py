@@ -96,6 +96,10 @@ class FederationEnv:
     # (quantized-resident arena + fused dequant-into-aggregate reduce,
     # ~4x less device memory; fedavg-only, no secure — docs/ARENA.md).
     arena_dtype: str = "f32"
+    # How a "topk" upload lands: "densify" (scatter into the dense row —
+    # every store/rule keeps working) or "direct" (resident (n, k) sparse
+    # arena + masked scatter-accumulate; fedavg/staleness only).
+    sparse_mode: str = "densify"
     # EWMA decay for the per-learner seconds-per-step estimate (0 = legacy
     # last-sample behaviour; see core/scheduler.LearnerProfile).
     profile_decay: float = 0.5
@@ -141,13 +145,14 @@ class FederationEnv:
                     aggregation_rule=self.aggregation_rule,
                     trim_k=self.trim_k,
                     arena_dtype=self.arena_dtype,
+                    sparse_mode=self.sparse_mode,
                 ),
             )
         else:
             for field in (
                 "store_mode", "arena_shards", "upload_codec", "flat_uploads",
                 "wire_aware", "profile_decay", "prox_mu",
-                "aggregation_rule", "trim_k", "arena_dtype",
+                "aggregation_rule", "trim_k", "arena_dtype", "sparse_mode",
             ):
                 object.__setattr__(self, field, getattr(self.config, field))
 
@@ -232,6 +237,7 @@ class Driver:
             aggregation_rule=env.aggregation_rule,
             trim_k=env.trim_k,
             arena_dtype=env.arena_dtype,
+            sparse_mode=env.sparse_mode,
             journal_sink=cfg.journal_sink,
             journal_capacity=cfg.journal_capacity,
             checkpoint_every=cfg.checkpoint_every,

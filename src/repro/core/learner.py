@@ -97,6 +97,11 @@ class Learner:
         self._manifest = None
         self._upload_pad: int | None = None
         self._channel = None
+        # Error-feedback residual of the sparse (topk) uplink: the f32
+        # (padded_params,) carry of everything sparsification left behind.
+        # None until the first sparse upload; rides checkpoints via
+        # export_residual/restore_residual.
+        self._residual: jax.Array | None = None
 
     # -- wire contract ------------------------------------------------------
     def accept_manifest(
@@ -153,11 +158,73 @@ class Learner:
             step = self._step_cache[0.0] = self._build_step(self._loss_fn)
         return step
 
+    def _topk_codec(self) -> Any | None:
+        """The channel's topk upload codec, or None when the uplink is dense."""
+        codec = getattr(self._channel, "upload_codec", None)
+        return codec if getattr(codec, "codec_id", None) == "topk" else None
+
+    def _upload_sparse(
+        self, trained: jax.Array, base: jax.Array, codec: Any, task: TrainTask
+    ) -> Any:
+        """Error-feedback sparse uplink: accumulate, send top-k, carry the rest.
+
+        ``acc = residual + (trained - base)`` is the full un-sent update
+        mass; the codec ships its ``k`` largest-magnitude coordinates and
+        the residual keeps ``acc - sent`` — *exactly* zero at sent
+        coordinates for f32 values, the quantization error for int8-grouped
+        values (the subtraction uses the dequantized wire values via
+        ``unpack_coords``, so the carry sees what the controller sees).
+        """
+        from repro.kernels import topk as topk_kernels
+
+        acc = trained - base
+        if self._residual is not None:
+            acc = self._residual + acc
+        upload = self._channel.upload(
+            acc,
+            metadata={"learner_id": self.learner_id,
+                      "round_id": task.round_id},
+        )
+        idx, val = codec.unpack_coords(upload.payload, int(acc.shape[0]))
+        self._residual = topk_kernels.ef_residual(acc, idx, val)
+        telemetry = getattr(self._channel, "telemetry", None)
+        if telemetry is not None:
+            telemetry.gauge("learner.residual_norm").set(
+                float(jnp.linalg.norm(self._residual))
+            )
+        return upload
+
+    def export_residual(self) -> Any | None:
+        """Host copy of the error-feedback residual (checkpoint save).
+
+        None before the first sparse upload — a restored learner that never
+        uploaded starts from a zero carry either way.
+        """
+        if self._residual is None:
+            return None
+        import numpy as np
+
+        return np.asarray(jax.device_get(self._residual))
+
+    def restore_residual(self, buffer: Any | None) -> None:
+        """Reload a checkpointed error-feedback residual (restore half)."""
+        self._residual = (
+            None if buffer is None else jnp.asarray(buffer, jnp.float32)
+        )
+
     def fit(self, params: Any, task: TrainTask) -> LocalUpdate:
         """Run ``task.local_steps`` local optimization steps (paper T2-T3)."""
         step = self._make_step(task.prox_mu, params)
         opt_state = self._optimizer.init(params)
         losses = []
+        topk_codec = self._topk_codec()
+        base = None
+        if topk_codec is not None and self._manifest is not None:
+            # Sparse uplink ships *deltas*: snapshot the received model at
+            # the wire width so the update is computed against exactly what
+            # the controller broadcast (async-safe — the controller no
+            # longer holds every learner's base version).
+            base = packing.pack_numeric(params, pad_to=self._upload_pad)
         t0 = time.perf_counter()
         for _ in range(task.local_steps):
             batch = self._data_fn(task.batch_size)
@@ -174,11 +241,16 @@ class Learner:
                 # Measured uplink: the packed row crosses the channel as a
                 # codec-encoded wire envelope; the in-process buffer is
                 # dropped so arrival reads exactly what the wire carried.
-                upload = self._channel.upload(
-                    buffer,
-                    metadata={"learner_id": self.learner_id,
-                              "round_id": task.round_id},
-                )
+                if base is not None:
+                    upload = self._upload_sparse(
+                        buffer, base, topk_codec, task
+                    )
+                else:
+                    upload = self._channel.upload(
+                        buffer,
+                        metadata={"learner_id": self.learner_id,
+                                  "round_id": task.round_id},
+                    )
                 buffer = None
         return LocalUpdate(
             learner_id=self.learner_id,

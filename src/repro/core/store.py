@@ -307,12 +307,14 @@ class ArenaStore:
         telemetry: Telemetry | None = None,
         arena_dtype: str = "f32",
         qgroup: int | None = None,
+        sparse_k: int | None = None,
     ):
         if num_params < 1:
             raise ValueError("num_params must be >= 1")
-        if arena_dtype not in ("f32", "int8"):
+        if arena_dtype not in ("f32", "int8", "topk"):
             raise ValueError(
-                f"arena_dtype must be 'f32' or 'int8', got {arena_dtype!r}"
+                f"arena_dtype must be 'f32', 'int8' or 'topk', "
+                f"got {arena_dtype!r}"
             )
         self.num_params = int(num_params)
         self.dtype = jnp.dtype(dtype)
@@ -357,13 +359,32 @@ class ArenaStore:
         else:
             self.qgroup = int(qgroup) if qgroup else None
             self.buffer_dtype = self.dtype
+        if arena_dtype == "topk":
+            if sparse_k is None:
+                raise ValueError("arena_dtype='topk' needs sparse_k")
+            # Rows hold (sparse_k,) coordinate streams against the padded
+            # row width, so k clamps to it exactly like the wire codec.
+            self.sparse_k = max(1, min(int(sparse_k), self.padded_params))
+        else:
+            self.sparse_k = None
         n = max(1, int(n_max))
         self._rows: dict[str, int] = {}
         self._valid = np.zeros((n,), bool)
         self._weights_host = np.zeros((n,), np.float32)
         self._versions_host = np.zeros((n,), np.float32)
-        self.buffer = self._zeros((n, self.padded_params), self.buffer_dtype,
-                                  self.buffer_sharding)
+        if arena_dtype == "topk":
+            # Sparse arena: (n, k) f32 values + (n, k) int32 indices, both
+            # deliberately **unsharded** even under a mesh — N·k is small by
+            # construction and the sharded scatter-accumulate consumes them
+            # replicated (only its (P,) output is column-sharded).
+            self.buffer = jnp.zeros((n, self.sparse_k), jnp.float32)
+            self.indices = jnp.zeros((n, self.sparse_k), jnp.int32)
+        else:
+            self.buffer = self._zeros(
+                (n, self.padded_params), self.buffer_dtype,
+                self.buffer_sharding,
+            )
+            self.indices = None
         # Per-row per-group f32 dequantization scales of the int8 arena: the
         # quantized row is column-aligned with its scales, so both shard with
         # the same column specs (the scale width padded_params/qgroup stays a
@@ -422,7 +443,13 @@ class ArenaStore:
         return self.padded_params // self.n_shards
 
     def _grow(self, n_new: int) -> None:
-        self.buffer = self._grower(self.buffer, n_new=n_new)
+        if self.arena_dtype == "topk":
+            # The sparse arrays are unsharded regardless of mesh, so they
+            # grow through the plain jitted grower.
+            self.buffer = _grown(self.buffer, n_new)
+            self.indices = _grown(self.indices, n_new)
+        else:
+            self.buffer = self._grower(self.buffer, n_new=n_new)
         if self.scales is not None:
             self.scales = self._grower(self.scales, n_new=n_new)
         self.weights = _grown(self.weights, n_new)
@@ -469,6 +496,11 @@ class ArenaStore:
         The (donated) row write is the entire MarkTaskCompleted store cost:
         O(P) device bytes, zero allocation, no host copy.  Returns the row.
         """
+        if self.arena_dtype == "topk":
+            raise ValueError(
+                "a sparse (arena_dtype='topk') arena has no dense rows; "
+                "use write_sparse"
+            )
         buf = jnp.ravel(jnp.asarray(buffer)).astype(self.dtype)
         if buf.shape[0] not in (self.num_params, self.padded_params):
             raise ValueError(
@@ -567,6 +599,52 @@ class ArenaStore:
             self._c_bytes.add(int(q.nbytes) + int(scales.nbytes))
             return row
 
+    def write_sparse(
+        self, learner_id: str, indices: jax.Array, values: jax.Array,
+        weight: float, version: float = 0.0,
+    ) -> int:
+        """Land a sparse ``(indices, values)`` upload in its arena row.
+
+        The direct sparse ingest hot path: a topk upload decoded by
+        ``Channel.recv_upload_sparse`` writes straight into the ``(n, k)``
+        index/value arena — two donated row writes, no densification, same
+        metadata bookkeeping as :meth:`write`.  Rows hold *deltas* against
+        the model version recorded per row.  Only valid on an
+        ``arena_dtype="topk"`` arena.
+        """
+        if self.arena_dtype != "topk":
+            raise ValueError(
+                "write_sparse requires ArenaStore(arena_dtype='topk'); "
+                f"this arena is {self.arena_dtype!r}"
+            )
+        idx = jnp.ravel(jnp.asarray(indices))
+        val = jnp.ravel(jnp.asarray(values)).astype(jnp.float32)
+        if idx.dtype != jnp.int32:
+            raise ValueError(f"sparse indices must be int32, got {idx.dtype}")
+        if idx.shape != (self.sparse_k,) or val.shape != (self.sparse_k,):
+            raise ValueError(
+                f"sparse row holds {idx.shape[0]} indices / "
+                f"{val.shape[0]} values; this arena wants "
+                f"({self.sparse_k},) each"
+            )
+        with self.lock:
+            row = self._assign_row(learner_id)
+            # The same jitted writer serves both arrays: jit re-specializes
+            # per (shape, dtype), so indices and values each get a cached
+            # executable.
+            self.indices = _write_row(self.indices, jnp.int32(row), idx)
+            self.buffer = _write_row(self.buffer, jnp.int32(row), val)
+            self.weights, self.versions, self.mask = _set_row_meta(
+                self.weights, self.versions, self.mask,
+                jnp.int32(row), jnp.float32(weight), jnp.float32(version),
+            )
+            self._valid[row] = True
+            self._weights_host[row] = weight
+            self._versions_host[row] = version
+            self._c_writes.add(1)
+            self._c_bytes.add(int(idx.nbytes) + int(val.nbytes))
+            return row
+
     def invalidate(self, learner_id: str) -> None:
         """Drop a learner's contribution (row is kept for reuse)."""
         with self.lock:
@@ -614,6 +692,13 @@ class ArenaStore:
                 s = self.scales[row]
                 x = (q.astype(jnp.float32)
                      .reshape(-1, self.qgroup) * s[:, None]).reshape(-1)
+                return x[: self.num_params]
+            if self.arena_dtype == "topk":
+                from repro.kernels import topk as topk_kernels
+
+                x = topk_kernels.densify(
+                    self.indices[row], self.buffer[row], self.padded_params
+                )
                 return x[: self.num_params]
             return self.buffer[row, : self.num_params]
 
@@ -674,11 +759,13 @@ class ArenaStore:
         Also published as the ``store.arena.bytes_resident`` gauge after
         every capacity change — the observable half of the int8 arena's ~4x
         resident shrink (int8 values + f32 scales ≈ ``(1 + 4/group)``
-        bytes/param vs 4 for f32).
+        bytes/param vs 4 for f32) and of the sparse arena's k-proportional
+        footprint (8 bytes per kept coordinate instead of 4 per parameter).
         """
         scales = self.scales.nbytes if self.scales is not None else 0
+        indices = self.indices.nbytes if self.indices is not None else 0
         return int(
-            self.buffer.nbytes + scales + self.weights.nbytes
+            self.buffer.nbytes + scales + indices + self.weights.nbytes
             + self.versions.nbytes + self.mask.nbytes
         )
 
@@ -704,6 +791,8 @@ class ArenaStore:
             }
             if self.scales is not None:
                 state["scales"] = np.asarray(jax.device_get(self.scales))
+            if self.indices is not None:
+                state["indices"] = np.asarray(jax.device_get(self.indices))
             return state
 
     def restore_state(
@@ -714,6 +803,7 @@ class ArenaStore:
         valid: np.ndarray,
         rows: dict[str, int],
         scales: np.ndarray | None = None,
+        indices: np.ndarray | None = None,
     ) -> None:
         """Reload a checkpointed arena state (inverse of :meth:`export_state`).
 
@@ -721,17 +811,32 @@ class ArenaStore:
         and row alignment (``padded_params`` must match).  Capacity adapts:
         the restored state is padded (or the arena grown) to cover both the
         saved rows and any already-assigned ones.  A quantized arena
-        requires ``scales`` (the checkpointed scale matrix) — restoring an
-        int8 checkpoint into an f32 arena, or vice versa, is a layout
-        mismatch the caller surfaces via the checkpoint fingerprint.
+        requires ``scales`` (the checkpointed scale matrix); a sparse arena
+        requires ``indices`` and the same ``sparse_k`` — restoring across
+        arena layouts is a mismatch the caller surfaces via the checkpoint
+        fingerprint.
         """
         host_dt = np.int8 if self.arena_dtype == "int8" else np.float32
+        row_width = (
+            self.sparse_k if self.arena_dtype == "topk" else self.padded_params
+        )
         buffer = np.asarray(buffer, host_dt)
-        if buffer.ndim != 2 or buffer.shape[1] != self.padded_params:
+        if buffer.ndim != 2 or buffer.shape[1] != row_width:
             raise ValueError(
                 f"checkpointed arena rows hold {buffer.shape[-1]} params, "
-                f"this arena holds {self.padded_params}"
+                f"this arena holds {row_width}"
             )
+        if self.arena_dtype == "topk":
+            if indices is None:
+                raise ValueError(
+                    "restoring a sparse arena needs the checkpointed indices"
+                )
+            indices = np.asarray(indices, np.int32)
+            if indices.shape != buffer.shape:
+                raise ValueError(
+                    f"checkpointed sparse indices have shape {indices.shape}, "
+                    f"values have {buffer.shape}"
+                )
         if self.arena_dtype == "int8":
             if scales is None:
                 raise ValueError(
@@ -746,7 +851,7 @@ class ArenaStore:
                 )
         with self.lock:
             n = max(self.n_max, buffer.shape[0], len(rows))
-            full = np.zeros((n, self.padded_params), host_dt)
+            full = np.zeros((n, row_width), host_dt)
             full[: buffer.shape[0]] = buffer
             self._valid = np.zeros((n,), bool)
             self._valid[: len(valid)] = np.asarray(valid, bool)
@@ -757,10 +862,14 @@ class ArenaStore:
                 versions, np.float32
             )
             self._rows = {str(k): int(v) for k, v in rows.items()}
-            if self.buffer_sharding is not None:
+            if self.buffer_sharding is not None and self.arena_dtype != "topk":
                 self.buffer = jax.device_put(full, self.buffer_sharding)
             else:
                 self.buffer = jnp.asarray(full)
+            if self.arena_dtype == "topk":
+                full_i = np.zeros((n, row_width), np.int32)
+                full_i[: indices.shape[0]] = indices
+                self.indices = jnp.asarray(full_i)
             if self.arena_dtype == "int8":
                 full_s = np.zeros(
                     (n, self.padded_params // self.qgroup), np.float32

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import threading
 import time
 from typing import Any
@@ -53,7 +54,7 @@ from repro.core.metrics import Telemetry
 __all__ = [
     "ChannelStats", "Channel", "Envelope", "Broadcast",
     "UploadEnvelope", "RawUploadCodec", "Int8UploadCodec",
-    "UPLOAD_CODECS", "get_upload_codec",
+    "TopkUploadCodec", "UPLOAD_CODECS", "get_upload_codec",
 ]
 
 
@@ -61,8 +62,8 @@ __all__ = [
 _STAT_FIELDS = (
     "messages", "bytes_moved", "serializations", "serialize_s",
     "deserialize_s", "virtual_wire_s", "upload_messages", "upload_bytes",
-    "upload_serializations", "upload_serialize_s", "upload_deserialize_s",
-    "upload_virtual_wire_s",
+    "upload_meta_bytes", "upload_serializations", "upload_serialize_s",
+    "upload_deserialize_s", "upload_virtual_wire_s",
 )
 
 
@@ -82,7 +83,12 @@ class ChannelStats:
     work (the same broadcast counts 1).
 
     Uplink (learners → controller): ``upload_messages``/``upload_bytes``/
-    ``upload_virtual_wire_s`` count one per :meth:`Channel.upload`;
+    ``upload_virtual_wire_s`` count one per :meth:`Channel.upload`
+    (``upload_bytes`` is the codec *payload*; the envelope's serialized
+    header — codec id, element count, metadata, codec params — is counted
+    separately in ``upload_meta_bytes``, and virtual wire time covers
+    both, so the accounting is envelope-exact even for variable-length
+    sparse payloads);
     ``upload_serializations``/``upload_serialize_s`` count the codec encode
     work and ``upload_deserialize_s`` the controller-side decode.  Every
     upload is its own serialization (no fan-in sharing), so
@@ -393,7 +399,195 @@ class Int8UploadCodec:
         return _decode_quant_resident(dev, n_q, n_scales, out_params, self.group)
 
 
-UPLOAD_CODECS = {"raw": RawUploadCodec, "int8": Int8UploadCodec}
+@functools.partial(
+    jax.jit, static_argnames=("k_eff", "n_scales", "group", "value_dtype")
+)
+def _split_topk_wire(wire, k_eff, n_scales, group, value_dtype):
+    """Device-side split of one topk payload into (idx int32, val f32, norm).
+
+    One cached executable per wire layout: bitcast the int32 index block,
+    bitcast (f32 values) or bitcast + dequantize (int8-grouped values) the
+    value block, and fuse the sparse L2 norm.  Top-k indices are unique
+    within one upload, so ``‖val‖₂`` **is** the L2 norm of the densified
+    row — the admission screen reads the same scalar the dense codecs
+    produce, without ever materializing the ``(P,)`` row.
+    """
+    from repro.kernels import topk as topk_kernels
+
+    idx = jax.lax.bitcast_convert_type(
+        jax.lax.slice(wire, (0,), (4 * k_eff,)).reshape(k_eff, 4), jnp.int32
+    ).reshape(k_eff)
+    if value_dtype == "f32":
+        vb = jax.lax.slice(wire, (4 * k_eff,), (8 * k_eff,))
+        val = jax.lax.bitcast_convert_type(
+            vb.reshape(k_eff, 4), jnp.float32
+        ).reshape(k_eff)
+    else:
+        q = jax.lax.bitcast_convert_type(
+            jax.lax.slice(wire, (4 * k_eff,), (5 * k_eff,)), jnp.int8
+        )
+        sb = jax.lax.slice(wire, (5 * k_eff,), (5 * k_eff + 4 * n_scales,))
+        scales = jax.lax.bitcast_convert_type(
+            sb.reshape(n_scales, 4), jnp.float32
+        ).reshape(n_scales)
+        val = topk_kernels.dequantize_values(q, scales, group)
+    return idx, val, jnp.linalg.norm(val)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_eff", "n_scales", "group", "value_dtype",
+                     "num_elements"),
+)
+def _topk_decode_norm(wire, k_eff, n_scales, group, value_dtype, num_elements):
+    """One jitted program: split + densify into a ``(P,)`` delta row + norm.
+
+    The densify fallback for consumers that need a dense row (the
+    ``densify`` sparse mode, the stack store, median/trimmed_mean);
+    the direct sparse path never calls this.
+    """
+    idx, val, norm = _split_topk_wire(wire, k_eff, n_scales, group, value_dtype)
+    row = jnp.zeros((num_elements,), jnp.float32).at[idx].add(val)
+    return row, norm
+
+
+class TopkUploadCodec:
+    """Magnitude top-k upload codec (``kernels/topk``): the 10-100x regime.
+
+    Encodes the ``k`` largest-|x| coordinates of the learner's flat ``(P,)``
+    **delta** buffer as ``(indices:int32, values:f32|int8-grouped)`` — at
+    ``k = P/64`` with f32 values the payload is ``P/8`` bytes, 32x below
+    raw and ~8x below int8.  Lossy per upload by construction; the learner's
+    error-feedback residual (``core/learner.py``) carries the unsent mass
+    forward, so the scheme is unbiased over rounds.  ``k`` clamps per
+    buffer to ``[1, P]`` (tiny layers ship everything they have) while the
+    envelope's ``codec_params`` stay constant — ``k_eff`` is re-derived
+    from ``num_elements`` on the decode side, so variable-length payloads
+    need no extra wire state.
+
+    Unlike ``raw``/``int8`` this codec moves *deltas*, not parameters: the
+    decoded row is the learner's sparsified update against the model it
+    received, and the controller adds the aggregated delta onto the global
+    buffer at commit.
+    """
+
+    codec_id = "topk"
+
+    def __init__(
+        self, k: int = 64, value_dtype: str = "f32",
+        group: int | None = None,
+    ):
+        from repro.kernels import topk as topk_kernels
+
+        self.k = int(k)
+        if self.k < 1:
+            raise ValueError(f"topk codec needs k >= 1, got {k!r}")
+        if value_dtype not in topk_kernels.VALUE_DTYPES:
+            raise ValueError(
+                f"value_dtype must be one of {topk_kernels.VALUE_DTYPES}, "
+                f"got {value_dtype!r}"
+            )
+        self.value_dtype = str(value_dtype)
+        self.group = int(group or topk_kernels.DEFAULT_VALUE_GROUP)
+        if self.group < 1:
+            raise ValueError(f"topk codec needs group >= 1, got {group!r}")
+
+    def wire_params(self) -> dict:
+        """Codec parameters the receiver needs to derive the wire layout."""
+        return {
+            "k": self.k, "value_dtype": self.value_dtype, "group": self.group,
+        }
+
+    def wire_nbytes(self, num_elements: int) -> int:
+        """Modeled wire payload size: int32 indices + (f32|int8+scale) values."""
+        from repro.kernels import topk as topk_kernels
+
+        return topk_kernels.wire_layout_topk(
+            int(num_elements), self.k, self.value_dtype, self.group
+        )[2]
+
+    def encode(self, buffer: Any) -> np.ndarray:
+        """Select top-k by magnitude and pack ``(indices, values)`` bytes."""
+        from repro.kernels import topk as topk_kernels
+
+        flat = jnp.asarray(buffer, jnp.float32).reshape(-1)
+        k_eff = topk_kernels.effective_k(int(flat.shape[0]), self.k)
+        idx, val = topk_kernels.topk_select(flat, k_eff)
+        parts = [np.asarray(idx).view(np.uint8).reshape(-1)]
+        if self.value_dtype == "f32":
+            parts.append(np.asarray(val).view(np.uint8).reshape(-1))
+        else:
+            q, scales = topk_kernels.quantize_values(val, self.group)
+            parts.append(np.asarray(q).view(np.uint8).reshape(-1))
+            parts.append(np.asarray(scales).view(np.uint8).reshape(-1))
+        return np.concatenate(parts)
+
+    def _checked_layout(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[int, int]:
+        """Validate payload size against the layout; return (k_eff, n_scales)."""
+        from repro.kernels import topk as topk_kernels
+
+        k_eff, n_scales, nbytes = topk_kernels.wire_layout_topk(
+            int(num_elements), self.k, self.value_dtype, self.group
+        )
+        if int(payload.size) != nbytes:
+            raise ValueError(
+                f"topk payload holds {int(payload.size)} bytes, expected "
+                f"{nbytes} for {num_elements} elements at k={self.k}"
+            )
+        return k_eff, n_scales
+
+    def unpack_coords(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Wire bytes → ``(indices int32, values f32)`` device pair.
+
+        The learner-side half of the error-feedback subtraction: values
+        come back *dequantized*, i.e. exactly what the controller will
+        see, so ``residual -= sent`` carries the quantization error too.
+        """
+        k_eff, n_scales = self._checked_layout(payload, num_elements)
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        idx, val, _ = _split_topk_wire(
+            dev, k_eff, n_scales, self.group, self.value_dtype
+        )
+        return idx, val
+
+    def decode(self, payload: np.ndarray, num_elements: int) -> jax.Array:
+        """Densify a sparse payload into the f32 ``(P,)`` delta row."""
+        return self.decode_with_norm(payload, num_elements)[0]
+
+    def decode_with_norm(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Densify + L2 norm in one jitted device program (no host sync)."""
+        k_eff, n_scales = self._checked_layout(payload, num_elements)
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        return _topk_decode_norm(
+            dev, k_eff, n_scales, self.group, self.value_dtype,
+            int(num_elements),
+        )
+
+    def decode_sparse(
+        self, payload: np.ndarray, num_elements: int
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Decode to sparse ``(indices, values, norm)`` — no densification.
+
+        The direct sparse arena's ingest half: one ``device_put`` plus one
+        cached split program; the norm is the sparse L2 (== the dense
+        row's norm, indices being unique) as an unread device scalar.
+        """
+        k_eff, n_scales = self._checked_layout(payload, num_elements)
+        dev = jnp.asarray(np.ascontiguousarray(payload))
+        return _split_topk_wire(
+            dev, k_eff, n_scales, self.group, self.value_dtype
+        )
+
+
+UPLOAD_CODECS = {
+    "raw": RawUploadCodec, "int8": Int8UploadCodec, "topk": TopkUploadCodec,
+}
 
 
 def _codec_params(codec: Any) -> dict:
@@ -448,6 +642,31 @@ class UploadEnvelope:
     num_elements: int
     metadata: dict
     codec_params: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def meta_nbytes(self) -> int:
+        """Serialized size of the envelope header (everything but payload).
+
+        Canonical JSON (sorted keys, no whitespace) over the codec id,
+        element count, metadata and codec params — the bytes a real RPC
+        framing would spend on the envelope around the payload.  Counted
+        in ``channel.upload_meta_bytes`` so uplink accounting reconciles
+        envelope-exactly even when payload sizes vary per upload.
+        """
+        return len(json.dumps(
+            {
+                "codec": self.codec,
+                "num_elements": int(self.num_elements),
+                "metadata": self.metadata,
+                "codec_params": self.codec_params,
+            },
+            sort_keys=True, separators=(",", ":"), default=str,
+        ).encode("utf-8"))
+
+    @property
+    def wire_nbytes(self) -> int:
+        """Total uplink bytes this envelope occupies: payload + header."""
+        return int(self.payload.nbytes) + self.meta_nbytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -666,9 +885,13 @@ class Channel:
 
         The buffer is encoded through the channel's upload codec (or an
         explicit ``codec=`` override) into a wire payload; encode time is
-        accounted as upload serialization work and the payload's bytes and
+        accounted as upload serialization work and the envelope's bytes and
         virtual wire time are charged per send, under the stats lock (the
         async protocol uploads concurrently from executor threads).
+        Accounting is **envelope-exact**: ``upload_bytes`` counts this
+        payload's actual size (variable-length codecs like ``topk`` differ
+        per upload when k clamps at tiny buffers) and ``upload_meta_bytes``
+        the serialized envelope header; virtual wire time covers both.
         """
         c = self.upload_codec if codec is None else get_upload_codec(codec)
         n = int(np.shape(buffer)[0])
@@ -676,19 +899,24 @@ class Channel:
         payload = c.encode(buffer)
         dt = time.perf_counter() - t0
         payload.flags.writeable = False  # wire bytes are immutable
+        envelope = UploadEnvelope(
+            codec=c.codec_id, payload=payload, num_elements=n,
+            metadata=dict(metadata or {}), codec_params=_codec_params(c),
+        )
         nbytes = int(payload.nbytes)
+        meta_nbytes = envelope.meta_nbytes
         with self._stats_lock:
             self._c["upload_serializations"].add(1)
             self._c["upload_serialize_s"].add(dt)
             self._c["upload_messages"].add(1)
             self._c["upload_bytes"].add(nbytes)
+            self._c["upload_meta_bytes"].add(meta_nbytes)
             self._c["upload_virtual_wire_s"].add(
-                self._wire_time(nbytes, (metadata or {}).get("learner_id"))
+                self._wire_time(
+                    nbytes + meta_nbytes, (metadata or {}).get("learner_id")
+                )
             )
-        return UploadEnvelope(
-            codec=c.codec_id, payload=payload, num_elements=n,
-            metadata=dict(metadata or {}), codec_params=_codec_params(c),
-        )
+        return envelope
 
     def recv_upload(
         self, envelope: UploadEnvelope, with_norm: bool = False
@@ -751,3 +979,31 @@ class Channel:
         with self._stats_lock:
             self._c["upload_deserialize_s"].add(dt)
         return q, scales, norm
+
+    def recv_upload_sparse(
+        self, envelope: UploadEnvelope
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Decode a topk upload in sparse form — densification never happens.
+
+        Returns ``(indices int32 (k,), values f32 (k,), norm)`` — the
+        direct sparse arena's ingest half: one ``device_put`` plus one
+        cached split program, with the admission norm fused as a device
+        scalar (top-k indices are unique, so the sparse L2 equals the
+        dense row's norm — the same single-host-readback contract as
+        :meth:`recv_upload` with ``with_norm=True``).  Only valid for
+        envelopes whose codec declares ``decode_sparse``; accounted as
+        upload deserialization work like :meth:`recv_upload`.
+        """
+        c = self._resolve_upload_codec(envelope)
+        decode_s = getattr(c, "decode_sparse", None)
+        if decode_s is None:
+            raise ValueError(
+                f"codec {envelope.codec!r} cannot land sparse rows; "
+                "use recv_upload for dense decode"
+            )
+        t0 = time.perf_counter()
+        idx, val, norm = decode_s(envelope.payload, envelope.num_elements)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self._c["upload_deserialize_s"].add(dt)
+        return idx, val, norm

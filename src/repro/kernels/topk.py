@@ -1,0 +1,143 @@
+"""Top-k magnitude sparsification for the sparse uplink (error feedback).
+
+Beyond-paper optimization: int8 quantization (``kernels/quantize.py``)
+bought ~4x on the wire; magnitude top-k with error feedback opens the
+10-100x regime (the sparsification family surveyed in arXiv:2104.14362).
+The learner accumulates its full update into an f32 residual, ships only
+the ``k`` largest-magnitude coordinates as ``(indices:int32, values)``
+pairs, and subtracts what it sent — unsent mass is *carried*, not lost,
+so the scheme stays unbiased over rounds.
+
+Selection uses ``jax.lax.top_k`` on ``|x|`` — the XLA-native top-k with a
+deterministic lowest-index tie-break, which lowers to the TPU sort unit
+directly; a hand-rolled Pallas tournament would re-implement exactly that
+lowering.  The pack/unpack halves are pure device-side ``jnp`` programs
+(one fused jit each), so the CPU fallback is the same program under the
+XLA CPU backend — no interpret-mode shim needed.
+
+Values ship either as f32 (8 bytes/coordinate with the int32 index) or as
+int8 with per-group f32 scales (~5 bytes/coordinate), the same symmetric
+``amax/127`` scheme as ``kernels/quantize.py`` but over the dense *sent
+value* vector (length ``k``), not the parameter axis.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "topk_select", "densify", "ef_residual",
+    "quantize_values", "dequantize_values",
+    "effective_k", "wire_layout_topk",
+    "DEFAULT_VALUE_GROUP", "VALUE_DTYPES",
+]
+
+DEFAULT_VALUE_GROUP = 64
+VALUE_DTYPES = ("f32", "int8")
+
+
+def effective_k(n: int, k: int) -> int:
+    """The per-buffer k actually sent: ``k`` clamped to ``[1, n]``.
+
+    Tiny buffers (bias-only layers, toy tests) clamp down; the clamp is
+    derived from ``n`` alone on both codec halves, so the envelope's
+    ``codec_params`` stay constant across uploads (the codec-identity
+    check in the controller compares them structurally).
+    """
+    return max(1, min(int(k), int(n)))
+
+
+def wire_layout_topk(
+    n: int, k: int, value_dtype: str = "f32",
+    group: int = DEFAULT_VALUE_GROUP,
+) -> tuple[int, int, int]:
+    """Wire layout of one sparse ``(n,)`` upload.
+
+    Returns ``(k_eff, n_scales, payload_bytes)``: the clamped coordinate
+    count, the number of f32 value-group scales shipped (0 for f32
+    values), and the total payload bytes — ``4*k_eff`` int32 indices
+    followed by either ``4*k_eff`` f32 values or ``k_eff`` int8 values
+    plus ``4*n_scales`` scale bytes.
+    """
+    k_eff = effective_k(n, k)
+    if value_dtype == "f32":
+        return k_eff, 0, 8 * k_eff
+    if value_dtype != "int8":
+        raise ValueError(
+            f"value_dtype must be one of {VALUE_DTYPES}, got {value_dtype!r}"
+        )
+    n_scales = -(-k_eff // group)
+    return k_eff, n_scales, 5 * k_eff + 4 * n_scales
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_select(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """The ``k`` largest-|x| coordinates of a flat buffer.
+
+    Returns ``(indices:int32, values)`` with values carrying their sign
+    (gathered from ``x``, not from ``|x|``).  ``jax.lax.top_k`` breaks
+    magnitude ties toward the lowest index, so selection is deterministic
+    — the conformance references replay this exact kernel rather than an
+    f64 re-selection that could flip near-ties.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    idx = idx.astype(jnp.int32)
+    return idx, x[idx]
+
+
+@partial(jax.jit, static_argnames=("width",))
+def densify(indices: jax.Array, values: jax.Array, width: int) -> jax.Array:
+    """Scatter one sparse ``(idx, val)`` stream into a dense f32 row."""
+    return (
+        jnp.zeros((width,), jnp.float32)
+        .at[indices]
+        .add(values.astype(jnp.float32))
+    )
+
+
+@jax.jit
+def ef_residual(
+    acc: jax.Array, indices: jax.Array, values: jax.Array
+) -> jax.Array:
+    """Error-feedback carry: subtract the sent coordinates from ``acc``.
+
+    With f32 values the sent coordinates zero out exactly (``x - x``);
+    with quantized values the residual keeps the quantization error, so
+    error feedback absorbs both the sparsification *and* the value-dtype
+    loss.
+    """
+    return acc.at[indices].add(-values.astype(acc.dtype))
+
+
+@partial(jax.jit, static_argnames=("group",))
+def quantize_values(
+    values: jax.Array, group: int = DEFAULT_VALUE_GROUP
+) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization of a dense value vector.
+
+    Groups of ``group`` values share one f32 scale ``max|v|/127`` (1.0
+    for all-zero groups, so dequantization never divides by zero).
+    Returns ``(q:int8 (k,), scales:f32 (ceil(k/group),))``.
+    """
+    k = values.shape[0]
+    n_scales = -(-k // group)
+    v = jnp.pad(values.astype(jnp.float32), (0, n_scales * group - k))
+    v = v.reshape(n_scales, group)
+    amax = jnp.max(jnp.abs(v), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(v / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:k], scales
+
+
+@partial(jax.jit, static_argnames=("group",))
+def dequantize_values(
+    q: jax.Array, scales: jax.Array, group: int = DEFAULT_VALUE_GROUP
+) -> jax.Array:
+    """Inverse of :func:`quantize_values`: ``q * scale`` per group."""
+    k = q.shape[0]
+    n_scales = scales.shape[0]
+    v = jnp.pad(q.astype(jnp.float32), (0, n_scales * group - k))
+    return (v.reshape(n_scales, group) * scales[:, None]).reshape(-1)[:k]

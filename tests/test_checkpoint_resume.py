@@ -432,3 +432,81 @@ def test_int8_arena_kill_and_resume_bit_identical(codec, tmp_path):
     got = np.asarray(resumed.global_buffer)
     resumed.shutdown()
     np.testing.assert_array_equal(got, want)  # bit-identical, not allclose
+
+
+_TOPK_GRID = [
+    ("sync", "direct", 3),
+    ("sync", "densify", 3),
+    ("async", "direct", 1),
+    ("buffered_async", "direct", 3),
+]
+
+
+@pytest.mark.parametrize("proto,sparse_mode,n", _TOPK_GRID,
+                         ids=[f"{p}-{m}" for p, m, _ in _TOPK_GRID])
+def test_topk_kill_and_resume_bit_identical(proto, sparse_mode, n, tmp_path):
+    """The sparse-uplink rows of the kill-and-resume grid: the learner-side
+    error-feedback residuals ride the checkpoint bit-identically (dropping
+    them would re-send carried mass and diverge round 3), the sparse arena
+    checkpoints its indices alongside the values, and the resumed run is
+    bit-identical to the uninterrupted one."""
+    from repro.core.transport import TopkUploadCodec
+
+    kw = dict(upload_codec=TopkUploadCodec(k=2), sparse_mode=sparse_mode,
+              **_extra(proto))
+    golden = _build(proto, "arena", n, **kw)
+    _run(golden, proto, 4)
+    want = np.asarray(golden.global_buffer)
+    golden.shutdown()
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build(proto, "arena", n, checkpoint_dir=ckpt,
+                   checkpoint_every=2, **kw)
+    _run(first, proto, 2)
+    res_saved = {lid: l.export_residual()
+                 for lid, l in first._learners.items()}
+    assert any(r is not None for r in res_saved.values())
+    if sparse_mode == "direct":
+        saved_idx = np.asarray(first.arena.indices)
+        saved_val = np.asarray(first.arena.buffer)
+    first.shutdown()
+
+    resumed = _build(proto, "arena", n, **kw)
+    meta = resumed.restore(ckpt)
+    assert meta["sparse_mode"] == sparse_mode
+    # the error-feedback carries round-trip bit-exactly into fresh learners
+    for lid, learner in resumed._learners.items():
+        saved = res_saved[lid]
+        got = learner.export_residual()
+        assert (saved is None) == (got is None)
+        if saved is not None:
+            np.testing.assert_array_equal(got, saved)
+    if sparse_mode == "direct":
+        np.testing.assert_array_equal(
+            np.asarray(resumed.arena.indices), saved_idx)
+        np.testing.assert_array_equal(
+            np.asarray(resumed.arena.buffer), saved_val)
+        assert resumed.arena.indices.dtype == jnp.int32
+    _run(resumed, proto, 2)
+    got = np.asarray(resumed.global_buffer)
+    resumed.shutdown()
+    np.testing.assert_array_equal(got, want)  # bit-identical, not allclose
+
+
+def test_topk_restore_refuses_sparse_mode_mismatch(tmp_path):
+    """A direct-mode checkpoint resumed on a densify controller (or vice
+    versa) is a different resident layout — refused, not coerced."""
+    from repro.core.transport import TopkUploadCodec
+
+    ckpt = str(tmp_path / "ckpt")
+    first = _build("sync", "arena", 3, checkpoint_dir=ckpt,
+                   checkpoint_every=2, upload_codec=TopkUploadCodec(k=2),
+                   sparse_mode="direct")
+    _run(first, "sync", 2)
+    first.shutdown()
+
+    wrong = _build("sync", "arena", 3, upload_codec=TopkUploadCodec(k=2),
+                   sparse_mode="densify")
+    with pytest.raises(ValueError, match="sparse_mode"):
+        wrong.restore(ckpt)
+    wrong.shutdown()

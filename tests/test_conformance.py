@@ -698,3 +698,291 @@ def test_conformance_matrix_sharded_arena():
     )
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
     assert "SHARDED-CONFORMANCE-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# sparse (top-k) uplink with error feedback
+# ---------------------------------------------------------------------------
+
+# The replay reference re-runs the learner-side error feedback with the SAME
+# codec (the f32 top-k selection kernel and, for int8 values, the same
+# grouped quantization) — an f64 re-selection could flip near-magnitude
+# ties — then densifies and reduces the sent deltas in f64 and folds them
+# onto the running global buffer, exactly the controller's delta-commit
+# contract.
+
+
+def _topk_reference(case, k, pad, value_dtype="f32"):
+    from repro.core.transport import TopkUploadCodec
+
+    codec = TopkUploadCodec(k=k, value_dtype=value_dtype)
+    proto = case["proto"]()
+    learners = [_make_learner(i) for i in range(case["n"])]
+    manifest = packing.build_manifest(_INIT)
+    gbuf = packing.pack_numeric(_INIT)
+    num_params = int(gbuf.shape[0])
+    params = packing.unpack_numeric(gbuf, manifest)
+    server = make_server_optimizer("fedavg")
+    state = server.init(gbuf)
+    width = pad if pad is not None else num_params
+    residuals = [np.zeros(width, np.float64) for _ in learners]
+    for r in range(case["rounds"] or case["updates"]):
+        task = proto.make_task(r, {})
+        base = np.asarray(
+            packing.pack_numeric(params, pad_to=pad), np.float64
+        )
+        ups = [l.fit(params, task) for l in learners]
+        ws = [float(u.num_examples) for u in ups]
+        sent = []
+        for i, u in enumerate(ups):
+            trained = np.asarray(
+                packing.pack_numeric(u.params, pad_to=pad), np.float64
+            )
+            acc = residuals[i] + (trained - base)
+            payload = codec.encode(jnp.asarray(acc, jnp.float32))
+            idx, val = codec.unpack_coords(payload, width)
+            idx, val = np.asarray(idx), np.asarray(val, np.float64)
+            dense = np.zeros(width, np.float64)
+            np.add.at(dense, idx, val)
+            residuals[i] = acc - dense
+            sent.append(dense)
+        w = np.asarray(ws, np.float64)
+        delta = (w[:, None] * np.stack(sent)).sum(0) / w.sum()
+        new = np.asarray(gbuf, np.float64) + delta[:num_params]
+        state, gbuf = server.apply(state, gbuf, jnp.asarray(new, jnp.float32))
+        params = packing.unpack_numeric(gbuf, manifest)
+    return np.asarray(params["w"])
+
+
+def _topk_federation(case, sparse_mode, store_mode="arena", k=2,
+                     value_dtype="f32"):
+    from repro.core.transport import TopkUploadCodec
+
+    ctrl = Controller(
+        protocol=case["proto"](), secure=case["secure"],
+        store_mode=store_mode,
+        upload_codec=TopkUploadCodec(k=k, value_dtype=value_dtype),
+        sparse_mode=sparse_mode,
+    )
+    ctrl.set_initial_model(_INIT)
+    for i in range(case["n"]):
+        ctrl.register_learner(_make_learner(i))
+    if case["updates"]:
+        ctrl.engine.run(total_updates=case["updates"])
+    else:
+        ctrl.engine.run(rounds=case["rounds"])
+    out = np.asarray(ctrl.global_params["w"])
+    pad = ctrl.arena.padded_params if ctrl.arena is not None else None
+    stats = ctrl.channel.stats
+    tele = ctrl.telemetry
+    expected_uploads = case["n"] * (case["rounds"] + case["updates"])
+    ctrl.shutdown()
+    return out, pad, stats, tele, expected_uploads
+
+
+@pytest.mark.parametrize("sparse_mode", ["direct", "densify"])
+@pytest.mark.parametrize("proto", ["sync", "semi_sync", "async",
+                                   "buffered_async"])
+def test_topk_arena_conformance(proto, sparse_mode):
+    """topk × fedavg protocols × sparse_mode vs the f64 EF replay: the
+    scatter-accumulate (direct) and the densified rows (densify) must land
+    within float-accumulation tolerance of the reference — and the direct
+    arm must prove it never densified (sparse counters fired)."""
+    case = _CASES[proto]
+    got, pad, stats, tele, expected = _topk_federation(
+        case, sparse_mode, "arena", k=2
+    )
+    ref = _topk_reference(case, k=2, pad=pad)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    assert stats.upload_messages == expected
+    assert stats.upload_bytes > 0 and stats.upload_meta_bytes > 0
+    if sparse_mode == "direct":
+        assert tele.value("engine.uploads.sparse_direct", 0) == expected
+        assert tele.value("controller.aggregations.sparse_scatter", 0) > 0
+    else:
+        assert tele.value("engine.uploads.sparse_direct", 0) == 0
+
+
+@pytest.mark.parametrize("proto", ["sync", "async"])
+def test_topk_stack_conformance(proto):
+    """topk × stack store (densify is implied): dense decoded deltas flow
+    the legacy path, aggregate, and fold onto the global buffer."""
+    case = _CASES[proto]
+    got, pad, stats, _, expected = _topk_federation(
+        case, "densify", "stack", k=2
+    )
+    ref = _topk_reference(case, k=2, pad=pad)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    assert stats.upload_messages == expected
+
+
+def test_topk_int8_values_conformance():
+    """topk with int8-grouped values: selection and grouped quantization in
+    the reference use the same codec, so parity stays tight — the EF carry
+    absorbs the quantization error instead of compounding it."""
+    case = _CASES["sync"]
+    got, pad, _, _, _ = _topk_federation(
+        case, "direct", "arena", k=2, value_dtype="int8"
+    )
+    ref = _topk_reference(case, k=2, pad=pad, value_dtype="int8")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_topk_direct_vs_densify_landing_parity():
+    """The SAME topk wire envelopes, ingested in the SAME order, aggregate
+    to the same model whether they land in the (n, k) sparse arena (masked
+    scatter-accumulate) or are densified into f32 rows first."""
+    from repro.core.learner import LocalUpdate
+    from repro.core.transport import TopkUploadCodec
+
+    ctrls = {
+        mode: Controller(
+            protocol=SyncProtocol(local_steps=2, batch_size=16),
+            store_mode="arena", upload_codec=TopkUploadCodec(k=16),
+            sparse_mode=mode,
+        )
+        for mode in ("direct", "densify")
+    }
+    for ctrl in ctrls.values():
+        ctrl.set_initial_model(_INIT)
+        for i in range(3):
+            ctrl.register_learner(_make_learner(i))
+    P = ctrls["direct"].arena.padded_params
+    rng = np.random.default_rng(0)
+    rows = [jnp.asarray(rng.normal(size=P), jnp.float32) for _ in range(3)]
+    for mode, ctrl in ctrls.items():
+        for i, row in enumerate(rows):
+            env = ctrl.channel.upload(
+                row, metadata={"learner_id": f"l{i}", "round_id": 0})
+            ctrl.ingest(LocalUpdate(
+                learner_id=f"l{i}", round_id=0, params=None, buffer=None,
+                num_examples=10 * (i + 1), metrics={},
+                seconds_per_step=0.01, upload=env,
+            ))
+        ctrl.aggregate_round([f"l{i}" for i in range(3)])
+    got_direct = np.asarray(ctrls["direct"].global_buffer)
+    got_densify = np.asarray(ctrls["densify"].global_buffer)
+    for ctrl in ctrls.values():
+        ctrl.shutdown()
+    np.testing.assert_allclose(got_direct, got_densify, rtol=1e-6, atol=1e-7)
+    assert ctrls["direct"].telemetry.value(
+        "engine.uploads.sparse_direct", 0) == 3
+    assert ctrls["direct"].telemetry.value(
+        "controller.aggregations.sparse_scatter", 0) == 1
+    # resident state: (n, k) values + indices, NOT n dense rows
+    arena = ctrls["direct"].arena
+    assert arena.buffer.shape == (arena.n_max, 16)
+    assert arena.indices.shape == (arena.n_max, 16)
+
+
+def test_topk_uplink_actually_compresses():
+    """Acceptance ratios at k = P/64: the sparse wire must carry >= 8x
+    fewer uplink bytes than raw and >= 2x fewer than int8 (P = 1024, the
+    padded arena row)."""
+    from repro.core.transport import TopkUploadCodec
+
+    case = _CASES["sync"]
+    _, raw_stats, n = _federation(case, "arena", "raw")
+    _, int8_stats, _ = _federation(case, "arena", "int8")
+    got, _, topk_stats, _, n_topk = _topk_federation(
+        case, "direct", "arena", k=1024 // 64
+    )
+    assert raw_stats.upload_messages == topk_stats.upload_messages == n
+    from repro.kernels.topk import wire_layout_topk
+
+    _, _, payload = wire_layout_topk(1024, 1024 // 64, "f32", 64)
+    assert topk_stats.upload_bytes == n * payload
+    assert raw_stats.upload_bytes / topk_stats.upload_bytes >= 8.0
+    assert int8_stats.upload_bytes / topk_stats.upload_bytes >= 2.0
+    assert np.isfinite(got).all()
+
+
+def test_topk_rejects_secure_and_robust_direct():
+    """Construction-time refusals: secure × topk, and direct × robust."""
+    from repro.core.transport import TopkUploadCodec
+
+    with pytest.raises(ValueError, match="secure"):
+        Controller(upload_codec=TopkUploadCodec(k=4), secure=True)
+    with pytest.raises(ValueError, match="fedavg"):
+        Controller(upload_codec=TopkUploadCodec(k=4), sparse_mode="direct",
+                   aggregation_rule="median")
+    with pytest.raises(ValueError, match="topk"):
+        Controller(upload_codec="raw", sparse_mode="direct")
+
+
+@pytest.mark.multidevice
+def test_topk_arena_conformance_sharded():
+    """The sparse grid on the mesh-sharded arena (8 forced host devices):
+    sync and async × direct/densify, the column-sharded scatter-accumulate
+    vs a single-device federation of the same workload."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    script = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (AsyncProtocol, Controller, Learner,
+                                SyncProtocol)
+        from repro.core.transport import TopkUploadCodec
+        from repro.launch.mesh import make_controller_mesh
+        from repro.optim import sgd
+
+        INIT = {"w": np.zeros((4, 1), np.float32)}
+
+        def make_learner(i):
+            def loss_fn(p, b):
+                return jnp.mean((b[0] @ p["w"] - b[1]) ** 2)
+            rng = np.random.default_rng(i)
+            X = rng.normal(size=(64, 4)).astype(np.float32)
+            y = X @ np.ones((4, 1), np.float32)
+            def data_fn(bs):
+                j = rng.integers(0, 64, size=bs)
+                return X[j], y[j]
+            return Learner(
+                f"l{i}", loss_fn, lambda p, b: {"eval_loss": loss_fn(p, b)},
+                data_fn, lambda: (X, y), sgd(0.05), 64,
+            )
+
+        CASES = {
+            "sync": (lambda: SyncProtocol(local_steps=2, batch_size=16),
+                     3, 2, 0),
+            "async": (lambda: AsyncProtocol(local_steps=2, batch_size=16),
+                      1, 0, 3),
+        }
+
+        def federation(name, sparse_mode, mesh):
+            proto_fn, n, rounds, updates = CASES[name]
+            ctrl = Controller(protocol=proto_fn(), arena_mesh=mesh,
+                              store_mode="arena",
+                              upload_codec=TopkUploadCodec(k=2),
+                              sparse_mode=sparse_mode)
+            ctrl.set_initial_model(INIT)
+            for i in range(n):
+                ctrl.register_learner(make_learner(i))
+            if updates:
+                ctrl.engine.run(total_updates=updates)
+            else:
+                ctrl.engine.run(rounds=rounds)
+            got = np.asarray(ctrl.global_params["w"])
+            scat = ctrl.telemetry.value(
+                "controller.aggregations.sparse_scatter", 0)
+            ctrl.shutdown()
+            return got, scat
+
+        assert jax.device_count() == 8
+        for name in CASES:
+            for mode in ("direct", "densify"):
+                got_sh, scat = federation(name, mode, make_controller_mesh())
+                got_1d, _ = federation(name, mode, None)
+                if mode == "direct":
+                    assert scat > 0, (name, mode)
+                np.testing.assert_allclose(got_sh, got_1d, rtol=1e-5,
+                                           atol=1e-6,
+                                           err_msg=f"{name}/{mode}")
+        print("SHARDED-TOPK-ARENA-OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "SHARDED-TOPK-ARENA-OK" in out.stdout

@@ -1,0 +1,193 @@
+"""Property tests for the sparse (top-k) uplink and scatter aggregation.
+
+Four invariants hold the sparse path together:
+
+* the ``topk`` codec round-trips: ``unpack_coords(encode(row))`` returns the
+  selected (index, value) stream, and ``decode`` densifies it losslessly for
+  f32 values / inside the per-group quantization bound for int8 values;
+* error feedback conserves mass — ``densify(sent) + residual == update``
+  coordinate-exactly in f32 (the residual is ``update - sent``, computed
+  against the *dequantized* wire values, so the carry sees exactly what the
+  controller sees);
+* top-k selection is permutation-equivariant: permuting the row permutes the
+  selected coordinate set with it (no positional bias in the selection);
+* the masked scatter-accumulate matches a float64 numpy densify-then-reduce
+  reference under random masks, weights and (unique-per-row) index streams.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/hypothesis_compat.py`` mini-engine.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.core import aggregation
+from repro.core.transport import Channel, TopkUploadCodec
+from repro.kernels import sparse_agg
+from repro.kernels import topk as topk_kernels
+
+
+@st.composite
+def _rows(draw):
+    """A random f32 row with its codec k (sometimes clamped: k >= n)."""
+    n = draw(st.integers(2, 257))
+    k = draw(st.integers(1, 300))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    row = rng.normal(size=(n,)).astype(np.float32) * 3.0
+    return row, k
+
+
+@given(_rows(), st.sampled_from(("f32", "int8")))
+@settings(max_examples=25, deadline=None)
+def test_topk_codec_roundtrips(row_k, value_dtype):
+    """encode -> unpack_coords/decode recovers the selected coordinates."""
+    row, k = row_k
+    n = row.shape[0]
+    codec = TopkUploadCodec(k=k, value_dtype=value_dtype, group=32)
+    payload = codec.encode(jnp.asarray(row))
+    k_eff, n_scales, nbytes = topk_kernels.wire_layout_topk(
+        n, k, value_dtype, 32
+    )
+    assert payload.nbytes == nbytes
+    idx, val = codec.unpack_coords(payload, n)
+    idx = np.asarray(idx)
+    val = np.asarray(val)
+    assert idx.shape == val.shape == (k_eff,)
+    # Indices are unique and in range, and they are the k largest magnitudes.
+    assert len(set(idx.tolist())) == k_eff
+    assert idx.min() >= 0 and idx.max() < n
+    order = np.argsort(-np.abs(row), kind="stable")
+    assert set(idx.tolist()) == set(order[:k_eff].tolist())
+    dense = np.asarray(codec.decode(payload, n))
+    assert dense.shape == (n,)
+    if value_dtype == "f32":
+        np.testing.assert_array_equal(val, row[idx])
+        np.testing.assert_array_equal(dense[idx], row[idx])
+    else:
+        # Blockwise int8: |dequant - x| <= scale/2 per value, scale = amax/127
+        # over the value group the coordinate landed in.
+        assert np.max(np.abs(val - row[idx])) <= np.abs(row).max() / 127.0
+    off = np.ones(n, bool)
+    off[idx] = False
+    assert not dense[off].any()
+
+
+@given(_rows(), st.sampled_from(("f32", "int8")))
+@settings(max_examples=25, deadline=None)
+def test_error_feedback_conserves_update_mass(row_k, value_dtype):
+    """densify(sent) + residual == update, coordinate-exact in f32."""
+    row, k = row_k
+    n = row.shape[0]
+    codec = TopkUploadCodec(k=k, value_dtype=value_dtype, group=32)
+    acc = jnp.asarray(row)
+    payload = codec.encode(acc)
+    idx, val = codec.unpack_coords(payload, n)
+    residual = topk_kernels.ef_residual(acc, idx, val)
+    sent = topk_kernels.densify(idx, val, n)
+    # Exact: residual is literally acc - sent at the selected coordinates
+    # (and acc elsewhere), both computed in f32 from the same wire values.
+    np.testing.assert_array_equal(
+        np.asarray(sent + residual), np.asarray(acc)
+    )
+    if value_dtype == "f32":
+        # f32 values: the carry is exactly zero where the wire sent mass.
+        assert not np.asarray(residual)[np.asarray(idx)].any()
+
+
+@given(_rows(), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_topk_selection_is_permutation_equivariant(row_k, seed):
+    """Permuting the row permutes the selected coordinate set with it."""
+    row, k = row_k
+    n = row.shape[0]
+    # Distinct magnitudes so the top-k *set* is unambiguous under ties.
+    rng = np.random.default_rng(seed)
+    mags = np.sort(rng.uniform(0.5, 100.0, size=n))[::-1]
+    mags = mags + np.arange(n)[::-1]  # strictly distinct
+    row = (np.sign(row) + (row == 0)) * mags.astype(np.float32)
+    k_eff = topk_kernels.effective_k(n, k)
+    perm = rng.permutation(n)
+    idx, _ = topk_kernels.topk_select(jnp.asarray(row), k_eff)
+    idx_p, _ = topk_kernels.topk_select(jnp.asarray(row[perm]), k_eff)
+    want = {int(perm[j]) for j in np.asarray(idx_p)}
+    assert {int(j) for j in np.asarray(idx)} == want
+
+
+@st.composite
+def _arenas(draw):
+    """A random (N, k) sparse arena + weights + mask + output width."""
+    n_rows = draw(st.integers(1, 9))
+    width = draw(st.integers(4, 600))
+    k = draw(st.integers(1, min(width, 48)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    indices = np.stack([
+        rng.choice(width, size=k, replace=False).astype(np.int32)
+        for _ in range(n_rows)
+    ])
+    values = rng.normal(size=(n_rows, k)).astype(np.float32)
+    weights = rng.uniform(0.5, 20.0, size=n_rows).astype(np.float32)
+    mask = (rng.uniform(size=n_rows) < 0.7).astype(np.float32)
+    if not mask.any():
+        mask[rng.integers(n_rows)] = 1.0
+    # Masked-out rows may carry garbage — the reduce must ignore it.
+    values[mask == 0.0] = np.nan
+    return indices, values, weights, mask, width
+
+
+@given(_arenas())
+@settings(max_examples=25, deadline=None)
+def test_scatter_accumulate_matches_f64_densify_reference(arena):
+    """Masked scatter-add == densify rows in f64, weight, and sum."""
+    indices, values, weights, mask, width = arena
+    out = np.asarray(sparse_agg.scatter_accumulate(
+        jnp.asarray(indices), jnp.asarray(values), jnp.asarray(weights),
+        jnp.asarray(mask), width,
+    ))
+    ref = np.zeros(width, np.float64)
+    for r in range(indices.shape[0]):
+        if mask[r] == 0.0:
+            continue
+        dense = np.zeros(width, np.float64)
+        np.add.at(dense, indices[r], values[r].astype(np.float64))
+        ref += float(weights[r]) * dense
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@given(_arenas())
+@settings(max_examples=25, deadline=None)
+def test_masked_fedavg_topk_matches_dense_masked_average(arena):
+    """Sparse-arena FedAvg == masked_weighted_average of densified rows."""
+    indices, values, weights, mask, width = arena
+    out = np.asarray(aggregation.masked_fedavg_topk(
+        jnp.asarray(indices), jnp.asarray(values), jnp.asarray(weights),
+        jnp.asarray(mask), width,
+    ))
+    dense = np.zeros((indices.shape[0], width), np.float32)
+    for r in range(indices.shape[0]):
+        if mask[r] == 0.0:
+            continue
+        np.add.at(dense[r], indices[r], values[r])
+    ref = np.asarray(aggregation.masked_weighted_average(
+        jnp.asarray(dense), jnp.asarray(weights), jnp.asarray(mask)
+    ))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sparse_norm_equals_dense_row_norm(k, seed):
+    """recv_upload_sparse's fused norm == L2 norm of the densified row."""
+    rng = np.random.default_rng(seed)
+    n = 128
+    row = rng.normal(size=(n,)).astype(np.float32)
+    ch = Channel(upload_codec=TopkUploadCodec(k=k))
+    env = ch.upload(jnp.asarray(row))
+    idx, val, norm = ch.recv_upload_sparse(env)
+    dense = topk_kernels.densify(idx, val, n)
+    np.testing.assert_allclose(
+        float(norm), float(jnp.linalg.norm(dense)), rtol=1e-6
+    )

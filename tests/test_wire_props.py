@@ -151,3 +151,34 @@ def test_wire_layout_no_compression_cliff_at_tile_boundaries():
         # and the layout still matches what the kernel path emits
         eff = effective_block_rows(n, group, block_rows)
         assert (n_pad // group) % eff == 0
+
+
+def test_uplink_byte_accounting_reconciles_envelope_exact():
+    """channel stats == the sum over kept envelopes, payload and metadata.
+
+    The regression this pins: ``upload_bytes`` must equal the sum of
+    ``payload.nbytes`` over every envelope the channel produced, and the
+    ``upload_meta_bytes`` ledger must equal the sum of each envelope's
+    canonical-JSON metadata block (``meta_nbytes``) — across all three
+    registry codecs, including clamped-k tiny buffers where the topk codec
+    ships fewer than ``k`` coordinates.  No hidden bytes, no double counts.
+    """
+    from repro.core.transport import TopkUploadCodec
+
+    rng = np.random.default_rng(7)
+    for codec in ("raw",
+                  Int8UploadCodec(group=64, block_rows=4),
+                  TopkUploadCodec(k=16),
+                  TopkUploadCodec(k=16, value_dtype="int8", group=32)):
+        ch = Channel(upload_codec=codec)
+        envs = []
+        for n in (3, 16, 1000, 4096):  # 3 < k: the clamped-k envelope
+            row = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+            envs.append(ch.upload(
+                row, metadata={"learner_id": f"l{n}", "round_id": n}
+            ))
+        assert ch.stats.upload_bytes == sum(e.payload.nbytes for e in envs)
+        assert ch.stats.upload_meta_bytes == sum(e.meta_nbytes for e in envs)
+        assert all(e.wire_nbytes == e.payload.nbytes + e.meta_nbytes
+                   for e in envs)
+        assert ch.stats.upload_meta_bytes > 0  # metadata is never free
